@@ -1,0 +1,318 @@
+"""Trip-count-exact roofline terms, derived analytically per (arch × shape).
+
+Why analytic: XLA's `compiled.cost_analysis()` counts `while`/`scan` bodies
+exactly once (verified in EXPERIMENTS.md §Roofline-calibration), so any
+scanned-layer model under-reports FLOPs/bytes/collectives by the trip count.
+The dry-run HLO remains the evidence for *which* collectives the partitioner
+inserted and for peak memory; the quantitative terms below are derived from
+the architecture configs and the sharding design, with the HLO per-iteration
+magnitudes as a cross-check (they match after multiplying by trip counts).
+
+Hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+
+Cost model (per chip, per step):
+  compute    = FLOPs(arch, shape) / chips / 197e12
+  memory     = HBM bytes(weights stream + activations + opt/cache) / 819e9
+  collective = wire bytes(TP all-reduces + FSDP gathers + DP grad reduce
+               [+ EP all-to-all]) / 50e9
+Ring model: all-reduce moves 2× payload, all-gather/reduce-scatter 1×.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.launch import shapes as shapes_lib
+from repro.models import registry
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+BF16 = 2
+F32 = 4
+
+
+@dataclasses.dataclass
+class Terms:
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    flops: float
+    hbm_bytes: float
+    wire_bytes: float
+    detail: dict
+
+    @property
+    def bottleneck(self) -> str:
+        d = {"compute": self.t_compute, "memory": self.t_memory,
+             "collective": self.t_collective}
+        return max(d, key=d.get)
+
+    @property
+    def bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshDims:
+    pod: int = 1
+    data: int = 16
+    model: int = 16
+
+    @property
+    def chips(self) -> int:
+        return self.pod * self.data * self.model
+
+    @property
+    def dp(self) -> int:
+        return self.pod * self.data
+
+
+@dataclasses.dataclass(frozen=True)
+class PerfKnobs:
+    """§Perf hillclimb knobs (baseline = paper-faithful defaults)."""
+    causal_block_skip: bool = False     # skip fully-masked attn blocks (≈½ flops)
+    grad_reduce: str = "all_reduce"     # all_reduce | reduce_scatter | int8_ef
+    remat: str = "auto"                 # auto | full | dots | none
+    decode_cache_axis: str = "model"    # model (split-K) | none (replicated T)
+    fsdp_bwd_regather: bool = True      # re-gather weights in bwd (vs keep)
+    tp_seq_parallel: bool = False       # RS+AG instead of AR (≈½ TP wire)
+    gather_layer_major: bool = False    # amortize FSDP gathers across
+                                        # microbatches (loop-reorder study)
+    ssm_context_parallel: bool = False  # SSM: shard sequence over the model
+                                        # axis, chunk-state handoff (no TP)
+
+
+def _attn_flops_fwd(cfg, B, S, causal_skip=False):
+    """QK^T + PV matmul flops for one full forward (all layers)."""
+    kinds = cfg.block_kinds()
+    n_attn = sum(1 for k in kinds if k == "attn")
+    if cfg.family == "ssm":
+        # WKV6: per token per head: ~4·hd² mults (outer product + read)
+        H = cfg.d_model // cfg.rwkv_head_dim
+        return 4.0 * B * S * H * cfg.rwkv_head_dim ** 2 * cfg.n_layers
+    s_eff = min(S, cfg.window) if cfg.window else S
+    frac = 0.5 if (not cfg.window or S <= cfg.window) else 1.0
+    if causal_skip is False and not cfg.window:
+        frac = 1.0  # baseline computes the full square (masked)
+    elif not cfg.window:
+        frac = 0.5
+    per_layer = 2 * 2 * B * S * s_eff * cfg.n_heads * cfg.hd * frac
+    total = n_attn * per_layer
+    if cfg.family == "hybrid":
+        # RG-LRU recurrent blocks: elementwise, ~10 flops/elem incl. gates
+        n_rec = sum(1 for k in kinds if k == "rec")
+        W = cfg.lru_width or cfg.d_model
+        total += n_rec * 10.0 * B * S * W
+    if cfg.cross_attention:
+        F = cfg.n_frontend_tokens
+        total += cfg.n_layers * 2 * 2 * B * S * F * cfg.n_heads * cfg.hd
+    return total
+
+
+def _matmul_params(cfg) -> float:
+    """Active params participating in per-token matmuls (excl. embed gather,
+    incl. unembed head)."""
+    n = cfg.n_active_params()
+    n -= cfg.vocab * cfg.d_model  # embedding gather is not a matmul
+    return float(n)
+
+
+def flops_for(cfg, shape, knobs: PerfKnobs) -> float:
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        T = B * S
+        fwd = 2 * _matmul_params(cfg) * T + _attn_flops_fwd(
+            cfg, B, S, knobs.causal_block_skip)
+        remat = knobs.remat
+        if remat == "auto":
+            remat = "full" if cfg.n_params() > 20e9 else "none"
+        # fwd + 2×fwd-equivalent bwd (+ re-fwd for full remat; dots saves
+        # the matmul outputs so only ~half the fwd is recomputed)
+        mult = {"full": 4.0, "dots": 3.5, "none": 3.0}[remat]
+        return mult * fwd
+    if shape.kind == "prefill":
+        T = B * S
+        return 2 * _matmul_params(cfg) * T + _attn_flops_fwd(
+            cfg, B, S, knobs.causal_block_skip)
+    # decode: 1 token/seq; attention reads the whole cache
+    T = B
+    flops = 2 * _matmul_params(cfg) * T
+    if cfg.family in ("dense", "moe", "vlm", "encdec"):
+        s_eff = min(S, cfg.window) if cfg.window else S
+        kinds = cfg.block_kinds()
+        n_attn = sum(1 for k in kinds if k == "attn") or cfg.n_layers
+        flops += n_attn * 2 * 2 * B * s_eff * cfg.n_heads * cfg.hd
+    elif cfg.family == "hybrid":
+        kinds = cfg.block_kinds()
+        n_attn = sum(1 for k in kinds if k == "attn")
+        s_eff = min(S, cfg.window or S)
+        flops += n_attn * 2 * 2 * B * s_eff * cfg.n_heads * cfg.hd
+        n_rec = sum(1 for k in kinds if k == "rec")
+        flops += n_rec * 10.0 * B * (cfg.lru_width or cfg.d_model)
+    else:  # ssm
+        H = cfg.d_model // cfg.rwkv_head_dim
+        flops += 4.0 * B * H * cfg.rwkv_head_dim ** 2 * cfg.n_layers
+    return flops
+
+
+def cache_bytes(cfg, shape) -> float:
+    spec = shapes_lib.cache_specs_abstract(cfg, shape.global_batch,
+                                           shape.seq_len)
+    return float(sum(np.prod(l.shape) * np.dtype(l.dtype).itemsize
+                     for l in spec.values()))
+
+
+def hbm_bytes_for(cfg, shape, mesh: MeshDims, knobs: PerfKnobs) -> float:
+    """Per-chip HBM traffic per step (coarse, documented)."""
+    B, S = shape.global_batch, shape.seq_len
+    N = cfg.n_params()
+    Na = cfg.n_active_params()
+    chips = mesh.chips
+    if shape.kind == "train":
+        nm = shapes_lib.TRAIN_MICROBATCHES.get(cfg.name, 8)
+        remat = knobs.remat
+        if remat == "auto":
+            remat = "full" if N > 20e9 else "none"
+        passes = {"full": 3.0, "dots": 2.5, "none": 2.0}[remat]
+        # gathered weights stream through each chip every microbatch pass
+        w_stream = nm * passes * Na * BF16 / mesh.model
+        # activations: ~12 R/W of (T_local, D) per layer equivalent
+        T_local = B * S / mesh.dp
+        act = 12.0 * T_local * cfg.d_model * cfg.n_layers * BF16 / mesh.model
+        if remat == "none":
+            act *= 1.5  # stored residuals read back in bwd
+        elif remat == "dots":
+            act *= 1.2
+        opt = 20.0 * N / chips * F32 / 4  # m,v,p read + write (fp32, sharded)
+        return w_stream + act + opt
+    if shape.kind == "prefill":
+        T_local = B * S / mesh.dp
+        tp = 1 if (cfg.family == "ssm" and knobs.ssm_context_parallel) \
+            else mesh.model
+        w_stream = Na * BF16 / tp
+        act = 8.0 * T_local * cfg.d_model * cfg.n_layers * BF16 / tp
+        if cfg.family == "ssm" and knobs.ssm_context_parallel:
+            act = act / mesh.model  # sequence further split over model axis
+        cache_w = cache_bytes(cfg, shape) / chips
+        return w_stream + act + cache_w
+    # decode: weights once + cache read/write
+    w = Na * BF16 / chips * mesh.dp  # weights sharded over model only
+    c = cache_bytes(cfg, shape) / chips
+    return w + 2.0 * c
+
+
+def wire_bytes_for(cfg, shape, mesh: MeshDims, knobs: PerfKnobs) -> float:
+    """Per-chip interconnect traffic per step (ring model)."""
+    B, S = shape.global_batch, shape.seq_len
+    N = cfg.n_params()
+    Na = cfg.n_active_params()
+    kinds = cfg.block_kinds()
+    n_attn = sum(1 for k in kinds if k == "attn")
+    out = 0.0
+    if shape.kind == "train":
+        nm = shapes_lib.TRAIN_MICROBATCHES.get(cfg.name, 8)
+        remat = knobs.remat
+        if remat == "auto":
+            remat = "full" if N > 20e9 else "none"
+        if cfg.family == "ssm" and knobs.ssm_context_parallel:
+            # no TP: weights replicated, sequence over the model axis; the
+            # only new collective is the per-chunk-boundary state handoff
+            H = cfg.d_model // cfg.rwkv_head_dim
+            state = B / mesh.dp * H * cfg.rwkv_head_dim ** 2 * F32
+            out += 3.0 * cfg.n_layers * state * nm  # fwd+bwd handoffs
+            out += 2.0 * N * F32 / mesh.data        # DP grad all-reduce
+            return out
+        # TP all-reduces: 2/layer fwd + 2/layer bwd (+2 if remat refwd;
+        # dots-saveable remat keeps the TP-boundary outputs → no AR redo)
+        n_ar = 4.0 + (2.0 if remat == "full" else 0.0)
+        ar_factor = 1.0 if knobs.tp_seq_parallel else 2.0
+        T_micro = B * S / mesh.dp / nm
+        out += nm * n_ar * cfg.n_layers * T_micro * cfg.d_model * BF16 * ar_factor
+        # FSDP all-gather of weights (over data axis) per microbatch
+        gathers = nm * (2.0 if knobs.fsdp_bwd_regather else 1.0)
+        if remat in ("full", "dots"):
+            gathers += nm
+        if knobs.gather_layer_major:
+            gathers = gathers / nm  # amortized: weights invariant across mb
+        out += gathers * Na * BF16 / mesh.model
+        # DP gradient reduction (over data [+pod]), grads sharded over model
+        gbytes = N * F32 / mesh.model
+        if knobs.grad_reduce == "all_reduce":
+            out += 2.0 * gbytes
+        elif knobs.grad_reduce == "reduce_scatter":
+            out += 1.0 * gbytes   # RS + AG of the shard ≈ 1× total
+        else:  # int8 error-feedback
+            out += 2.0 * gbytes / 4.0
+        if cfg.moe is not None:
+            # EP all-to-all: every token's hidden crosses to its experts
+            out += 2.0 * cfg.moe.top_k * (B * S / mesh.dp) * cfg.d_model * BF16
+        return out
+    if shape.kind == "prefill":
+        T_local = B * S / mesh.dp
+        if cfg.family == "ssm" and knobs.ssm_context_parallel:
+            H = cfg.d_model // cfg.rwkv_head_dim
+            state = B / mesh.dp * H * cfg.rwkv_head_dim ** 2 * F32
+            return cfg.n_layers * state
+        ar_factor = 1.0 if knobs.tp_seq_parallel else 2.0
+        out += 2.0 * cfg.n_layers * T_local * cfg.d_model * BF16 * ar_factor
+        out += Na * BF16 / mesh.model  # one weight gather sweep
+        if cfg.moe is not None:
+            out += 2.0 * cfg.moe.top_k * T_local * cfg.d_model * BF16
+        return out
+    # decode: TP all-reduces on (B_local, D) per layer + split-K softmax psum
+    B_local = max(B / mesh.dp, 1)
+    out += 2.0 * cfg.n_layers * B_local * cfg.d_model * BF16 * 2
+    if knobs.decode_cache_axis == "model" and cfg.family in (
+            "dense", "moe", "vlm", "encdec") and not cfg.window:
+        # partial-softmax combine: (B_local, H, hd) per layer over model axis
+        out += 2.0 * (n_attn or cfg.n_layers) * B_local * cfg.n_heads \
+            * cfg.hd * F32
+    if cfg.moe is not None:
+        out += 2.0 * cfg.moe.top_k * B_local * cfg.d_model * BF16
+    return out
+
+
+def analyze(arch: str, shape_name: str, mesh: MeshDims = MeshDims(),
+            knobs: PerfKnobs = PerfKnobs()) -> Terms:
+    cfg = registry.get_config(arch)
+    shape = shapes_lib.SHAPES[shape_name]
+    flops = flops_for(cfg, shape, knobs)
+    hbm = hbm_bytes_for(cfg, shape, mesh, knobs)
+    wire = wire_bytes_for(cfg, shape, mesh, knobs)
+    t_c = flops / mesh.chips / PEAK_FLOPS
+    t_m = hbm / HBM_BW
+    t_x = wire / ICI_BW
+    # useful model flops (what MFU counts): matmul+attn without remat refwd
+    useful = flops_for(cfg, shape, dataclasses.replace(knobs, remat="none")) \
+        if shape.kind == "train" else flops
+    detail = {"model_flops": useful,
+              "mfu_at_bound": useful / mesh.chips / PEAK_FLOPS
+              / max(t_c, t_m, t_x)}
+    return Terms(t_c, t_m, t_x, flops, hbm, wire, detail)
+
+
+def table(mesh: MeshDims = MeshDims(), knobs: PerfKnobs = PerfKnobs()):
+    rows = []
+    for arch in registry.list_archs():
+        for shape_name in shapes_lib.cases(arch):
+            t = analyze(arch, shape_name, mesh, knobs)
+            rows.append((arch, shape_name, t))
+    return rows
+
+
+def main():
+    print(f"# Analytic roofline (single pod, {MeshDims().chips} chips)")
+    print(f"{'arch':24s} {'shape':12s} {'t_comp':>10} {'t_mem':>10} "
+          f"{'t_coll':>10} {'bound':>10} {'MFU@bound':>9}")
+    for arch, shape_name, t in table():
+        print(f"{arch:24s} {shape_name:12s} {t.t_compute:>10.3e} "
+              f"{t.t_memory:>10.3e} {t.t_collective:>10.3e} "
+              f"{t.bottleneck:>10} {t.detail['mfu_at_bound']:>9.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""Shared benchmark plumbing: CSV emission, timing, run configs."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    print(f"{name},{us_per_call:.2f},{derived}", flush=True)
+
+
+def timeit(fn, repeats: int = 3, warmup: int = 1):
+    for _ in range(warmup):
+        fn()
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))

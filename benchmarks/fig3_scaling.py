@@ -1,0 +1,88 @@
+"""Paper Fig. 3 + Table 2: strong scaling of FIB and UTS under global vs
+neighbor-only stealing on an emulated uniform-low-latency mesh.
+
+SIZING NOTE (EXPERIMENTS.md §Fig3): the paper's runs give every core
+*minutes* of work (FIB n=62: ~2000 leaves × ~7 ms per core; UTS: ~1e7
+nodes per core), so the steal-diffusion transient is invisible and both
+strategies tie within ±2.2 %. At CPU scale we can afford ~10⁴ work units
+per worker, which reproduces the paper band at the matching slack
+(work/worker ≳ 10⁴ rounds → ±2 %) and *exposes the slack threshold*: as
+work/worker shrinks, conveyed subtrees stop being divisible at the idle
+frontier and neighbor-only lags — measurable here, invisible at HPC scale.
+Both regimes are reported; the slack column makes the comparison honest.
+
+"Execution time" is steal rounds (one round = one leaf work unit; spawns
+are ~free, steal RTT ⋘ unit — see SchedulerConfig). Averages over `--runs`
+seeds.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from repro.core import scheduler, stealing, tasks, topology
+from .common import emit
+
+# Calibrated workloads: deep spines (divisible subtrees), leaf-dominated.
+FIB_QUICK = tasks.FibWorkload(n=44, cutoff=24, max_leaf_cost=32)
+UTS_QUICK = tasks.UtsWorkload(b0=4.0, d_max=16, root_seed=19)  # paper params
+EXPANSIONS = {"FIB": 8, "UTS": 2}  # UTS node visits are the work itself
+
+QUICK_WORKERS = (25, 49, 100)
+FULL_WORKERS = (25, 49, 100, 160, 320, 640)
+
+
+def run_once(workload, workers: int, strategy, seed: int, expansions: int,
+             capacity: int = 4096):
+    mesh = topology.MeshTopology.square(workers)
+    cfg = scheduler.SchedulerConfig(strategy=strategy, capacity=capacity,
+                                    max_rounds=2_000_000, seed=seed,
+                                    expansions_per_round=expansions)
+    r = scheduler.run_vectorized(workload, mesh, cfg)
+    assert r.overflow == 0
+    return r
+
+
+def run(worker_counts=QUICK_WORKERS, runs: int = 3, small: bool = True):
+    results = {}
+    for wl_name, wl in (("FIB", FIB_QUICK), ("UTS", UTS_QUICK)):
+        for workers in worker_counts:
+            per = {}
+            for strat in (stealing.Strategy.GLOBAL, stealing.Strategy.NEIGHBOR):
+                rounds, ps = [], []
+                for seed in range(runs):
+                    r = run_once(wl, workers, strat, seed,
+                                 EXPANSIONS[wl_name])
+                    if wl_name == "FIB":
+                        assert r.result == wl.expected_result()
+                    rounds.append(r.rounds)
+                    ps.append(r.p_success)
+                per[strat.value] = (float(np.mean(rounds)), float(np.mean(ps)))
+            tg, pg = per["global"]
+            tn, pn = per["neighbor"]
+            rel = (tn - tg) / tg
+            results[(wl_name, workers)] = dict(
+                global_rounds=tg, neighbor_rounds=tn, rel=rel,
+                p_global=pg, p_neighbor=pn, slack=tg)
+            emit(f"fig3/{wl_name}/W={workers}", 0.0,
+                 f"global={tg:.0f};neighbor={tn:.0f};rel={rel*100:+.2f}%;"
+                 f"Pg={pg:.3f};Pn={pn:.3f};slack_rounds={tg:.0f}")
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--runs", type=int, default=3)
+    ap.add_argument("--workers", type=int, nargs="+", default=None)
+    ap.add_argument("--small", action="store_true")
+    args = ap.parse_args()
+    workers = tuple(args.workers) if args.workers else \
+        (QUICK_WORKERS if args.small else FULL_WORKERS)
+    print("# Fig 3 / Table 2 — strong scaling, uniform low latency")
+    run(workers, args.runs, args.small)
+
+
+if __name__ == "__main__":
+    main()

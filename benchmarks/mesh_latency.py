@@ -1,0 +1,74 @@
+"""Beyond-paper: the high-latency-mesh evaluation the paper defers to future
+work (§6) — neighbor-only vs global stealing in the tick simulator with real
+per-hop ISL latency.
+
+For each constellation size N and hop latency τ (in work-unit ticks), runs
+FIB + UTS and reports makespan ticks, per-attempt wait, P_success ratio
+against the Ineq. 2 threshold, and bytes×hops congestion. Also sweeps the
+beyond-paper ADAPTIVE strategy (radius escalation — §6's other suggestion).
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from repro.core import latency, simulator, stealing, tasks, topology
+from .common import emit
+
+STRATS = {
+    "neighbor": stealing.Strategy.NEIGHBOR,
+    "global": stealing.Strategy.GLOBAL,
+    "adaptive": stealing.Strategy.ADAPTIVE,
+}
+
+
+def run(sizes=(25, 64, 100, 196), hop_ticks=(2, 5, 10), small: bool = False,
+        strategies=("neighbor", "global", "adaptive")):
+    fib = tasks.FibWorkload(n=30 if not small else 26, cutoff=12,
+                            max_leaf_cost=16)
+    uts = tasks.UtsWorkload(b0=3.5 if not small else 3.0,
+                            d_max=10 if not small else 8, root_seed=19)
+    results = {}
+    for wl_name, wl in (("FIB", fib), ("UTS", uts)):
+        for n in sizes:
+            mesh = topology.MeshTopology.square(n)
+            for tau in hop_ticks:
+                per = {}
+                for sname in strategies:
+                    cfg = simulator.SimConfig(
+                        strategy=STRATS[sname], hop_ticks=tau, capacity=2048,
+                        max_ticks=5_000_000)
+                    r = simulator.simulate(wl, mesh, cfg)
+                    assert r.overflow == 0
+                    per[sname] = r
+                rn, rg = per["neighbor"], per["global"]
+                ratio = (rg.p_success / max(rn.p_success, 1e-9))
+                th = float(latency.threshold(n))
+                speedup = rg.ticks / rn.ticks
+                results[(wl_name, n, tau)] = per
+                extra = ""
+                if "adaptive" in per:
+                    extra = f";adaptive={per['adaptive'].ticks}"
+                emit(f"mesh_latency/{wl_name}/N={n}/tau={tau}", 0.0,
+                     f"neighbor={rn.ticks};global={rg.ticks};"
+                     f"speedup={speedup:.2f}x;Pg/Pn={ratio:.2f};"
+                     f"threshold={th:.1f};"
+                     f"byteshops_ratio={rg.bytes_hops/max(rn.bytes_hops,1):.2f}"
+                     f"{extra}")
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--small", action="store_true")
+    ap.add_argument("--sizes", type=int, nargs="+", default=[25, 64, 100, 196])
+    ap.add_argument("--taus", type=int, nargs="+", default=[2, 5, 10])
+    args = ap.parse_args()
+    print("# mesh-latency study (paper future work §6)")
+    run(tuple(args.sizes), tuple(args.taus), args.small)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,162 @@
+"""§Perf hillclimb driver: the hypothesis → change → re-analyse log for the
+three selected cells, computed from the analytic roofline (trip-count-exact)
+with HLO schedule evidence from the dry-run variants.
+
+Cells (selection rationale in EXPERIMENTS.md §Perf):
+  A. mistral-large-123b × train_4k   — largest absolute bound; representative
+                                        FSDP+TP training.
+  B. rwkv6-1.6b × prefill_32k        — worst MFU@bound; collective-bound on
+                                        an architecture TP fits badly.
+  C. qwen2-moe-a2.7b × train_4k      — the paper's technique lives in its
+                                        dispatch path (neighbor-steal MoE).
+
+Each iteration prints: terms before → after, the bound, MFU@bound, and
+whether the hypothesis was confirmed. Stop rule: 3 consecutive <5% changes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from .analytic_roofline import MeshDims, PerfKnobs, analyze
+from .common import emit
+
+MESH = MeshDims()
+
+
+def _fmt(t):
+    return (f"tc={t.t_compute:.3f}s tm={t.t_memory:.3f}s "
+            f"tx={t.t_collective:.3f}s bound={t.bound:.3f}s "
+            f"({t.bottleneck}) MFU@bound={t.detail['mfu_at_bound']:.3f}")
+
+
+def climb(arch: str, shape: str, steps):
+    knobs = PerfKnobs()
+    t = analyze(arch, shape, MESH, knobs)
+    print(f"\n## {arch} × {shape}")
+    print(f"  baseline (paper-faithful): {_fmt(t)}")
+    emit(f"perf/{arch}/{shape}/baseline", t.bound * 1e6,
+         f"MFU={t.detail['mfu_at_bound']:.3f};dom={t.bottleneck}")
+    prev = t
+    for name, hypothesis, change, implemented in steps:
+        if change is None:  # refuted without knob change
+            print(f"  [{name}] {hypothesis}\n      -> REFUTED: {implemented}")
+            emit(f"perf/{arch}/{shape}/{name}", prev.bound * 1e6, "refuted")
+            continue
+        knobs = dataclasses.replace(knobs, **change)
+        t = analyze(arch, shape, MESH, knobs)
+        delta = (prev.bound - t.bound) / prev.bound
+        verdict = "CONFIRMED" if delta > 0.02 else (
+            "NEGLIGIBLE" if abs(delta) <= 0.02 else "REGRESSION")
+        print(f"  [{name}] {hypothesis}")
+        print(f"      change={change} [{implemented}]")
+        print(f"      -> {_fmt(t)}  Δbound={delta*100:+.1f}%  {verdict}")
+        emit(f"perf/{arch}/{shape}/{name}", t.bound * 1e6,
+             f"MFU={t.detail['mfu_at_bound']:.3f};delta={delta*100:+.1f}%;"
+             f"{verdict}")
+        prev = t
+    return prev
+
+
+def run():
+    # ------------------------------------------------------------------ A
+    climb("mistral-large-123b", "train_4k", [
+        ("I1-seqpar",
+         "TP all-reduce on (T,D) twice/layer dominates wire bytes; "
+         "sequence-parallel residual (RS+AG) should halve the TP term",
+         dict(tp_seq_parallel=True),
+         "implemented: ModelConfig.seq_shard_axis + sharding constraint; "
+         "HLO diff: per-iter all-reduce bytes 1.12e10->6.93e9"),
+        ("I2-causal-skip",
+         "baseline computes the full S^2 attention square; skipping "
+         "fully-masked (q,k) blocks halves the attention flops",
+         dict(causal_block_skip=True),
+         "implemented: mha(skip_masked_blocks=True), numerics-identical "
+         "(tests/test_models.py::test_chunked_attention_matches_dense)"),
+        ("I3-remat-dots",
+         "full remat re-runs the whole fwd (+33% flops) AND redoes both "
+         "TP collectives; dots-saveable policy keeps TP-boundary outputs",
+         dict(remat="dots"),
+         "implemented: --variant opt lowers with remat=dots; compile OK"),
+        ("I4-remat-none",
+         "dropping remat entirely would cut flops mult 3.5->3.0",
+         None,
+         "per-device activation residency at nm=16 would be "
+         "~26 GB >> 16 GB HBM (analytic) — infeasible at 123B; keep dots"),
+        ("I5-grad-int8",
+         "int8 error-feedback compression of the DP grad reduce cuts its "
+         "wire bytes 4x",
+         dict(grad_reduce="int8_ef"),
+         "implemented: optim/grad_compress (tested); under FSDP+TP the DP "
+         "grad term is already small -> expected negligible"),
+        ("I6-gather-layer-major",
+         "weights are microbatch-invariant: reordering loops layer-major "
+         "amortizes FSDP gathers across the nm=16 microbatches",
+         dict(gather_layer_major=True),
+         "analytic projection — loop reorder interacts with bwd ordering; "
+         "design documented, not implemented in code"),
+    ])
+
+    # ------------------------------------------------------------------ B
+    climb("rwkv6-1.6b", "prefill_32k", [
+        ("I1-seqpar",
+         "same TP-AR dominance as dense cells; seq-parallel halves it",
+         None,
+         "REFUTED BY MEASUREMENT: re-lowered HLO shows per-iter all-reduce "
+         "only 4.73e10->4.46e10 (-6%) — GSPMD cannot propagate the "
+         "seq-sharding through the WKV recurrence's vmap/scan structure, "
+         "unlike the dense stack where the same constraint converted ARs"),
+        ("I2-context-parallel",
+         "TP fits RWKV badly (d=2048 matmuls too small to amortize AR); "
+         "the WKV state update is a LINEAR recurrence, so chunk states "
+         "compose associatively -> shard the sequence over the model axis "
+         "and hand off (B,H,64,64) chunk states instead of (T,D) activations",
+         dict(ssm_context_parallel=True),
+         "implemented: models/rwkv6.wkv_chunked (3-pass chunk-parallel "
+         "form, exact vs wkv_scan in tests); cross-chunk comm = one "
+         "(B,H,64,64) state per boundary"),
+    ])
+
+    # ------------------------------------------------------------------ C
+    climb("qwen2-moe-a2.7b", "train_4k", [
+        ("I1-seqpar",
+         "TP AR dominates as in cell A; seq-parallel residual should halve it",
+         None,
+         "REFUTED BY MEASUREMENT: re-lowered HLO total collective bytes "
+         "REGRESSED 2.63e10->3.36e10 (+28%) — the global top-k dispatch "
+         "argsort all-gathers the seq-sharded activations. A local-dispatch "
+         "MoE (per-shard capacity) is prerequisite; reverted for MoE archs "
+         "(launch/dryrun.apply_variant)"),
+        ("I1b-seqpar-attnonly",
+         "apply seq-parallel to the attention sublayer only (MoE dispatch "
+         "keeps replicated-seq activations)",
+         dict(tp_seq_parallel=True),
+         "analytic projection for the attention share of TP traffic; "
+         "dispatch unchanged"),
+        ("I2-causal-skip",
+         "half the attention square",
+         dict(causal_block_skip=True),
+         "implemented (shared path)"),
+        ("I3-neighbor-steal-capacity",
+         "the paper's neighbor-steal overflow lets capacity_factor drop "
+         "1.25 -> 1.0 at equal token-drop rate (benchmarks/moe_overflow: "
+         "steal saves ~14pp of drops), cutting expert-dispatch flops ~20%",
+         None,
+         "quality-neutral capacity reduction validated by the drop-rate "
+         "benchmark; flops effect on expert GEMMs ~-20% of the MoE term "
+         "(second-order on the bound; recorded as a model-quality lever)"),
+        ("I4-grad-int8",
+         "MoE has 5.3x more params than active -> DP grad reduce is "
+         "relatively larger here; int8 EF compression cuts it 4x",
+         dict(grad_reduce="int8_ef"),
+         "implemented: optim/grad_compress"),
+    ])
+
+
+def main():
+    print("# §Perf hillclimb (analytic terms; HLO evidence in results/dryrun)")
+    run()
+
+
+if __name__ == "__main__":
+    main()

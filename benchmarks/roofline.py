@@ -1,0 +1,92 @@
+"""§Roofline: aggregate the dry-run artifacts into the per-(arch × shape)
+three-term roofline table (single-pod mesh).
+
+Terms (per chip, TPU v5e):
+    t_compute    = HLO_FLOPs / 197 TFLOP/s
+    t_memory     = HLO_bytes / 819 GB/s
+    t_collective = collective_bytes / 50 GB/s-link
+
+Also reports MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE) and the
+useful-compute ratio MODEL_FLOPS / (HLO_FLOPs × chips) — remat/dispatch
+overhead shows up here. cost_analysis() on the partitioned module reports
+per-device numbers; the ratio column is the calibration check.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from .common import emit
+
+CHIPS_SINGLE = 256
+
+
+def model_flops(rec: dict) -> float:
+    """6·N·D token FLOPs for the cell's workload."""
+    n = rec.get("n_active") or rec.get("n_params") or 0
+    if rec["kind"] == "train":
+        tokens = rec["batch"] * rec["seq"]
+        return 6.0 * n * tokens
+    if rec["kind"] == "prefill":
+        tokens = rec["batch"] * rec["seq"]
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * rec["batch"]
+
+
+def load(results_dir: str, mesh: str = "single") -> list:
+    out = []
+    for f in sorted(glob.glob(os.path.join(results_dir, f"*__{mesh}.json"))):
+        rec = json.load(open(f))
+        if not rec.get("ok"):
+            continue
+        mf = model_flops(rec)
+        hlo_total = rec["hlo_flops"] * rec.get("chips", CHIPS_SINGLE)
+        rec["model_flops"] = mf
+        rec["useful_ratio"] = mf / hlo_total if hlo_total else 0.0
+        terms = {"compute": rec["t_compute"], "memory": rec["t_memory"],
+                 "collective": rec["t_collective"]}
+        dom = max(terms, key=terms.get)
+        t_roof = max(terms.values())
+        t_sum = sum(terms.values())
+        rec["bottleneck"] = dom
+        # roofline fraction: useful compute time / bound time (overlap model:
+        # the bound is the max term; perfectly-overlapped ideal)
+        t_useful = mf / rec.get("chips", CHIPS_SINGLE) / 197e12
+        rec["roofline_frac"] = t_useful / t_roof if t_roof else 0.0
+        rec["t_sum"] = t_sum
+        out.append(rec)
+    return out
+
+
+def run(results_dir: str = "results/dryrun", csv: bool = True):
+    rows = load(results_dir)
+    for r in rows:
+        if csv:
+            emit(f"roofline/{r['arch']}/{r['shape']}", 0.0,
+                 f"tc={r['t_compute']:.3e};tm={r['t_memory']:.3e};"
+                 f"tcoll={r['t_collective']:.3e};dom={r['bottleneck']};"
+                 f"frac={r['roofline_frac']:.3f};useful={r['useful_ratio']:.2f}")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    args = ap.parse_args()
+    rows = run(args.dir, csv=False)
+    print(f"# Roofline (single-pod, {CHIPS_SINGLE} chips) — seconds per step")
+    print(f"{'arch':24s} {'shape':12s} {'t_comp':>10} {'t_mem':>10} "
+          f"{'t_coll':>10} {'bound':>10} {'frac':>6} {'useful':>7}")
+    for r in sorted(rows, key=lambda x: (x['arch'], x['shape'])):
+        print(f"{r['arch']:24s} {r['shape']:12s} {r['t_compute']:>10.3e} "
+              f"{r['t_memory']:>10.3e} {r['t_collective']:>10.3e} "
+              f"{r['bottleneck']:>10} {r['roofline_frac']:>6.3f} "
+              f"{r['useful_ratio']:>7.2f}")
+
+
+if __name__ == "__main__":
+    main()

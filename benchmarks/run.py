@@ -1,0 +1,65 @@
+"""Benchmark harness entrypoint: one function per paper table/figure
+(+ beyond-paper studies). Prints ``name,us_per_call,derived`` CSV.
+
+  PYTHONPATH=src python -m benchmarks.run            # quick suite
+  PYTHONPATH=src python -m benchmarks.run --full     # paper-scale params
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale workloads (minutes-hours)")
+    ap.add_argument("--only", default="",
+                    help="comma list: table1,fig3,fig4,mesh,moe,roofline")
+    args = ap.parse_args()
+    small = not args.full
+    only = set(args.only.split(",")) if args.only else None
+
+    def want(name):
+        return only is None or name in only
+
+    t0 = time.time()
+    print("name,us_per_call,derived")
+
+    if want("table1"):
+        from . import table1_latency
+        table1_latency.run()
+
+    if want("fig3") or want("fig4"):
+        from . import fig4_relative
+        band = fig4_relative.run(runs=2 if small else 5, small=small)
+        print(f"# fig3/fig4 done: max |rel| band {band:.2f}%", file=sys.stderr)
+
+    if want("mesh"):
+        from . import mesh_latency
+        sizes = (25, 64, 100, 196) if not small else (25, 64)
+        mesh_latency.run(sizes=sizes, hop_ticks=(2, 5) if small else (2, 5, 10),
+                         small=small,
+                         strategies=("neighbor", "global") if small
+                         else ("neighbor", "global", "adaptive"))
+
+    if want("moe"):
+        from . import moe_overflow
+        moe_overflow.run()
+
+    if want("roofline"):
+        import os
+        from . import roofline
+        if os.path.isdir("results/dryrun"):
+            roofline.run()
+        else:
+            print("# roofline: results/dryrun missing - run "
+                  "`python -m repro.launch.dryrun` first", file=sys.stderr)
+
+    print(f"# total {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

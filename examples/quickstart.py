@@ -1,0 +1,53 @@
+"""Quickstart: neighbor-only vs global work stealing on a 2D mesh.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Runs the paper's two benchmarks (FIB, UTS) on an 8×8 worker mesh under both
+victim-selection strategies, first on the uniform-latency executor (the
+paper's §4 setting), then on the high-latency mesh simulator (τ = 5 ticks,
+the paper's §3.3 setting), and prints the analytical Table 1.
+"""
+
+import sys
+sys.path.insert(0, "src")
+
+from repro.core import latency, scheduler, simulator, stealing, tasks, topology
+
+MESH = topology.MeshTopology.square(64)
+FIB = tasks.FibWorkload(n=28, cutoff=12, max_leaf_cost=16)
+UTS = tasks.UtsWorkload(b0=3.0, d_max=9, root_seed=19)
+
+
+def main():
+    print("=== Table 1 (analytical, tau=5ms) ===")
+    for row in latency.table1():
+        print(f"  N={row.nodes:5d}  threshold={row.threshold:5.1f}  "
+              f"RT_neighbor={row.neighbor_rt_ms:4.0f}ms  "
+              f"RT_global={row.global_rt_ms:4.0f}ms")
+
+    print("\n=== Uniform low latency (paper §4: strategies equivalent) ===")
+    for name, wl in (("FIB", FIB), ("UTS", UTS)):
+        for strat in (stealing.Strategy.GLOBAL, stealing.Strategy.NEIGHBOR):
+            cfg = scheduler.SchedulerConfig(strategy=strat, capacity=512,
+                                            max_rounds=500_000)
+            r = scheduler.run_vectorized(wl, MESH, cfg)
+            print(f"  {name} {strat.value:9s} rounds={r.rounds:6d} "
+                  f"P_success={r.p_success:.3f} result={r.result}")
+
+    print("\n=== High-latency mesh, tau=5 ticks (paper §3.3: neighbor wins) ===")
+    for name, wl in (("FIB", FIB), ("UTS", UTS)):
+        ticks = {}
+        for strat in (stealing.Strategy.GLOBAL, stealing.Strategy.NEIGHBOR):
+            cfg = simulator.SimConfig(strategy=strat, hop_ticks=5,
+                                      capacity=512, max_ticks=5_000_000)
+            r = simulator.simulate(wl, MESH, cfg)
+            ticks[strat.value] = r.ticks
+            print(f"  {name} {strat.value:9s} makespan={r.ticks:7d} ticks  "
+                  f"utilization={r.utilization:.2f} "
+                  f"bytes*hops={r.bytes_hops:.2e}")
+        print(f"  -> neighbor speedup: "
+              f"{ticks['global'] / ticks['neighbor']:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Serving example: batched prefill+decode with a real model, plus the
+shard-level occupancy study of neighbor-steal request rebalancing.
+
+    PYTHONPATH=src python examples/serve_lm.py --arch qwen2-0.5b
+"""
+
+import argparse
+import sys
+import time
+sys.path.insert(0, "src")
+
+import jax
+import numpy as np
+
+from repro.models import registry
+from repro.runtime import serve_loop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b",
+                    choices=registry.list_archs())
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--prompt-len", type=int, default=12)
+    ap.add_argument("--max-new", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = registry.reduced(registry.get_config(args.arch))
+    fns = registry.get_fns(cfg)
+    params = fns.init(jax.random.PRNGKey(0), cfg)
+
+    sc = serve_loop.ServeConfig(max_new_tokens=args.max_new,
+                                prompt_len=args.prompt_len,
+                                cache_len=args.prompt_len + args.max_new + 8)
+    prompts = np.asarray(jax.random.randint(
+        jax.random.PRNGKey(1), (args.requests, args.prompt_len), 0, cfg.vocab))
+    t0 = time.time()
+    outs, info = serve_loop.serve_requests(cfg, params, sc, prompts, fns)
+    dt = time.time() - t0
+    print(f"[serve_lm] {args.arch} (reduced): decoded {info['decoded']} "
+          f"tokens in {dt:.1f}s ({info['decoded']/dt:.1f} tok/s)")
+    for i in range(min(3, args.requests)):
+        print(f"  request {i}: {np.asarray(outs[i])[:10]}...")
+
+    # occupancy study: 8 shards, 4 active slots + backlog, heavy-tailed work
+    rng = np.random.default_rng(0)
+    lens = np.minimum((rng.pareto(1.2, (8, 16)) * 15 + 3), 60).astype(np.int32)
+    for rebalance in (False, True):
+        scfg = serve_loop.ServeConfig(batch_slots=4, rebalance=rebalance,
+                                      rebalance_every=2)
+        st = serve_loop.simulate_serving(cfg, scfg, lens)
+        print(f"[serve_lm] rebalance={rebalance}: occupancy={st.occupancy:.3f} "
+              f"steps={st.steps} moved={st.moved} completed={st.completed}")
+
+
+if __name__ == "__main__":
+    main()

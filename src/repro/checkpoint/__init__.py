@@ -1,0 +1,5 @@
+from . import checkpointer, task_checkpoint
+from .checkpointer import Checkpointer
+from .task_checkpoint import TaskCheckpointer
+
+__all__ = ["checkpointer", "task_checkpoint", "Checkpointer", "TaskCheckpointer"]

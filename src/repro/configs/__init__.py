@@ -1,0 +1,2 @@
+# One module per assigned architecture (+ the paper's own mesh setup).
+# Each exposes CONFIG; resolve by id via repro.models.registry.

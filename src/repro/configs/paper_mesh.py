@@ -1,0 +1,33 @@
+"""The paper's own experimental configuration (§4.1) — not an LM config.
+
+Goethe-NHR: 40 cores/node, 1–16 nodes → 40–640 workers on a ⌈√C⌉-wide grid;
+FIB n=62 cutoff 32; UTS geometric b0=4, d=16, r=19; τ=5 ms for the model.
+CPU-scale defaults shrink the trees but keep the structure; the paper-parity
+parameters are kept alongside for reference.
+"""
+import dataclasses
+
+from repro.core import tasks
+
+
+@dataclasses.dataclass(frozen=True)
+class PaperMeshConfig:
+    node_cores: int = 40
+    node_counts: tuple = (1, 2, 4, 8, 16)
+    tau_s: float = 5e-3
+    # paper-parity workloads (HPC scale — hours on CPU):
+    fib_paper: tasks.FibWorkload = tasks.FibWorkload(n=62, cutoff=32)
+    uts_paper_b0: float = 4.0
+    uts_paper_depth: int = 16
+    uts_paper_seed: int = 19
+    # CPU-scale equivalents used by benchmarks. Sized so the steady phase
+    # dominates at 640 workers (~2.9M / 251k work units -- the paper's HPC
+    # runs are likewise steady-phase-dominated; undersized trees measure
+    # only the initial phase, where neighbor diffusion is *expected* to
+    # lag -- see EXPERIMENTS.md, Fig3 sizing note). UTS keeps the paper's
+    # exact parameters (b0=4, d=16, r=19) under the linear-decay shape.
+    fib: tasks.FibWorkload = tasks.FibWorkload(n=44, cutoff=24, max_leaf_cost=192)
+    uts: tasks.UtsWorkload = tasks.UtsWorkload(b0=4.0, d_max=16, root_seed=19)
+
+
+CONFIG = PaperMeshConfig()

@@ -1,0 +1,18 @@
+# The paper's primary contribution: neighbor-only work stealing for 2D-mesh
+# topologies (LEO constellations / TPU ICI), as composable JAX modules.
+#
+#   topology      — mesh/torus coordinates, neighbor tables, hop distances
+#   deque         — vectorized fixed-capacity work-stealing deques
+#   tasks         — FIB / UTS task trees (paper §4.1 benchmarks)
+#   stealing      — victim selection (global / neighbor / lifeline / adaptive)
+#   scheduler     — bulk-synchronous executors (vectorized + shard_map)
+#   latency       — analytical model of §3.3 (Eq. 1, Ineq. 2, Table 1)
+#   simulator     — tick-level high-latency mesh simulation + fault tolerance
+#   constellation — LEO orbital model (planes, ISL variation, eclipses)
+#   balancer      — neighbor-only rebalancing of serving/training work items
+
+from . import (balancer, constellation, deque, latency, scheduler, simulator,
+               stealing, tasks, topology)
+
+__all__ = ["balancer", "constellation", "deque", "latency", "scheduler",
+           "simulator", "stealing", "tasks", "topology"]

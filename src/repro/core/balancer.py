@@ -1,0 +1,236 @@
+"""Neighbor-only steal-rebalancing of production work items across mesh axes.
+
+This is the paper's technique integrated into the *training/serving path* of
+the framework (DESIGN.md §2). Three concrete imbalance sources:
+
+  1. **Serving**: decode batches across data-parallel shards drain unevenly
+     (requests finish at different steps). Under-occupied shards steal
+     request *slots* (token state + KV-page handles) from a mesh neighbor.
+  2. **Training**: packed variable-length documents give shards unequal
+     token counts; shards steal sequences to equalize work before a step.
+  3. **MoE dispatch**: tokens overflowing an expert's capacity are offered
+     to the *neighboring* expert shard (single `ppermute` hop) instead of
+     being dropped — see `repro.models.moe`.
+
+The primitive here is `steal_shift`: one bulk-synchronous neighbor-only
+steal round along a mesh axis, expressed entirely with
+`jax.lax.ppermute` (single-hop, constant payload — the 2τ side of the
+paper's model). `rebalance` iterates it; `global_rebalance` is the
+all-gather-based baseline (the (4/3)√N·τ side) for A/B comparison in
+benchmarks and in the dry-run's collective-bytes table.
+
+All functions run under `shard_map` with one shard per device along
+`axis_name`, or vectorized (axis_name=None) for tests. Work items are
+fixed-size records `(slots, item_width)` with a validity mask; transfers
+preserve the multiset of valid items exactly (property-tested).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class ShardQueue(NamedTuple):
+    """A shard's pool of work items (requests / sequences)."""
+    items: jax.Array   # (slots, item_w) payload records
+    valid: jax.Array   # (slots,) bool
+    cost: jax.Array    # (slots,) int32 work estimate per item (e.g. tokens)
+
+
+def make_queue(items, valid, cost) -> ShardQueue:
+    return ShardQueue(jnp.asarray(items), jnp.asarray(valid), jnp.asarray(cost))
+
+
+def load_of(q: ShardQueue) -> jax.Array:
+    return jnp.sum(jnp.where(q.valid, q.cost, 0))
+
+
+def _compact_indices(valid: jax.Array) -> jax.Array:
+    """Stable order: valid slots first (by index), then invalid."""
+    order = jnp.argsort(jnp.where(valid, 0, 1), stable=True)
+    return order
+
+
+def select_donations(q: ShardQueue, want_cost: jax.Array, max_items: int,
+                     max_count: jax.Array | int | None = None):
+    """Pick up to `max_items` items, cheapest-first, whose cumulative cost
+    does not exceed `want_cost`. Returns (records, valid, cost, taken_mask).
+
+    Cheapest-first matters: a single over-budget item must only block
+    itself, not every item behind it (items are atomic — the work-stealing
+    analogue of a task being indivisible). Never donates the last item (a
+    shard keeps one to stay warm). `max_count` additionally bounds the
+    number of donated items (the requester's free-slot budget)."""
+    # order: valid items by ascending cost, then invalid slots
+    key = jnp.where(q.valid, q.cost, jnp.iinfo(jnp.int32).max)
+    order = jnp.argsort(key, stable=True)
+    sorted_valid = q.valid[order]
+    sorted_cost = jnp.where(sorted_valid, q.cost[order], 0)
+    n_valid = jnp.sum(q.valid.astype(jnp.int32))
+    csum = jnp.cumsum(sorted_cost)
+    idx = jnp.arange(q.valid.shape[0])
+    limit = max_items if max_count is None else jnp.minimum(max_items,
+                                                            max_count)
+    donate_sorted = (
+        sorted_valid
+        & (csum <= want_cost)
+        & (idx < limit)
+        & (idx < n_valid - 1)  # keep one
+    )
+    # scatter back to original slot order
+    taken = jnp.zeros_like(q.valid).at[order].set(donate_sorted)
+    recs = q.items[order][:max_items]
+    rcost = jnp.where(donate_sorted, sorted_cost, 0)[:max_items]
+    rvalid = donate_sorted[:max_items]
+    return recs, rvalid, rcost, taken
+
+
+def insert_items(q: ShardQueue, recs, rvalid, rcost) -> tuple[ShardQueue, jax.Array]:
+    """Insert incoming records into free slots. Returns (queue, dropped)."""
+    k = rvalid.shape[0]
+    free_order = jnp.argsort(jnp.where(q.valid, 1, 0), stable=True)  # free first
+    n_free = jnp.sum(~q.valid)
+    items, valid, cost = q.items, q.valid, q.cost
+    # place incoming item j into free_order[j] when j < n_free
+    j = jnp.arange(k)
+    dst = free_order[jnp.clip(j, 0, q.valid.shape[0] - 1)]
+    ok = rvalid & (j < n_free)
+    items = items.at[dst].set(jnp.where(ok[:, None], recs, items[dst]))
+    valid = valid.at[dst].set(jnp.where(ok, True, valid[dst]))
+    cost = cost.at[dst].set(jnp.where(ok, rcost, cost[dst]))
+    dropped = jnp.sum(rvalid & ~ok)
+    return ShardQueue(items, valid, cost), dropped
+
+
+def steal_shift(q: ShardQueue, axis_name: str, shift: int, max_items: int,
+                trigger: float = 0.25) -> tuple[ShardQueue, dict]:
+    """One neighbor-only steal round along `axis_name` (direction `shift`).
+
+    Each shard advertises its load to the +shift neighbor; a shard whose
+    load is below `trigger`× the neighbor's load requests the surplus
+    half-difference; the neighbor donates items covering that cost. Two
+    `ppermute`s (request, donation) — single-hop, fixed payload.
+    """
+    n = jax.lax.axis_size(axis_name)
+    fwd = [(i, (i + shift) % n) for i in range(n)]
+    bwd = [((i + shift) % n, i) for i in range(n)]
+
+    my_load = load_of(q)
+    my_free = jnp.sum(~q.valid).astype(jnp.int32)
+    nbr_load = jax.lax.ppermute(my_load, axis_name, fwd)   # load of my -shift nbr
+    # I request from my -shift neighbor when I'm far below it — bounded by
+    # my free slots (a full queue must not request; arrivals would drop).
+    deficit = jnp.maximum((nbr_load - my_load) // 2, 0)
+    want = jnp.where((my_load < trigger * nbr_load) & (my_free > 0), deficit, 0)
+    # tell the neighbor (travel +shift: back to the load's owner)
+    want_from_me = jax.lax.ppermute(want, axis_name, bwd)
+    free_of_requester = jax.lax.ppermute(my_free, axis_name, bwd)
+
+    recs, rvalid, rcost, taken = select_donations(
+        q, want_from_me, max_items, max_count=free_of_requester)
+    q = ShardQueue(q.items, q.valid & ~taken, q.cost)
+    # donation travels +shift→ the requester sits at -shift of the donor
+    recs_in = jax.lax.ppermute(recs, axis_name, fwd)
+    rvalid_in = jax.lax.ppermute(rvalid, axis_name, fwd)
+    rcost_in = jax.lax.ppermute(rcost, axis_name, fwd)
+    q, dropped = insert_items(q, recs_in, rvalid_in, rcost_in)
+    moved = jnp.sum(rvalid_in.astype(jnp.int32))
+    return q, {"moved": moved, "dropped": dropped, "load": load_of(q)}
+
+
+def rebalance(q: ShardQueue, axis_name: str, rounds: int = 2,
+              max_items: int = 8, trigger: float = 0.5) -> tuple[ShardQueue, dict]:
+    """Iterated neighbor-only rebalancing: alternate ±1 shifts along the axis.
+
+    `rounds` sweeps of two shifts each diffuse load like the paper's initial
+    phase (work spreads one hop per round); on an already-steady system one
+    round is enough to absorb per-step drain imbalance.
+    """
+    stats = {"moved": jnp.int32(0), "dropped": jnp.int32(0)}
+    for _ in range(rounds):
+        for shift in (1, -1):
+            q, s = steal_shift(q, axis_name, shift, max_items, trigger)
+            stats = {"moved": stats["moved"] + s["moved"],
+                     "dropped": stats["dropped"] + s["dropped"]}
+    stats["load"] = load_of(q)
+    return q, stats
+
+
+def global_rebalance(q: ShardQueue, axis_name: str, max_items: int = 8
+                     ) -> tuple[ShardQueue, dict]:
+    """All-gather baseline: every shard sees every load, the most-loaded
+    donates to the least-loaded via a full exchange. One round costs
+    O(shards × payload) bytes on the interconnect — the global-stealing
+    analogue for A/B tests and the dry-run collective-bytes comparison."""
+    n = jax.lax.axis_size(axis_name)
+    idx = jax.lax.axis_index(axis_name)
+    loads = jax.lax.all_gather(load_of(q), axis_name)          # (n,)
+    rich = jnp.argmax(loads)
+    poor = jnp.argmin(loads)
+    want = jnp.maximum((loads[rich] - loads[poor]) // 2, 0)
+    recs, rvalid, rcost, taken = select_donations(
+        q, jnp.where(idx == rich, want, 0), max_items)
+    q = ShardQueue(q.items, q.valid & ~taken, q.cost)
+    # broadcast the donation to everyone; only `poor` keeps it
+    all_recs = jax.lax.all_gather(recs, axis_name)             # (n, k, w)
+    all_valid = jax.lax.all_gather(rvalid, axis_name)
+    all_cost = jax.lax.all_gather(rcost, axis_name)
+    keep = idx == poor
+    q, dropped = insert_items(q, all_recs[rich],
+                              all_valid[rich] & keep, all_cost[rich])
+    moved = jnp.sum(all_valid[rich].astype(jnp.int32))
+    return q, {"moved": moved, "dropped": dropped, "load": load_of(q)}
+
+
+# --------------------------------------------------------------------------- #
+# Vectorized (single-device) reference used by tests/benchmarks
+# --------------------------------------------------------------------------- #
+@partial(jax.jit, static_argnames=("rounds", "max_items", "trigger"))
+def rebalance_reference(items, valid, cost, rounds: int = 2,
+                        max_items: int = 8, trigger: float = 0.5):
+    """Pure-jnp mirror of `rebalance` over a leading shard axis, for
+    correctness tests (multiset conservation, load convergence) without a
+    device mesh. Shapes: items (S, slots, w), valid (S, slots), cost alike."""
+    S = items.shape[0]
+
+    def shift_round(carry, shift):
+        items, valid, cost = carry
+        loads = jnp.sum(jnp.where(valid, cost, 0), axis=1)
+        free = jnp.sum(~valid, axis=1).astype(jnp.int32)
+        # mirror steal_shift: requester i compares to its -shift neighbor
+        nbr_load = jnp.roll(loads, shift)
+        deficit = jnp.maximum((nbr_load - loads) // 2, 0)
+        want = jnp.where((loads < 0.5 * nbr_load) & (free > 0), deficit, 0)
+        want_from_me = jnp.roll(want, -shift)
+        free_of_requester = jnp.roll(free, -shift)
+
+        def donate(i_items, i_valid, i_cost, w, fr):
+            q = ShardQueue(i_items, i_valid, i_cost)
+            return select_donations(q, w, max_items, max_count=fr)
+        recs, rvalid, rcost, taken = jax.vmap(donate)(items, valid, cost,
+                                                      want_from_me,
+                                                      free_of_requester)
+        valid = valid & ~taken
+        recs_in = jnp.roll(recs, shift, axis=0)
+        rvalid_in = jnp.roll(rvalid, shift, axis=0)
+        rcost_in = jnp.roll(rcost, shift, axis=0)
+
+        def insert(i_items, i_valid, i_cost, r, rv, rc):
+            q, dropped = insert_items(ShardQueue(i_items, i_valid, i_cost), r, rv, rc)
+            return q.items, q.valid, q.cost, dropped
+        items, valid, cost, dropped = jax.vmap(insert)(items, valid, cost,
+                                                       recs_in, rvalid_in, rcost_in)
+        return (items, valid, cost), jnp.sum(dropped)
+
+    dropped_total = jnp.int32(0)
+    carry = (items, valid, cost)
+    for _ in range(rounds):
+        for shift in (1, -1):
+            carry, d = shift_round(carry, shift)
+            dropped_total = dropped_total + d
+    items, valid, cost = carry
+    return items, valid, cost, dropped_total

@@ -1,0 +1,120 @@
+"""LEO constellation model: orbital planes, ISLs, eclipses, failures (§2.1).
+
+Maps a physical constellation onto the abstract `MeshTopology`:
+
+  * `planes` orbital planes × `sats_per_plane` satellites → rows × cols of
+    the 2D mesh (intra-plane links along columns, inter-plane along rows).
+  * Intra-plane ISL latency is constant (ring of evenly spaced satellites).
+  * Inter-plane ISL distance varies with orbital phase: adjacent planes
+    converge near the poles and diverge at the equator, so the link latency
+    oscillates over one orbital period (§2.1 challenge 2). We model it as
+    τ(t) = τ_base · (1 + amp·|sin(2π t/T + φ_plane)|).
+  * Eclipse: a contiguous fraction of each orbit is in Earth's shadow;
+    battery-limited satellites power down during eclipse — a *predictable*
+    shutdown (§5 malleability) with `warn_ticks` of lead time.
+  * Random failures: radiation/hardware faults at Poisson times.
+
+`schedule()` compiles all of this into the plain arrays the tick simulator
+consumes (`fail_time`, `speed`) plus per-epoch hop-latency scalars, keeping
+the simulator itself orbital-mechanics-free.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .topology import MeshTopology
+
+
+@dataclasses.dataclass(frozen=True)
+class ConstellationConfig:
+    planes: int = 8                  # orbital planes (mesh rows)
+    sats_per_plane: int = 8          # satellites per plane (mesh cols)
+    orbit_ticks: int = 5_000         # ticks per orbital period
+    tau_base: int = 5                # single-hop latency in ticks (τ)
+    interplane_amp: float = 0.6      # inter-plane latency oscillation amplitude
+    eclipse_fraction: float = 0.35   # fraction of the orbit in shadow
+    battery_limited_frac: float = 0.1  # fraction of sats that sleep in eclipse
+    warn_ticks: int = 50             # lead time before predictable shutdown
+    failure_rate: float = 0.0        # random failures per worker per orbit
+    wraparound: bool = False         # ring planes (torus columns)
+    seed: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    """Arrays consumed by `repro.core.simulator.simulate`."""
+    fail_time: np.ndarray          # (W,) first shutdown tick (-1 = never)
+    predictable: np.ndarray        # (W,) bool — eclipse (True) vs radiation
+    speed: np.ndarray              # (W,) straggler divisors
+    mean_hop_ticks: float          # orbit-averaged τ for the analytical model
+
+
+class Constellation:
+    def __init__(self, cfg: ConstellationConfig):
+        self.cfg = cfg
+        self.mesh = MeshTopology.grid(cfg.planes, cfg.sats_per_plane,
+                                      torus=cfg.wraparound)
+
+    # ------------------------------------------------------------------ #
+    # Time-varying link latency (per-epoch scalars for the simulator)
+    # ------------------------------------------------------------------ #
+    def interplane_tau(self, t: int, plane: int) -> float:
+        cfg = self.cfg
+        phase = 2 * np.pi * (t / cfg.orbit_ticks) + np.pi * plane / cfg.planes
+        return cfg.tau_base * (1.0 + cfg.interplane_amp * abs(np.sin(phase)))
+
+    def intraplane_tau(self, t: int = 0) -> float:
+        return float(self.cfg.tau_base)
+
+    def mean_tau(self) -> float:
+        """Orbit-average of the mixed link latency (2/π mean of |sin|)."""
+        cfg = self.cfg
+        inter = cfg.tau_base * (1.0 + cfg.interplane_amp * 2.0 / np.pi)
+        # half the links are intra-plane (constant), half inter-plane
+        return 0.5 * cfg.tau_base + 0.5 * inter
+
+    # ------------------------------------------------------------------ #
+    # Outage / failure schedule
+    # ------------------------------------------------------------------ #
+    def schedule(self, horizon_ticks: int) -> Schedule:
+        cfg = self.cfg
+        rng = np.random.default_rng(cfg.seed)
+        W = self.mesh.num_workers
+        fail = -np.ones(W, np.int64)
+        predictable = np.zeros(W, bool)
+
+        # eclipse shutdowns: battery-limited satellites sleep when their
+        # orbital slot enters shadow. Entry tick depends on the in-plane
+        # position (cols spread around the orbit).
+        n_weak = int(round(cfg.battery_limited_frac * W))
+        weak = rng.choice(W, size=n_weak, replace=False) if n_weak else []
+        for w in weak:
+            _, c = self.mesh.coords_of(int(w))
+            slot_phase = c / cfg.sats_per_plane
+            entry = int(((1.0 - slot_phase) % 1.0) * cfg.orbit_ticks)
+            if entry == 0:
+                entry = cfg.orbit_ticks
+            if entry < horizon_ticks:
+                fail[w] = entry
+                predictable[w] = True
+
+        # radiation / hardware faults: Poisson per orbit
+        if cfg.failure_rate > 0:
+            lam = cfg.failure_rate * horizon_ticks / cfg.orbit_ticks
+            for w in range(W):
+                if predictable[w]:
+                    continue
+                if rng.random() < 1.0 - np.exp(-lam):
+                    t = int(rng.integers(1, max(horizon_ticks, 2)))
+                    fail[w] = t
+        # keep the root worker (ground-station adjacent) up
+        fail[0] = -1
+
+        speed = np.ones(W, np.int64)
+        return Schedule(fail_time=fail.astype(np.int32),
+                        predictable=predictable,
+                        speed=speed.astype(np.int32),
+                        mean_hop_ticks=self.mean_tau())

@@ -1,0 +1,465 @@
+"""Tick-level simulator of work stealing on a high-latency 2D mesh.
+
+The paper's experiments run on a *uniform low-latency* HPC interconnect and
+leave "empirical evaluation on an emulated high-latency mesh" as future work
+(§6). This module builds that emulation: a vectorized, deterministic,
+tick-stepped model of the constellation where
+
+  * one tick = one work unit of task execution;
+  * each mesh hop costs `hop_ticks` ticks (τ in work-unit currency), so a
+    neighbor-only steal attempt occupies the thief for 2·hop_ticks ticks and
+    a global steal for 2·hops(thief,victim)·hop_ticks ticks — assumptions
+    (i)–(iii) of §3.3, executed rather than integrated;
+  * steal requests resolve at *arrival* time: a victim serves the requests
+    that arrive in the same tick in deterministic priority order, granting
+    one bottom task each while tasks last (§3.1 step 3-4: a failed attempt
+    sends the thief straight back to victim selection).
+
+Beyond the paper's model, the simulator also covers the SEC failure modes the
+paper lists in §2.1/§5, each as an orthogonal, testable mechanism:
+
+  * **failures** — a schedule kills workers at given ticks (radiation, power
+    loss). Recovery options:
+      - ``Recovery.TC``: coordinated task-level checkpointing every
+        `ckpt_interval` ticks; on failure the constellation rolls back to the
+        last snapshot and the dead worker's snapshot deque + accumulator are
+        transplanted to its nearest live mesh neighbor. Exactly-once always —
+        asserted in tests for arbitrary schedules.
+      - ``Recovery.SUPERVISION``: every victim remembers the tasks stolen
+        from it (ring buffer of `supervision_slots`); when a thief dies its
+        victims re-push the un-acknowledged records, and the dead worker's
+        local state is lost. Exact when the dead worker's loot was not itself
+        re-stolen (single-level protocol, per Kestor et al. [26]); the
+        general nested case needs subtree acks — documented limitation,
+        measured rather than hidden.
+      - ``Recovery.NONE``: lost work stays lost (baseline for overhead).
+  * **malleability** (§5/§6) — predictable shutdowns (battery/eclipse) give a
+    `warn_ticks` lead; the doomed worker *pre-sheds*, pushing its entire
+    deque and accumulator to live neighbors before sleeping. Exactly-once.
+  * **stragglers** — per-worker `speed` divisors (a speed-s worker advances
+    work only every s-th tick), modelling degraded satellites.
+
+Congestion accounting: every steal message contributes payload_bytes × hops
+to `bytes_hops`, the quantity behind the paper's §4.2 remark that multi-hop
+steals "would further penalize the global strategy".
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import deque as dq
+from . import stealing, tasks
+from . import topology as topo
+
+PHASE_RUN = 0
+PHASE_REQ = 1   # steal request in flight (thief → victim)
+PHASE_RESP = 2  # steal response in flight (victim → thief)
+
+STEAL_MSG_BYTES = 32  # request+reply payload estimate (task record + header)
+
+
+class Recovery(enum.Enum):
+    NONE = "none"
+    TC = "tc"
+    SUPERVISION = "supervision"
+
+
+@dataclasses.dataclass(frozen=True)
+class SimConfig:
+    strategy: stealing.Strategy = stealing.Strategy.NEIGHBOR
+    hop_ticks: int = 5                 # τ in work-unit ticks
+    capacity: int = 1024
+    max_grants_per_victim: int = 4
+    escalate_after: int = 4
+    max_ticks: int = 2_000_000
+    seed: int = 0
+    # fault tolerance
+    recovery: Recovery = Recovery.NONE
+    ckpt_interval: int = 0             # TC: ticks between snapshots (0 = off)
+    supervision_slots: int = 64
+    warn_ticks: int = 0                # malleability: pre-shed lead time
+    preshed: bool = False
+
+
+class SimState(NamedTuple):
+    deque: dq.DequeState
+    acc: jax.Array          # (W,) int32 mod-RESULT_MOD checksum
+    work: jax.Array         # (W,) int32 remaining ticks on current expansion
+    fails: jax.Array        # (W,) consecutive failed attempts
+    phase: jax.Array        # (W,) PHASE_*
+    timer: jax.Array        # (W,) ticks left in current phase
+    victim: jax.Array       # (W,) in-flight victim id
+    loot: jax.Array         # (W, T) in-flight stolen record
+    got: jax.Array          # (W,) bool steal granted (valid in PHASE_RESP)
+    alive: jax.Array        # (W,) bool
+    # supervision: record stolen (task, thief) pairs per victim
+    sup_buf: jax.Array      # (W, S, T) stolen records
+    sup_thief: jax.Array    # (W, S) thief ids (-1 = empty slot)
+    sup_n: jax.Array        # (W,) write cursor
+    # stats
+    attempts: jax.Array
+    successes: jax.Array
+    nodes: jax.Array
+    busy: jax.Array         # (W,) ticks spent working
+    steal_wait: jax.Array   # (W,) ticks spent in REQ/RESP
+    bytes_hops: jax.Array   # () int64-ish float32: Σ msg_bytes × hops
+    ckpt_bytes: jax.Array   # () float32 checkpoint traffic
+    overflow: jax.Array     # () int32
+
+
+class SimResult(NamedTuple):
+    result: int
+    ticks: int
+    nodes: int
+    attempts: int
+    successes: int
+    p_success: float
+    busy_ticks: int
+    steal_wait_ticks: int
+    bytes_hops: float
+    ckpt_bytes: float
+    overflow: int
+    utilization: float
+    per_worker_busy: np.ndarray
+
+
+def _mesh_tables(mesh: topo.MeshTopology):
+    return {
+        "neighbors": jnp.asarray(stealing.neighbor_list(mesh)),
+        "radius2": jnp.asarray(stealing.radius2_list(mesh)),
+        "lifelines": jnp.asarray(stealing.lifeline_list(mesh.num_workers)),
+        "hops": jnp.asarray(mesh.hop_matrix),
+    }
+
+
+def _select(cfg: SimConfig, tbl, key, is_thief, fails, W):
+    s = cfg.strategy
+    if s == stealing.Strategy.GLOBAL:
+        return stealing.choose_global(key, W, is_thief)
+    if s == stealing.Strategy.NEIGHBOR:
+        return stealing.choose_neighbor(key, tbl["neighbors"], is_thief)
+    if s == stealing.Strategy.LIFELINE:
+        return stealing.choose_lifeline(key, tbl["lifelines"], fails, W, is_thief)
+    if s == stealing.Strategy.ADAPTIVE:
+        return stealing.choose_adaptive(key, tbl["neighbors"], tbl["radius2"],
+                                        fails, is_thief, cfg.escalate_after)
+    raise ValueError(s)
+
+
+def _nearest_alive_neighbor(tbl, alive, w_dead):
+    """For each dead worker, pick its first live mesh neighbor (or worker 0)."""
+    nbrs = tbl["neighbors"]  # (W, 4)
+    W = nbrs.shape[0]
+    valid = (nbrs >= 0) & alive[jnp.clip(nbrs, 0, W - 1)]
+    first = jnp.argmax(valid, axis=1)
+    heir = jnp.where(valid.any(axis=1), nbrs[jnp.arange(W), first], 0)
+    return heir
+
+
+def _transplant(deque_, acc, src_mask, heir, overflow):
+    """Move every `src_mask` worker's deque + acc onto its heir, emptying src.
+
+    Vectorized one-source-at-a-time via scan over workers would be O(W·C);
+    instead we exploit that heirs are (nearly) idle during recovery and
+    append src rings onto heir rings with a bounded copy of `cap` slots.
+    """
+    W, cap, T = deque_.buf.shape
+    ranks = jnp.arange(cap)[None, :]
+    src_tasks = dq.peek_bottom_window(deque_, cap)          # (W, cap, T)
+    src_counts = jnp.where(src_mask, deque_.size, 0)
+
+    # Scatter: heir h receives all tasks of its dead sources, sequentially.
+    # Multiple sources per heir are handled by offsetting with a cumulative
+    # count per heir (deterministic by worker id).
+    same_heir = (heir[:, None] == heir[None, :]) & src_mask[:, None] & src_mask[None, :]
+    earlier = same_heir & (jnp.arange(W)[None, :] < jnp.arange(W)[:, None])
+    offset = jnp.sum(jnp.where(earlier, src_counts[None, :], 0), axis=1)
+
+    buf, bot, size = deque_.buf, deque_.bot, deque_.size
+    heir_base = size[heir] + offset                        # insertion cursor per source
+    dst_slot = (bot[heir][:, None] + heir_base[:, None] + ranks) % cap
+    live = src_mask[:, None] & (ranks < src_counts[:, None])
+    # drop writes that would overflow the heir
+    room = cap - size[heir] - offset
+    fits = ranks < room[:, None]
+    write = live & fits
+    overflow = overflow + jnp.sum(live & ~fits)
+    # Scatter with duplicate (row, slot) pairs is order-undefined in XLA:
+    # inactive rows must NOT read-modify-write the same destinations (a
+    # no-op write may clobber a real one). Route every inactive element to
+    # a padding row instead.
+    dst_w = jnp.where(write, jnp.broadcast_to(heir[:, None], (W, cap)), W)
+    buf_p = jnp.concatenate([buf, jnp.zeros((1, cap, buf.shape[2]),
+                                            buf.dtype)], axis=0)
+    buf = buf_p.at[dst_w, dst_slot].set(
+        jnp.where(write[:, :, None], src_tasks, buf_p[dst_w, dst_slot]))[:W]
+    written = jnp.sum(write, axis=1).astype(jnp.int32)
+    added = jnp.zeros((W,), jnp.int32).at[heir].add(
+        jnp.where(src_mask, written, 0))
+    size = size + added
+    size = jnp.where(src_mask, 0, size)
+    new_acc = acc.at[heir].add(jnp.where(src_mask, acc, 0))
+    new_acc = jnp.where(src_mask, 0, new_acc) % tasks.RESULT_MOD
+    return dq.DequeState(buf, bot, size), new_acc, overflow
+
+
+@partial(jax.jit, static_argnames=("workload", "mesh", "cfg"))
+def _sim_jit(workload, mesh: topo.MeshTopology, cfg: SimConfig, key0,
+             fail_time, speed):
+    W = mesh.num_workers
+    tbl = _mesh_tables(mesh)
+    tables = workload.tables()
+    S = cfg.supervision_slots
+
+    deques = dq.make(W, cfg.capacity)
+    root = jnp.asarray(workload.root_task())
+    deques, _ = dq.push_top(deques, jnp.broadcast_to(root[None], (W, 4)),
+                            jnp.arange(W) == 0)
+    z = jnp.zeros((W,), jnp.int32)
+    state0 = SimState(
+        deque=deques, acc=z, work=z, fails=z,
+        phase=z, timer=z, victim=z - 1, loot=jnp.zeros((W, 4), jnp.int32),
+        got=jnp.zeros((W,), bool), alive=jnp.ones((W,), bool),
+        sup_buf=jnp.zeros((W, S, 4), jnp.int32),
+        sup_thief=jnp.full((W, S), -1, jnp.int32), sup_n=z,
+        attempts=z, successes=z, nodes=z, busy=z, steal_wait=z,
+        bytes_hops=jnp.float32(0), ckpt_bytes=jnp.float32(0),
+        overflow=jnp.int32(0))
+
+    ckpt_state_bytes = float(W * cfg.capacity * 4 * 4 + W * 4)  # deque + acc
+
+    def tick_fn(carry):
+        state, snap, t = carry
+        key = jax.random.fold_in(key0, t)
+        alive = state.alive
+
+        # ------------- scheduled failures / shutdowns --------------------- #
+        dying_now = alive & (fail_time == t)
+        warned = alive & cfg.preshed & (fail_time >= 0) & (fail_time == t + cfg.warn_ticks)
+
+        # malleable pre-shed: migrate whole deque+acc one warn window early,
+        # then a final flush at the (predictable) death tick catches any loot
+        # delivered in between. Retired workers stop stealing (see below).
+        deque_, acc, overflow = state.deque, state.acc, state.overflow
+        if cfg.preshed:
+            heir = _nearest_alive_neighbor(tbl, alive & ~warned & ~dying_now,
+                                           jnp.arange(W))
+            deque_, acc, overflow = _transplant(deque_, acc, warned, heir, overflow)
+            # death-tick flush: bank in-flight loot into own deque, then move all
+            flush = dying_now
+            deque_, _ = dq.push_top(deque_, state.loot, flush & state.got)
+            deque_, acc, overflow = _transplant(deque_, acc, flush, heir, overflow)
+            state = state._replace(got=jnp.where(flush, False, state.got))
+
+        state = state._replace(deque=deque_, acc=acc, overflow=overflow)
+
+        # apply deaths
+        alive = alive & ~dying_now
+
+        def apply_tc(state, snap):
+            # Roll the whole constellation back to the last coordinated
+            # snapshot (a consistent cut — in-flight steal state is part of
+            # it and is restored verbatim), then transplant the dead
+            # worker's snapshot deque + accumulator + in-flight loot onto
+            # its heir. Exactly-once for arbitrary failure schedules.
+            rb = dying_now.any() & (cfg.ckpt_interval > 0)
+            merged = jax.tree.map(lambda s, c: jnp.where(rb, s, c), snap, state)
+            heir = _nearest_alive_neighbor(tbl, alive, jnp.arange(W))
+            # the snapshot may predate EARLIER deaths, resurrecting state on
+            # long-dead workers — transplant everything on ANY dead worker
+            dead = (~alive) & rb
+            # bank the dead worker's in-flight loot into its own deque first
+            deq, _ = dq.push_top(merged.deque, merged.loot, dead & merged.got)
+            deq, acc, ovf = _transplant(deq, merged.acc, dead, heir,
+                                        merged.overflow)
+            return merged._replace(
+                deque=deq, acc=acc, overflow=ovf, alive=alive,
+                # only the DEAD workers' in-flight state is voided
+                phase=jnp.where(dead, 0, merged.phase),
+                timer=jnp.where(dead, 0, merged.timer),
+                work=jnp.where(dead, 0, merged.work),
+                got=jnp.where(dead, False, merged.got))
+
+        def apply_supervision(state):
+            # victims re-push records whose thief just died
+            repush = (state.sup_thief >= 0) & dying_now[jnp.clip(state.sup_thief, 0, W - 1)]
+            deq = state.deque
+            ovf = state.overflow
+            # push back up to S records (static unroll over slots)
+            for s in range(S):
+                rec = state.sup_buf[:, s]
+                m = repush[:, s] & state.alive & ~dying_now
+                deq, ok = dq.push_top(deq, rec, m)
+                ovf = ovf + jnp.sum(m & ~ok)
+            sup_thief = jnp.where(repush, -1, state.sup_thief)
+            # dead worker's own state is lost
+            deq = dq.DequeState(deq.buf, deq.bot,
+                                jnp.where(dying_now, 0, deq.size))
+            acc = jnp.where(dying_now, 0, state.acc)
+            return state._replace(deque=deq, acc=acc, sup_thief=sup_thief,
+                                  alive=alive, overflow=ovf,
+                                  work=jnp.where(dying_now, 0, state.work),
+                                  phase=jnp.where(dying_now, 0, state.phase),
+                                  got=jnp.where(dying_now, False, state.got))
+
+        if cfg.recovery == Recovery.TC:
+            state = apply_tc(state, snap)
+        elif cfg.recovery == Recovery.SUPERVISION:
+            state = apply_supervision(state)
+        else:
+            deq = dq.DequeState(state.deque.buf, state.deque.bot,
+                                jnp.where(dying_now, 0, state.deque.size))
+            state = state._replace(deque=deq, alive=alive,
+                                   acc=jnp.where(dying_now, 0, state.acc),
+                                   work=jnp.where(dying_now, 0, state.work),
+                                   phase=jnp.where(dying_now, 0, state.phase),
+                                   got=jnp.where(dying_now, False, state.got))
+        alive = state.alive
+
+        # ------------- periodic checkpoint (TC) ---------------------------- #
+        take_ckpt = (cfg.ckpt_interval > 0) & (t % max(cfg.ckpt_interval, 1) == 0)
+        snap = jax.tree.map(lambda s, c: jnp.where(take_ckpt, c, s), snap, state)
+        ckpt_bytes = state.ckpt_bytes + jnp.where(take_ckpt,
+                                                  jnp.float32(ckpt_state_bytes), 0.0)
+        state = state._replace(ckpt_bytes=ckpt_bytes)
+
+        # ------------- phase RUN: work / expand / start steal -------------- #
+        active_tick = alive & (t % speed == 0)  # stragglers advance slowly
+        running = (state.phase == PHASE_RUN) & active_tick
+        burning = running & (state.work > 0)
+        work = state.work - burning.astype(jnp.int32)
+
+        can_expand = running & (~burning) & (state.deque.size > 0)
+        deque_, task, popped = dq.pop_top(state.deque, can_expand)
+        ex = tasks.expand(task, popped, tables)
+        deque_, over = dq.push_top_many(deque_, ex["children"], ex["n_children"])
+        acc = (state.acc + ex["value"]) % tasks.RESULT_MOD
+        work = work + jnp.maximum(ex["cost"] - 1, 0) * popped.astype(jnp.int32)
+        nodes = state.nodes + ex["nodes"]
+        busy = state.busy + (burning | popped).astype(jnp.int32)
+        overflow = state.overflow + jnp.sum(over)
+
+        # idle workers become thieves: request departs now, arrives in h·τ
+        idle = running & (~burning) & (~popped) & (deque_.size == 0)
+        if cfg.preshed:
+            # retired workers (warned of shutdown) must not pull work back in
+            retired = (fail_time >= 0) & (t >= fail_time - cfg.warn_ticks)
+            idle = idle & ~retired
+        victim_new = _select(cfg, tbl, key, idle, state.fails, W)
+        has_victim = victim_new >= 0
+        vhops = jnp.where(has_victim,
+                          tbl["hops"][jnp.arange(W), jnp.clip(victim_new, 0, W - 1)], 0)
+        start_req = idle & has_victim & alive
+        phase = jnp.where(start_req, PHASE_REQ, state.phase)
+        timer = jnp.where(start_req, vhops * cfg.hop_ticks, state.timer)
+        victim = jnp.where(start_req, victim_new, state.victim)
+        attempts = state.attempts + start_req.astype(jnp.int32)
+        bytes_hops = state.bytes_hops + jnp.sum(
+            jnp.where(start_req, vhops, 0)).astype(jnp.float32) * STEAL_MSG_BYTES
+
+        # ------------- phase REQ: in flight / arrival ----------------------- #
+        in_req = (phase == PHASE_REQ) & alive
+        timer = jnp.where(in_req, jnp.maximum(timer - 1, 0), timer)
+        arriving = in_req & (timer == 0)
+        # victims must be alive to grant (dead satellites drop requests)
+        valid_victim = arriving & alive[jnp.clip(victim, 0, W - 1)]
+        plan = stealing.resolve_grants(jnp.where(valid_victim, victim, -1),
+                                       deque_.size, cfg.max_grants_per_victim)
+        v = jnp.clip(plan.victim, 0, W - 1)
+        cap = dq.capacity(deque_)
+        slot = (deque_.bot[v] + plan.rank) % cap
+        stolen = deque_.buf[v, slot]
+        deque_ = dq.steal_bottom(deque_, plan.taken)
+        got = plan.got
+        # supervision: victims log (record, thief)
+        if cfg.recovery == Recovery.SUPERVISION:
+            sup_buf, sup_thief, sup_n = state.sup_buf, state.sup_thief, state.sup_n
+            # scatter: for each granted thief w, write into victim's buffer
+            vslot = jnp.clip(sup_n[v] + plan.rank, 0, S - 1)
+            sup_buf = sup_buf.at[v, vslot].set(
+                jnp.where(got[:, None], stolen, sup_buf[v, vslot]))
+            sup_thief = sup_thief.at[v, vslot].set(
+                jnp.where(got, jnp.arange(W), sup_thief[v, vslot]))
+            sup_n = sup_n + jnp.zeros((W,), jnp.int32).at[v].add(got.astype(jnp.int32))
+            state = state._replace(sup_buf=sup_buf, sup_thief=sup_thief,
+                                   sup_n=jnp.minimum(sup_n, S - 1))
+        # response departs: travel back
+        resp_start = arriving
+        phase = jnp.where(resp_start, PHASE_RESP, phase)
+        back_hops = jnp.where(resp_start,
+                              tbl["hops"][jnp.arange(W), jnp.clip(victim, 0, W - 1)], 0)
+        timer = jnp.where(resp_start, back_hops * cfg.hop_ticks, timer)
+        bytes_hops = bytes_hops + jnp.sum(
+            jnp.where(resp_start, back_hops, 0)).astype(jnp.float32) * STEAL_MSG_BYTES
+        loot = jnp.where(resp_start[:, None], stolen, state.loot)
+        got_flight = jnp.where(resp_start, got, state.got)
+
+        # ------------- phase RESP: in flight / delivery --------------------- #
+        in_resp = (phase == PHASE_RESP) & alive
+        timer = jnp.where(in_resp, jnp.maximum(timer - 1, 0), timer)
+        delivered = in_resp & (timer == 0)
+        deque_, _ = dq.push_top(deque_, loot, delivered & got_flight)
+        successes = state.successes + (delivered & got_flight).astype(jnp.int32)
+        fails = jnp.where(delivered & got_flight, 0,
+                          state.fails + (delivered & ~got_flight).astype(jnp.int32))
+        phase = jnp.where(delivered, PHASE_RUN, phase)
+        steal_wait = state.steal_wait + (in_req | in_resp).astype(jnp.int32)
+
+        new_state = state._replace(
+            deque=deque_, acc=acc, work=work, fails=fails, phase=phase,
+            timer=timer, victim=victim, loot=loot, got=got_flight & ~delivered,
+            alive=alive, attempts=attempts, successes=successes, nodes=nodes,
+            busy=busy, steal_wait=steal_wait, bytes_hops=bytes_hops,
+            overflow=overflow)
+        live = (jnp.sum(deque_.size) + jnp.sum(work)
+                + jnp.sum((got_flight & ~delivered).astype(jnp.int32))) > 0
+        return new_state, snap, t + 1, live
+
+    def cond(carry):
+        state, snap, t, live = carry
+        return live & (t < cfg.max_ticks)
+
+    def body(carry):
+        state, snap, t, _ = carry
+        state, snap, t, live = tick_fn((state, snap, t))
+        return state, snap, t, live
+
+    state, _, ticks, _ = jax.lax.while_loop(
+        cond, body, (state0, state0, jnp.int32(0), jnp.bool_(True)))
+    return state, ticks
+
+
+def simulate(workload, mesh: topo.MeshTopology, cfg: SimConfig | None = None,
+             fail_time: np.ndarray | None = None,
+             speed: np.ndarray | None = None) -> SimResult:
+    """Run the tick simulator. `fail_time[w]` = death tick (-1: immortal);
+    `speed[w]` = straggler divisor (1 = nominal)."""
+    cfg = cfg or SimConfig()
+    W = mesh.num_workers
+    ft = jnp.asarray(fail_time if fail_time is not None
+                     else -np.ones(W, np.int32), jnp.int32)
+    sp = jnp.asarray(speed if speed is not None
+                     else np.ones(W, np.int32), jnp.int32)
+    state, ticks = _sim_jit(workload, mesh, cfg, jax.random.PRNGKey(cfg.seed), ft, sp)
+    state = jax.device_get(state)
+    att, suc = int(state.attempts.sum()), int(state.successes.sum())
+    busy = int(state.busy.sum())
+    t = int(ticks)
+    alive_n = int(state.alive.sum())
+    return SimResult(
+        result=int(np.asarray(state.acc, np.int64).sum() % int(tasks.RESULT_MOD)),
+        ticks=t, nodes=int(state.nodes.sum()), attempts=att, successes=suc,
+        p_success=suc / max(att, 1), busy_ticks=busy,
+        steal_wait_ticks=int(state.steal_wait.sum()),
+        bytes_hops=float(state.bytes_hops), ckpt_bytes=float(state.ckpt_bytes),
+        overflow=int(state.overflow),
+        utilization=busy / max(t * max(alive_n, 1), 1),
+        per_worker_busy=np.asarray(state.busy))

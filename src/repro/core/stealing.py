@@ -1,0 +1,193 @@
+"""Victim-selection strategies and steal-conflict resolution (paper §3.1).
+
+The paper's two strategies:
+
+  * GLOBAL   — victim uniform at random over *all other* workers (the HPC
+               default; on a mesh this is a multi-hop exchange).
+  * NEIGHBOR — victim uniform at random over the thief's directly connected
+               mesh neighbors only; every steal is single-hop, no fallback.
+
+Beyond-paper strategies (motivated by §5 Related Work and §6 Future Work):
+
+  * LIFELINE — a fixed preferred-target set (hypercube lifelines, Saraswat et
+               al.) tried first, falling back to global random (retains the
+               multi-hop fallback the paper removes — useful as a contrast).
+  * ADAPTIVE — the paper's future-work idea: start neighbor-only, and after
+               `escalate_after` consecutive failed attempts widen the victim
+               set to radius-2 mesh neighbors (still cheap: ≤2 hops).
+
+All selection functions are pure, vectorized over workers, and usable inside
+`lax.while_loop`. Conflict resolution (`resolve_grants`) is shared by every
+strategy: when several thieves pick the same victim in one steal round, they
+are ranked deterministically and the victim grants one bottom task per thief
+while tasks (and the per-round grant budget) last — the bulk-synchronous
+analogue of the victim serializing steal responses.
+"""
+
+from __future__ import annotations
+
+import enum
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import topology as topo
+
+
+class Strategy(enum.Enum):
+    GLOBAL = "global"
+    NEIGHBOR = "neighbor"
+    LIFELINE = "lifeline"
+    ADAPTIVE = "adaptive"
+
+
+class StealPlan(NamedTuple):
+    victim: jax.Array   # (W,) int32 chosen victim, -1 for non-thieves
+    rank: jax.Array     # (W,) int32 rank among same-victim requesters
+    got: jax.Array      # (W,) bool steal granted
+    taken: jax.Array    # (W,) int32 tasks taken from this worker (victim view)
+    hops: jax.Array     # (W,) int32 thief→victim hop distance (latency model)
+
+
+# --------------------------------------------------------------------------- #
+# Victim-set tables (precomputed at init — paper §3.1 step 1)
+# --------------------------------------------------------------------------- #
+def neighbor_list(mesh: topo.MeshTopology) -> np.ndarray:
+    """(W, 4) neighbor ids, NO_NEIGHBOR-padded (radius-1 victim set)."""
+    return mesh.neighbor_table
+
+
+def radius2_list(mesh: topo.MeshTopology) -> np.ndarray:
+    """(W, 12) ids of workers within <=2 hops (excluding self), padded with -1."""
+    W = mesh.num_workers
+    h = mesh.hop_matrix
+    out = np.full((W, 12), topo.NO_NEIGHBOR, dtype=np.int32)
+    for w in range(W):
+        cand = np.where((h[w] > 0) & (h[w] <= 2))[0]
+        out[w, : len(cand)] = cand[:12]
+    return out
+
+
+def lifeline_list(num_workers: int, degree: int = 0) -> np.ndarray:
+    """Hypercube lifelines: worker w's lifelines are w with one base-2 digit
+    toggled (Saraswat et al. PPoPP'11), padded to a fixed width."""
+    if degree == 0:
+        degree = max(1, int(np.ceil(np.log2(max(num_workers, 2)))))
+    out = np.full((num_workers, degree), topo.NO_NEIGHBOR, dtype=np.int32)
+    for w in range(num_workers):
+        k = 0
+        for b in range(degree):
+            partner = w ^ (1 << b)
+            if partner < num_workers:
+                out[w, k] = partner
+                k += 1
+    return out
+
+
+# --------------------------------------------------------------------------- #
+# Selection (vectorized; `key` is a per-round PRNG key shared SPMD-wide)
+# --------------------------------------------------------------------------- #
+def _pick_from_list(key, table: jax.Array, is_thief: jax.Array) -> jax.Array:
+    """Uniform choice among valid (!= -1) entries of each worker's row."""
+    W, K = table.shape
+    valid = table != topo.NO_NEIGHBOR
+    n_valid = jnp.maximum(valid.sum(axis=1), 1)
+    r = jax.random.uniform(key, (W,))
+    pick = jnp.minimum((r * n_valid).astype(jnp.int32), n_valid - 1)
+    # index of the pick-th valid entry per row
+    order = jnp.cumsum(valid.astype(jnp.int32), axis=1) - 1  # rank of each valid slot
+    hit = valid & (order == pick[:, None])
+    victim = jnp.max(jnp.where(hit, table, topo.NO_NEIGHBOR), axis=1)
+    return jnp.where(is_thief & (victim >= 0), victim, topo.NO_NEIGHBOR)
+
+
+def choose_global(key, num_workers: int, is_thief: jax.Array) -> jax.Array:
+    """Uniform over all other workers (paper's global strategy)."""
+    W = num_workers
+    r = jax.random.randint(key, (W,), 0, max(W - 1, 1))
+    me = jnp.arange(W)
+    victim = jnp.where(r >= me, r + 1, r)  # uniform over {0..W-1}\{me}
+    victim = jnp.clip(victim, 0, W - 1)
+    return jnp.where(is_thief & (W > 1), victim, topo.NO_NEIGHBOR)
+
+
+def choose_neighbor(key, neighbor_table: jax.Array, is_thief: jax.Array) -> jax.Array:
+    """Uniform over the thief's directly connected neighbors (paper's contribution)."""
+    return _pick_from_list(key, neighbor_table, is_thief)
+
+
+def choose_lifeline(key, lifelines: jax.Array, fails: jax.Array,
+                    num_workers: int, is_thief: jax.Array) -> jax.Array:
+    """Try lifelines round-robin by fail count; fall back to global random."""
+    W, L = lifelines.shape
+    use_global = fails >= L
+    k1, k2 = jax.random.split(key)
+    slot = jnp.clip(fails, 0, L - 1)
+    lane = lifelines[jnp.arange(W), slot]
+    fallback = choose_global(k2, num_workers, is_thief)
+    victim = jnp.where(use_global | (lane == topo.NO_NEIGHBOR), fallback, lane)
+    return jnp.where(is_thief, victim, topo.NO_NEIGHBOR)
+
+
+def choose_adaptive(key, neighbor_table: jax.Array, radius2_table: jax.Array,
+                    fails: jax.Array, is_thief: jax.Array,
+                    escalate_after: int = 4) -> jax.Array:
+    """Neighbor-only, escalating to radius-2 after repeated failures
+    (paper §6: 'gradually considering more distant victims')."""
+    k1, k2 = jax.random.split(key)
+    near = _pick_from_list(k1, neighbor_table, is_thief)
+    far = _pick_from_list(k2, radius2_table, is_thief)
+    return jnp.where(is_thief & (fails >= escalate_after), far, near)
+
+
+# --------------------------------------------------------------------------- #
+# Conflict resolution (shared by all strategies and both executors)
+# --------------------------------------------------------------------------- #
+def resolve_grants(victim: jax.Array, sizes: jax.Array,
+                   max_grants_per_victim: int = 4,
+                   priority: jax.Array | None = None) -> StealPlan:
+    """Deterministically match thieves to victim deque-bottom slots.
+
+    Args:
+      victim: (W,) chosen victim per worker, NO_NEIGHBOR for non-thieves.
+      sizes: (W,) current deque sizes (post owner activity this round).
+      max_grants_per_victim: per-round response budget of a victim (the
+        bulk-synchronous stand-in for the victim serializing requests).
+      priority: (W,) optional tie-break order (lower = served first);
+        defaults to worker id.
+
+    Returns a StealPlan; `rank[w]` is w's position in its victim's service
+    order, `got[w]` whether a task is granted (rank < min(size, budget)),
+    `taken[v]` how many tasks leave victim v's bottom this round.
+    """
+    W = victim.shape[0]
+    req = victim >= 0
+    if priority is None:
+        priority = jnp.arange(W)
+    same = (victim[:, None] == victim[None, :]) & req[:, None] & req[None, :]
+    ahead = same & (
+        (priority[None, :] < priority[:, None])
+        | ((priority[None, :] == priority[:, None])
+           & (jnp.arange(W)[None, :] < jnp.arange(W)[:, None]))
+    )
+    rank = jnp.sum(ahead, axis=1).astype(jnp.int32)
+    vsize = jnp.where(req, sizes[jnp.clip(victim, 0, W - 1)], 0)
+    budget = jnp.minimum(vsize, max_grants_per_victim)
+    got = req & (rank < budget)
+    taken = jnp.zeros((W,), jnp.int32).at[jnp.clip(victim, 0, W - 1)].add(
+        got.astype(jnp.int32))
+    taken = jnp.where(jnp.arange(W) >= 0, taken, 0)  # shape anchor
+    return StealPlan(victim=jnp.where(req, victim, topo.NO_NEIGHBOR),
+                     rank=rank, got=got, taken=taken,
+                     hops=jnp.zeros((W,), jnp.int32))
+
+
+def attach_hops(plan: StealPlan, hop_matrix: jax.Array) -> StealPlan:
+    """Fill in thief→victim hop distances (for the latency simulator)."""
+    W = plan.victim.shape[0]
+    v = jnp.clip(plan.victim, 0, W - 1)
+    hops = jnp.where(plan.victim >= 0,
+                     hop_matrix[jnp.arange(W), v].astype(jnp.int32), 0)
+    return plan._replace(hops=hops)

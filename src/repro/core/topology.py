@@ -1,0 +1,184 @@
+"""2D mesh / torus topology for LEO constellations and TPU ICI meshes.
+
+The paper (§2.1) models a LEO constellation as a 2D mesh: each satellite has
+one optical ISL to the preceding/following satellite in its orbital plane and
+one to the nearest satellite in each of the two adjacent planes — four links.
+Some constellations add wrap-around (each plane is a ring), giving a torus.
+
+This module is the single source of truth for worker coordinates, neighbor
+tables, and hop distances. Everything is precomputed as static numpy/jnp
+arrays at initialization (paper §3.1 step 1: "this set is precomputed at
+initialization"); `repro.core.constellation` layers time-varying link state on
+top for the dynamic-topology simulator.
+
+Coordinates follow the paper's grid mapping (§4.1): workers 0..C-1 are placed
+row-major on a ⌈√C⌉-wide grid; the last row may be partially filled, and
+processes at the end of the last row have two neighbors, "the same as any
+other corner process".
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import cached_property
+
+import jax.numpy as jnp
+import numpy as np
+
+# Direction encoding used across scheduler/simulator: N, S, W, E.
+DIRECTIONS: tuple[tuple[int, int], ...] = ((-1, 0), (1, 0), (0, -1), (0, 1))
+NUM_DIRECTIONS = len(DIRECTIONS)
+NO_NEIGHBOR = -1
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshTopology:
+    """A (possibly partial) 2D mesh of `num_workers` workers.
+
+    rows, cols describe the bounding grid; workers fill it row-major, so the
+    last row may be ragged (paper §4.1). `torus=True` adds wrap-around links
+    (only meaningful when the grid is fully populated along that axis).
+    """
+
+    num_workers: int
+    rows: int
+    cols: int
+    torus: bool = False
+
+    def __post_init__(self):
+        if self.num_workers < 1:
+            raise ValueError("num_workers must be >= 1")
+        if self.rows * self.cols < self.num_workers:
+            raise ValueError(
+                f"grid {self.rows}x{self.cols} too small for {self.num_workers} workers"
+            )
+
+    # ------------------------------------------------------------------ #
+    # Construction
+    # ------------------------------------------------------------------ #
+    @staticmethod
+    def square(num_workers: int, torus: bool = False) -> "MeshTopology":
+        """Paper §4.1 mapping: side length ⌈√C⌉, rows filled in order."""
+        side = math.isqrt(num_workers)
+        if side * side < num_workers:
+            side += 1
+        rows = (num_workers + side - 1) // side
+        return MeshTopology(num_workers=num_workers, rows=rows, cols=side, torus=torus)
+
+    @staticmethod
+    def grid(rows: int, cols: int, torus: bool = False) -> "MeshTopology":
+        return MeshTopology(num_workers=rows * cols, rows=rows, cols=cols, torus=torus)
+
+    # ------------------------------------------------------------------ #
+    # Coordinates
+    # ------------------------------------------------------------------ #
+    def coords_of(self, worker: int) -> tuple[int, int]:
+        return divmod(worker, self.cols)
+
+    def worker_at(self, r: int, c: int) -> int:
+        w = r * self.cols + c
+        return w if (0 <= r < self.rows and 0 <= c < self.cols and w < self.num_workers) else NO_NEIGHBOR
+
+    @cached_property
+    def coords(self) -> np.ndarray:
+        """(num_workers, 2) int32 array of (row, col)."""
+        ws = np.arange(self.num_workers)
+        return np.stack([ws // self.cols, ws % self.cols], axis=1).astype(np.int32)
+
+    # ------------------------------------------------------------------ #
+    # Neighbor tables
+    # ------------------------------------------------------------------ #
+    @cached_property
+    def neighbor_table(self) -> np.ndarray:
+        """(num_workers, 4) int32: neighbor id per direction or NO_NEIGHBOR.
+
+        Directions follow `DIRECTIONS` (N, S, W, E). With `torus=True`, edges
+        wrap when the corresponding axis is fully populated.
+        """
+        tab = np.full((self.num_workers, NUM_DIRECTIONS), NO_NEIGHBOR, dtype=np.int32)
+        full_rows = self.num_workers // self.cols  # rows that are completely filled
+        for w in range(self.num_workers):
+            r, c = divmod(w, self.cols)
+            for d, (dr, dc) in enumerate(DIRECTIONS):
+                rr, cc = r + dr, c + dc
+                if self.torus:
+                    # Wrap columns only inside fully-populated rows; wrap rows
+                    # only when the column exists in the last row too.
+                    if dc != 0 and r < full_rows:
+                        cc %= self.cols
+                    if dr != 0:
+                        col_height = self.rows if (self.worker_at(self.rows - 1, c) != NO_NEIGHBOR) else self.rows - 1
+                        rr %= col_height
+                nb = self.worker_at(rr, cc)
+                tab[w, d] = nb
+        return tab
+
+    @cached_property
+    def neighbor_counts(self) -> np.ndarray:
+        return (self.neighbor_table != NO_NEIGHBOR).sum(axis=1).astype(np.int32)
+
+    def neighbors_of(self, worker: int) -> list[int]:
+        return [int(n) for n in self.neighbor_table[worker] if n != NO_NEIGHBOR]
+
+    # ------------------------------------------------------------------ #
+    # Hop distances (paper §3.3 assumption ii: shortest paths)
+    # ------------------------------------------------------------------ #
+    def hops(self, a: int, b: int) -> int:
+        ra, ca = self.coords_of(a)
+        rb, cb = self.coords_of(b)
+        dr = abs(ra - rb)
+        dc = abs(ca - cb)
+        if self.torus:
+            full_rows = self.num_workers // self.cols
+            if full_rows == self.rows:  # only exact tori wrap cleanly
+                dr = min(dr, self.rows - dr)
+                dc = min(dc, self.cols - dc)
+        return dr + dc
+
+    @cached_property
+    def hop_matrix(self) -> np.ndarray:
+        """(num_workers, num_workers) int32 Manhattan hop distances."""
+        rc = self.coords  # (W, 2)
+        dr = np.abs(rc[:, None, 0] - rc[None, :, 0])
+        dc = np.abs(rc[:, None, 1] - rc[None, :, 1])
+        if self.torus and self.num_workers == self.rows * self.cols:
+            dr = np.minimum(dr, self.rows - dr)
+            dc = np.minimum(dc, self.cols - dc)
+        return (dr + dc).astype(np.int32)
+
+    def mean_hops(self) -> float:
+        """Average hop count between two distinct uniform-random workers.
+
+        For a full √N×√N mesh this approaches the paper's (2/3)·√N.
+        """
+        h = self.hop_matrix
+        n = self.num_workers
+        if n == 1:
+            return 0.0
+        return float(h.sum() / (n * (n - 1)))
+
+    # ------------------------------------------------------------------ #
+    # JAX-side views
+    # ------------------------------------------------------------------ #
+    def neighbor_table_jnp(self) -> jnp.ndarray:
+        return jnp.asarray(self.neighbor_table)
+
+    def ppermute_pairs(self, direction: int) -> list[tuple[int, int]]:
+        """Static (src, dst) pairs for `jax.lax.ppermute` along one direction.
+
+        Sends from each worker to its `direction`-neighbor; workers without a
+        neighbor in that direction do not send (their slot receives zeros on
+        the other end per ppermute semantics).
+        """
+        pairs = []
+        for w in range(self.num_workers):
+            nb = int(self.neighbor_table[w, direction])
+            if nb != NO_NEIGHBOR:
+                pairs.append((w, nb))
+        return pairs
+
+
+def theoretical_mean_hops(n: int) -> float:
+    """Paper §3.3: average hops between two random nodes of a √N×√N mesh ≈ (2/3)√N."""
+    return (2.0 / 3.0) * math.sqrt(n)

@@ -1,0 +1,3 @@
+from . import imbalance, packing, sharding, synthetic
+
+__all__ = ["imbalance", "packing", "sharding", "synthetic"]

@@ -1,0 +1,11 @@
+# Pallas TPU kernels for the framework's compute hot spots (validated in
+# interpret mode on CPU; TPU v5e is the lowering target):
+#   flash_attention — causal/windowed GQA prefill/train attention
+#   decode_attention — flash-decoding over long KV caches
+#   rwkv6_scan      — WKV6 chunked recurrence (data-dependent decay)
+#   rglru_scan      — RG-LRU chunked recurrence
+#   steal_compact   — vectorized deque-bottom extraction for steal rounds
+# ops.py: jit wrappers; ref.py: pure-jnp oracles.
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

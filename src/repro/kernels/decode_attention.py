@@ -1,0 +1,99 @@
+"""Decode attention kernel (TPU Pallas) — one new token vs a long KV cache.
+
+Flash-decoding adapted to TPU: the cache's time axis is tiled into
+`block_t`-sized VMEM blocks swept by the innermost grid axis, with online
+softmax accumulators in VMEM scratch (split-K over time, sequential on-core,
+so no cross-block reduction pass is needed). The q block is the whole GQA
+group (G × hd rows) of one kv head — MXU-aligned when G·hd ≥ 128.
+
+Cache layout (B, KV, T, hd); `lengths` masks the unwritten suffix.
+Oracle: `ref.decode_attention_ref`.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                   *, scale: float, block_t: int, n_t_blocks: int):
+    ti = pl.program_id(1)
+    b = pl.program_id(0)
+
+    @pl.when(ti == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    G, hd = q_ref.shape[1], q_ref.shape[2]
+    q = q_ref[...].reshape(G, hd)
+    k = k_ref[...].reshape(block_t, hd)
+    v = v_ref[...].reshape(block_t, hd)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    t_pos = ti * block_t + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    length = len_ref[0]
+    s = jnp.where(t_pos < length, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.where(s > NEG_INF / 2, jnp.exp(s - m_new), 0.0)
+    alpha = jnp.exp(jnp.maximum(m_prev - m_new, -80.0))
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(ti == n_t_blocks - 1)
+    def _finalize():
+        out = acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+        o_ref[...] = out.reshape(o_ref.shape).astype(o_ref.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, lengths, *, block_t: int = 512,
+                     interpret: bool = False):
+    """q: (B, KV, G, hd); caches: (B, KV, T, hd); lengths: (B,) →
+    (B, KV, G, hd)."""
+    B, KV, G, hd = q.shape
+    T = k_cache.shape[2]
+    block_t = min(block_t, T)
+    assert T % block_t == 0
+    nt = T // block_t
+    scale = hd ** -0.5
+
+    qr = q.reshape(B * KV, G, hd)
+    kr = k_cache.reshape(B * KV, T, hd)
+    vr = v_cache.reshape(B * KV, T, hd)
+    lens = jnp.repeat(lengths, KV)          # (B*KV,)
+
+    kernel = functools.partial(_decode_kernel, scale=scale, block_t=block_t,
+                               n_t_blocks=nt)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * KV, nt),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, ti: (b,)),
+            pl.BlockSpec((1, G, hd), lambda b, ti: (b, 0, 0)),
+            pl.BlockSpec((1, block_t, hd), lambda b, ti: (b, ti, 0)),
+            pl.BlockSpec((1, block_t, hd), lambda b, ti: (b, ti, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, G, hd), lambda b, ti: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * KV, G, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lens, qr, kr, vr)
+    return out.reshape(B, KV, G, hd)

@@ -1,0 +1,116 @@
+"""Flash attention forward kernel (TPU Pallas), causal/windowed GQA.
+
+TPU adaptation (DESIGN.md §2): the CUDA flash-attention block structure maps
+onto Pallas as a (batch·kv_head, q_blocks, k_blocks) grid; the innermost grid
+axis is the sequential k sweep, with running max / sum / output accumulators
+held in VMEM scratch across k steps (TPU grid axes iterate sequentially on a
+core, so scratch carries state — the Pallas idiom replacing CUDA's per-CTA
+shared-memory loop). Block shapes default to (128, 128): MXU-aligned on the
+contraction and lane dims.
+
+Layout: q (B, KV, G, Sq, hd) — grouped-query heads pre-reshaped so one grid
+step owns one kv head's whole group; k/v (B, KV, Sk, hd).
+
+Validated in interpret mode against `ref.mha_ref` (tests/test_kernels.py
+sweeps shapes, dtypes, causal/window settings).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, block_q: int, block_k: int, causal: bool,
+                  window: int, n_k_blocks: int):
+    """One (bh, qi, ki) grid step: fold k block ki into the accumulators."""
+    ki = pl.program_id(2)
+    qi = pl.program_id(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    G = q_ref.shape[1]
+    hd = q_ref.shape[-1]
+    q = q_ref[...].reshape(G * block_q, hd)   # (g, q)-major rows
+    k = k_ref[...].reshape(block_k, hd)
+    v = v_ref[...].reshape(block_k, hd)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    # rows are (g, q) pairs flattened g-major; position depends on q part only
+    q_pos = qi * block_q + (jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+                            % block_q)
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = jnp.ones(s.shape, jnp.bool_)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window > 0:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.where(s > NEG_INF / 2, jnp.exp(s - m_new), 0.0)
+    alpha = jnp.exp(jnp.maximum(m_prev - m_new, -80.0))
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(ki == n_k_blocks - 1)
+    def _finalize():
+        out = acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+        o_ref[...] = out.reshape(o_ref.shape).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False):
+    """q: (B, KV, G, Sq, hd); k, v: (B, KV, Sk, hd) → (B, KV, G, Sq, hd)."""
+    B, KV, G, Sq, hd = q.shape
+    Sk = k.shape[2]
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    assert Sq % block_q == 0 and Sk % block_k == 0
+    nq, nk = Sq // block_q, Sk // block_k
+    scale = hd ** -0.5
+
+    qr = q.reshape(B * KV, G, Sq, hd)       # one kv head's whole group per b
+    kr = k.reshape(B * KV, Sk, hd)
+    vr = v.reshape(B * KV, Sk, hd)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, block_q=block_q, block_k=block_k,
+        causal=causal, window=window, n_k_blocks=nk)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * KV, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, G, block_q, hd), lambda b, qi, ki: (b, 0, qi, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, qi, ki: (b, ki, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, qi, ki: (b, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, G, block_q, hd), lambda b, qi, ki: (b, 0, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * KV, G, Sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G * block_q, 1), jnp.float32),
+            pltpu.VMEM((G * block_q, 1), jnp.float32),
+            pltpu.VMEM((G * block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(B, KV, G, Sq, hd)

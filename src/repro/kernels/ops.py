@@ -1,0 +1,60 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On this CPU container every kernel runs in interpret mode (the kernel body
+executes in Python/XLA on CPU — bit-accurate semantics, no Mosaic); on TPU
+set `REPRO_PALLAS_INTERPRET=0` (or rely on the default backend check) to
+compile the real kernels.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from . import decode_attention as _dec
+from . import flash_attention as _fa
+from . import rglru_scan as _rg
+from . import rwkv6_scan as _wkv
+from . import steal_compact as _sc
+
+
+def _interpret() -> bool:
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k"))
+def flash_attention(q, k, v, causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128):
+    """q: (B, KV, G, Sq, hd); k, v: (B, KV, Sk, hd) → (B, KV, G, Sq, hd)."""
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               block_q=block_q, block_k=block_k,
+                               interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("block_t",))
+def decode_attention(q, k_cache, v_cache, lengths, block_t: int = 512):
+    return _dec.decode_attention(q, k_cache, v_cache, lengths,
+                                 block_t=block_t, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def wkv6(r, k, v, w, u, chunk: int = 64):
+    return _wkv.wkv6(r, k, v, w, u, chunk=chunk, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "block_w"))
+def rglru(x, r, i, lam, chunk: int = 128, block_w: int = 512):
+    return _rg.rglru(x, r, i, lam, chunk=chunk, block_w=block_w,
+                     interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("block_w",))
+def steal_compact(buf, bot, size, grants, block_w: int = 64):
+    return _sc.steal_compact(buf, bot, size, grants, block_w=block_w,
+                             interpret=_interpret())

@@ -1,0 +1,106 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each `*_ref` matches its kernel's exact interface and semantics; the test
+suite sweeps shapes/dtypes and asserts allclose between kernel (interpret
+mode on CPU) and oracle.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def mha_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q: (B, KV, G, Sq, hd); k, v: (B, KV, Sk, hd) → (B, KV, G, Sq, hd)."""
+    B, KV, G, Sq, hd = q.shape
+    Sk = k.shape[2]
+    scale = hd ** -0.5
+    s = jnp.einsum("bkgqh,bksh->bkgqs", q, k).astype(jnp.float32) * scale
+    qp = jnp.arange(Sq)[:, None]
+    kp = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= qp >= kp
+    if window > 0:
+        mask &= (qp - kp) < window
+    s = jnp.where(mask, s, NEG_INF)
+    # match kernel numerics for fully-masked rows: output 0
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.where(s > NEG_INF / 2, jnp.exp(s - m), 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("bkgqs,bksh->bkgqh", (p / jnp.maximum(l, 1e-30)).astype(v.dtype), v)
+    return o.astype(q.dtype)
+
+
+def decode_attention_ref(q, k_cache, v_cache, lengths):
+    """q: (B, KV, G, hd); caches: (B, KV, T, hd); lengths: (B,) valid prefix.
+
+    Returns (B, KV, G, hd).
+    """
+    B, KV, G, hd = q.shape
+    T = k_cache.shape[2]
+    scale = hd ** -0.5
+    s = jnp.einsum("bkgh,bkth->bkgt", q, k_cache).astype(jnp.float32) * scale
+    valid = jnp.arange(T)[None, :] < lengths[:, None]          # (B, T)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.where(s > NEG_INF / 2, jnp.exp(s - m), 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("bkgt,bkth->bkgh", (p / jnp.maximum(l, 1e-30)).astype(v_cache.dtype),
+                   v_cache)
+    return o.astype(q.dtype)
+
+
+def wkv6_ref(r, k, v, w, u, state):
+    """RWKV6 recurrence. r,k,v,w: (B, S, H, hd); u: (H, hd);
+    state: (B, H, hd, hd) → (out (B, S, H, hd) fp32, state)."""
+    def step(S, inp):
+        rt, kt, vt, wt = inp
+        kv = kt[..., :, None] * vt[..., None, :]
+        out = jnp.einsum("bhk,bhkv->bhv", rt, S + u[None, :, :, None] * kv)
+        S = wt[..., :, None] * S + kv
+        return S, out
+
+    seq = tuple(jnp.moveaxis(t.astype(jnp.float32), 1, 0) for t in (r, k, v, w))
+    state, outs = jax.lax.scan(step, state.astype(jnp.float32), seq)
+    return jnp.moveaxis(outs, 0, 1), state
+
+
+def rglru_ref(x, r, i, lam, h0, c: float = 8.0):
+    """RG-LRU recurrence. x, r, i: (B, S, W); lam: (W,); h0: (B, W)."""
+    log_a = -c * jax.nn.softplus(lam)[None, None, :] * r.astype(jnp.float32)
+    a = jnp.exp(log_a)
+    gated = (i * x).astype(jnp.float32) * jnp.sqrt(
+        jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+
+    def step(h, inp):
+        at, gt = inp
+        h = at * h + gt
+        return h, h
+
+    hT, ys = jax.lax.scan(step, h0.astype(jnp.float32),
+                          (jnp.moveaxis(a, 1, 0), jnp.moveaxis(gated, 1, 0)))
+    return jnp.moveaxis(ys, 0, 1), hT
+
+
+def steal_compact_ref(buf, bot, size, grants):
+    """Extract `grants[w]` records from each deque's bottom and advance it.
+
+    buf: (W, C, T) int32 ring buffers; bot, size, grants: (W,).
+    Returns (stolen (W, Gmax, T) zero-padded, new_bot, new_size) where
+    Gmax = int(grants.max-capable) is supplied by the caller via shape.
+    """
+    W, C, T = buf.shape
+    g = jnp.minimum(grants, size)
+    gmax = int(grants.shape[-1]) if grants.ndim > 1 else None
+    del gmax
+    Gmax = 8  # fixed staging width (matches kernel)
+    ranks = jnp.arange(Gmax)[None, :]
+    idx = (bot[:, None] + ranks) % C
+    rows = jnp.take_along_axis(buf, idx[:, :, None], axis=1)
+    live = ranks < g[:, None]
+    stolen = jnp.where(live[:, :, None], rows, 0)
+    return stolen, (bot + g) % C, size - g

@@ -1,0 +1,79 @@
+"""RG-LRU chunked-scan kernel (TPU Pallas).
+
+h_t = a_t ⊙ h_{t-1} + sqrt(1 − a_t²) ⊙ (i_t ⊙ x_t) is elementwise across the
+width axis, so TPU blocking is (width tiles × sequence chunks): grid
+(B, W/block_w, S/chunk); the (1, block_w) carry h lives in VMEM scratch and
+persists across the sequential chunk axis (last grid dim). The log-space
+decay a_t = exp(−c·softplus(λ)·r_t) is computed in-kernel in fp32.
+
+Oracle: `ref.rglru_ref` (also `repro.models.rglru.rglru_scan`).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+RGLRU_C = 8.0
+
+
+def _rglru_kernel(lam_ref, x_ref, r_ref, i_ref, o_ref, h_scr, *,
+                  chunk: int, block_w: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    lam = lam_ref[...].reshape(1, block_w)
+    x = x_ref[...].reshape(chunk, block_w).astype(jnp.float32)
+    r = r_ref[...].reshape(chunk, block_w).astype(jnp.float32)
+    i = i_ref[...].reshape(chunk, block_w).astype(jnp.float32)
+
+    log_a = -RGLRU_C * jax.nn.softplus(lam) * r            # (chunk, block_w)
+    a = jnp.exp(log_a)
+    gated = (i * x) * jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+
+    def step(t, carry):
+        h, out = carry
+        at = jax.lax.dynamic_slice_in_dim(a, t, 1, 0)
+        gt = jax.lax.dynamic_slice_in_dim(gated, t, 1, 0)
+        h = at * h + gt
+        out = jax.lax.dynamic_update_slice_in_dim(out, h, t, 0)
+        return h, out
+
+    out0 = jnp.zeros((chunk, block_w), jnp.float32)
+    h, out = jax.lax.fori_loop(0, chunk, step, (h_scr[...], out0))
+    h_scr[...] = h
+    o_ref[...] = out.reshape(o_ref.shape).astype(o_ref.dtype)
+
+
+def rglru(x, r, i, lam, *, chunk: int = 128, block_w: int = 512,
+          interpret: bool = False):
+    """x, r, i: (B, S, W); lam: (W,) → (B, S, W) fp32 outputs (h per step)."""
+    B, S, W = x.shape
+    chunk = min(chunk, S)
+    block_w = min(block_w, W)
+    assert S % chunk == 0 and W % block_w == 0
+    nc, nw = S // chunk, W // block_w
+
+    kernel = functools.partial(_rglru_kernel, chunk=chunk, block_w=block_w)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, nw, nc),
+        in_specs=[
+            pl.BlockSpec((block_w,), lambda b, wi, ci: (wi,)),
+            pl.BlockSpec((1, chunk, block_w), lambda b, wi, ci: (b, ci, wi)),
+            pl.BlockSpec((1, chunk, block_w), lambda b, wi, ci: (b, ci, wi)),
+            pl.BlockSpec((1, chunk, block_w), lambda b, wi, ci: (b, ci, wi)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, block_w), lambda b, wi, ci: (b, ci, wi)),
+        out_shape=jax.ShapeDtypeStruct((B, S, W), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((1, block_w), jnp.float32)],
+        interpret=interpret,
+    )(lam, x, r, i)
+    return out

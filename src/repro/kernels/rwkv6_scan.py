@@ -1,0 +1,90 @@
+"""RWKV6 WKV chunked-scan kernel (TPU Pallas).
+
+The WKV6 recurrence S_t = diag(w_t)·S_{t-1} + k_tᵀv_t is sequential in t but
+each step is rank-1 over a (hd × hd) state — VPU-friendly elementwise math.
+TPU adaptation: grid (B·H, S/chunk); the (hd, hd) state lives in VMEM scratch
+and persists across the sequential chunk axis; within a chunk the kernel
+fori-loops over timesteps using dynamic row slices of the (chunk, hd) r/k/v/w
+blocks. hd = 64/128 keeps every operand lane-aligned.
+
+Oracle: `ref.wkv6_ref` (also the model's training path in
+`repro.models.rwkv6.wkv_scan`).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+
+def _wkv_kernel(u_ref, r_ref, k_ref, v_ref, w_ref, o_ref, s_scr, *,
+                chunk: int, n_chunks: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_scr[...] = jnp.zeros_like(s_scr)
+
+    u = u_ref[...]                      # (1, hd)
+    hd = u.shape[-1]
+    r = r_ref[...].reshape(chunk, hd).astype(jnp.float32)
+    k = k_ref[...].reshape(chunk, hd).astype(jnp.float32)
+    v = v_ref[...].reshape(chunk, hd).astype(jnp.float32)
+    w = w_ref[...].reshape(chunk, hd).astype(jnp.float32)
+
+    def step(t, carry):
+        S, out = carry
+        rt = jax.lax.dynamic_slice_in_dim(r, t, 1, 0)      # (1, hd)
+        kt = jax.lax.dynamic_slice_in_dim(k, t, 1, 0)
+        vt = jax.lax.dynamic_slice_in_dim(v, t, 1, 0)
+        wt = jax.lax.dynamic_slice_in_dim(w, t, 1, 0)
+        kv = kt.T * vt                                      # (hd_k, hd_v)
+        o_t = rt @ (S + u.T * kv)                           # (1, hd_v)
+        S = wt.T * S + kv
+        out = jax.lax.dynamic_update_slice_in_dim(out, o_t, t, 0)
+        return S, out
+
+    out0 = jnp.zeros((chunk, hd), jnp.float32)
+    S, out = jax.lax.fori_loop(0, chunk, step, (s_scr[...], out0))
+    s_scr[...] = S
+    o_ref[...] = out.reshape(o_ref.shape)
+
+
+def wkv6(r, k, v, w, u, *, chunk: int = 64, interpret: bool = False):
+    """r,k,v,w: (B, S, H, hd); u: (H, hd) → out (B, S, H, hd) fp32.
+
+    State starts at zero (training semantics; decode threads state via the
+    model's scan instead — a 1-token call hits the recurrence directly).
+    """
+    B, S, H, hd = r.shape
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    nc = S // chunk
+
+    def to_bh(t):
+        return jnp.moveaxis(t, 2, 1).reshape(B * H, S, hd)
+
+    rr, kk, vv, ww = map(to_bh, (r, k, v, w))
+    uu = jnp.broadcast_to(u[None], (B, H, hd)).reshape(B * H, hd)
+
+    kernel = functools.partial(_wkv_kernel, chunk=chunk, n_chunks=nc)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * H, nc),
+        in_specs=[
+            pl.BlockSpec((1, hd), lambda b, ci: (b, 0)),
+            pl.BlockSpec((1, chunk, hd), lambda b, ci: (b, ci, 0)),
+            pl.BlockSpec((1, chunk, hd), lambda b, ci: (b, ci, 0)),
+            pl.BlockSpec((1, chunk, hd), lambda b, ci: (b, ci, 0)),
+            pl.BlockSpec((1, chunk, hd), lambda b, ci: (b, ci, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, hd), lambda b, ci: (b, ci, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, S, hd), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
+        interpret=interpret,
+    )(uu, rr, kk, vv, ww)
+    return jnp.moveaxis(out.reshape(B, H, S, hd), 1, 2)

@@ -1,0 +1,72 @@
+"""Deque steal-compaction kernel (TPU Pallas) — the runtime's data-movement
+hot spot.
+
+After a steal round resolves, every victim must (a) export its granted
+bottom records as a dense (Gmax, T) staging block for the transfer
+collective and (b) advance its ring-buffer bottom. Done naively per worker
+this is a scattered modular gather; the kernel performs it for a block of
+workers at once with the ring buffers resident in VMEM, emitting the dense
+staging blocks `ppermute`/`all_gather` consume directly.
+
+Grid: (W / block_w,); each step owns `block_w` workers' full rings
+(block_w × C × T ints in VMEM — capacity is sized so a block fits ~2 MB).
+Oracle: `ref.steal_compact_ref`.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+GMAX = 8  # staging width (max grants per victim per round)
+
+
+def _steal_kernel(buf_ref, bot_ref, size_ref, grants_ref,
+                  stolen_ref, nbot_ref, nsize_ref, *, cap: int):
+    buf = buf_ref[...]          # (block_w, C, T)
+    bot = bot_ref[...]          # (block_w,)
+    size = size_ref[...]
+    grants = grants_ref[...]
+    g = jnp.minimum(grants, size)
+
+    ranks = jax.lax.broadcasted_iota(jnp.int32, (buf.shape[0], GMAX), 1)
+    idx = (bot[:, None] + ranks) % cap                     # (block_w, GMAX)
+    rows = jnp.take_along_axis(buf, idx[:, :, None], axis=1)
+    live = ranks < g[:, None]
+    stolen_ref[...] = jnp.where(live[:, :, None], rows, 0)
+    nbot_ref[...] = (bot + g) % cap
+    nsize_ref[...] = size - g
+
+
+def steal_compact(buf, bot, size, grants, *, block_w: int = 64,
+                  interpret: bool = False):
+    """buf: (W, C, T) int32; bot/size/grants: (W,) →
+    (stolen (W, GMAX, T), new_bot, new_size)."""
+    W, C, T = buf.shape
+    block_w = min(block_w, W)
+    assert W % block_w == 0
+    kernel = functools.partial(_steal_kernel, cap=C)
+    return pl.pallas_call(
+        kernel,
+        grid=(W // block_w,),
+        in_specs=[
+            pl.BlockSpec((block_w, C, T), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block_w,), lambda i: (i,)),
+            pl.BlockSpec((block_w,), lambda i: (i,)),
+            pl.BlockSpec((block_w,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_w, GMAX, T), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block_w,), lambda i: (i,)),
+            pl.BlockSpec((block_w,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((W, GMAX, T), jnp.int32),
+            jax.ShapeDtypeStruct((W,), jnp.int32),
+            jax.ShapeDtypeStruct((W,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(buf, bot, size, grants)

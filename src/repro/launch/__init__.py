@@ -1,0 +1,2 @@
+# Launcher layer: production meshes, sharding rules, input shapes,
+# the multi-pod dry-run, and train/serve entrypoints.

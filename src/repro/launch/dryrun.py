@@ -1,0 +1,289 @@
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --mesh single --out results/
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-34b --shape train_4k
+
+Per cell this proves: the sharding config is coherent (no mismatched
+collectives), compile succeeds at the production mesh, and the compiled
+artifact yields the roofline terms (§Roofline): FLOPs, bytes,
+collective-bytes by op kind, memory analysis.
+
+Results are cached as JSON per cell (re-runs skip green cells).
+"""
+
+# The dry-run (and ONLY the dry-run) needs 512 placeholder devices — these
+# two lines MUST run before any other import (jax locks device count on
+# first init).
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch import mesh as mesh_lib
+from repro.launch import shapes as shapes_lib
+from repro.launch import shardings as sh
+from repro.models import registry
+from repro.optim import adamw
+from repro.runtime.train_loop import make_train_step
+
+# TPU v5e constants for the roofline (§Roofline)
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+
+def _pow2_divisor(n: int, cap: int = 1024) -> int:
+    d = 1
+    while d * 2 <= cap and n % (d * 2) == 0:
+        d *= 2
+    return d
+
+
+def apply_variant(cfg, variant: str):
+    """§Perf variants: 'baseline' is paper-faithful; 'opt' enables the
+    hillclimbed configuration (sequence-parallel TP collectives + causal
+    block skipping; remat policy handled in build_cell).
+
+    MoE archs skip the sequence-sharded residual: measured HLO showed a
+    +28% collective-bytes REGRESSION (the global dispatch argsort forces
+    all-gathers of the seq-sharded activations) — §Perf cell C, iteration
+    I1-seqpar, refuted for this dispatch implementation."""
+    if variant == "opt":
+        seq_axis = "" if cfg.moe is not None else "model"
+        cfg = dataclasses.replace(cfg, seq_shard_axis=seq_axis,
+                                  attn_skip_masked=bool(cfg.attn_chunk_q))
+    return cfg
+
+
+def build_cell(arch: str, shape_name: str, mesh, variant: str = "baseline"):
+    """Returns (lower_fn, meta) for one cell; lower_fn() → jax.stages.Lowered."""
+    cfg = registry.get_config(arch)
+    shape = shapes_lib.SHAPES[shape_name]
+    cfg = shapes_lib.shape_overrides(cfg, shape)
+    cfg = apply_variant(cfg, variant)
+    fns = registry.get_fns(cfg)
+    # VLM prefix changes the attention length — re-fit the chunking
+    if cfg.family == "vlm" and cfg.attn_chunk_q:
+        total = shape.seq_len + cfg.n_frontend_tokens
+        c = _pow2_divisor(total)
+        cfg = dataclasses.replace(cfg, attn_chunk_q=c, attn_chunk_k=c)
+
+    key = jax.random.PRNGKey(0)
+    params_abs = jax.eval_shape(lambda k: fns.init(k, cfg), key)
+    pspecs = sh.param_specs(params_abs, mesh)
+    named_p = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs)
+    ins = shapes_lib.input_specs(cfg, shape)
+    meta = {"arch": arch, "shape": shape_name, "kind": shape.kind,
+            "n_params": cfg.n_params(), "n_active": cfg.n_active_params(),
+            "seq": shape.seq_len, "batch": shape.global_batch}
+
+    if shape.kind == "train":
+        opt_abs = jax.eval_shape(adamw.init, params_abs)
+        ospecs = adamw.AdamWState(m=pspecs, v=pspecs, count=P())
+        named_o = jax.tree.map(lambda s: NamedSharding(mesh, s), ospecs)
+        bspecs = sh.batch_specs(ins["batch"], mesh)
+        nm = shapes_lib.TRAIN_MICROBATCHES.get(arch, 8)
+        remat = "full" if cfg.n_params() > 20e9 else "none"
+        if variant == "opt" and remat == "full":
+            remat = "dots"  # save TP-boundary dots; re-fwd skips those ARs
+        step = make_train_step(cfg, fns, adamw.AdamWConfig(),
+                               num_microbatches=nm, remat=remat)
+        jitted = jax.jit(step, out_shardings=(named_p, named_o, None),
+                         donate_argnums=(0, 1))
+        args = (sh.with_shardings(params_abs, pspecs, mesh),
+                sh.with_shardings(opt_abs, ospecs, mesh),
+                sh.with_shardings(ins["batch"], bspecs, mesh))
+        meta.update(num_microbatches=nm, remat=remat)
+        return lambda: jitted.lower(*args), meta
+
+    if shape.kind == "prefill":
+        extras = {k: v for k, v in ins.items() if k != "tokens"}
+        cache_abs = shapes_lib.cache_specs_abstract(cfg, shape.global_batch,
+                                                    shape.seq_len)
+        cspecs = sh.cache_specs(cache_abs, mesh)
+        named_c = jax.tree.map(lambda s: NamedSharding(mesh, s), cspecs)
+
+        def prefill_step(params, tokens, **kw):
+            if cfg.family == "encdec":
+                return fns.prefill(params, cfg, tokens, shape.seq_len,
+                                   frames=kw["frames"])
+            if cfg.family == "vlm":
+                return fns.prefill(params, cfg, tokens, shape.seq_len,
+                                   prefix_embeds=kw["prefix_embeds"])
+            return fns.prefill(params, cfg, tokens, shape.seq_len)
+
+        out_sh = (None, named_c, None) if cfg.family != "ssm" else None
+        jitted = jax.jit(prefill_step, out_shardings=out_sh)
+        bspec = sh.batch_specs(ins, mesh)
+        args_sds = sh.with_shardings(ins, bspec, mesh)
+        args = (sh.with_shardings(params_abs, pspecs, mesh),
+                args_sds["tokens"])
+        kwargs = {k: v for k, v in args_sds.items() if k != "tokens"}
+        return lambda: jitted.lower(*args, **kwargs), meta
+
+    # decode
+    cspecs = sh.cache_specs(ins["cache"], mesh)
+    named_c = jax.tree.map(lambda s: NamedSharding(mesh, s), cspecs)
+
+    def serve_step(params, token, cache, pos):
+        return fns.decode_step(params, cfg, token, cache, pos)
+
+    jitted = jax.jit(serve_step, out_shardings=(None, named_c, None),
+                     donate_argnums=(2,))
+    tok_spec = sh.batch_specs(ins["token"], mesh)
+    pos_spec = sh.batch_specs(ins["pos"], mesh)
+    args = (sh.with_shardings(params_abs, pspecs, mesh),
+            sh.with_shardings(ins["token"], tok_spec, mesh),
+            sh.with_shardings(ins["cache"], cspecs, mesh),
+            sh.with_shardings(ins["pos"], pos_spec, mesh))
+    return lambda: jitted.lower(*args), meta
+
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|(\S+))\s+(all-reduce|all-gather|reduce-scatter|"
+    r"all-to-all|collective-permute)\b")
+_SHAPE_RE = re.compile(r"(bf16|f16|f32|f64|s8|u8|s16|s32|u32|s64|pred)\[([\d,]*)\]")
+
+_DTYPE_BYTES = {"bf16": 2, "f16": 2, "f32": 4, "f64": 8, "s8": 1, "u8": 1,
+                "pred": 1, "s16": 2, "s32": 4, "u32": 4, "s64": 8}
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum result bytes of collective ops in partitioned HLO, by op kind.
+
+    Wire-cost model (documented in EXPERIMENTS.md): ring all-reduce moves
+    ≈2× the buffer per device; gather/scatter/permute ≈1× the result bytes.
+    NOTE: ops inside `while` (scan) bodies are counted once — see
+    EXPERIMENTS.md §Roofline-calibration; trip-count-exact numbers come
+    from benchmarks.analytic_roofline. These raw figures serve as the
+    collective *schedule* (which ops, what per-iteration payload).
+    """
+    out = {}
+    counts = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        shapes_str = m.group(1) if m.group(1) is not None else m.group(2)
+        op = m.group(3)
+        nbytes = 0
+        for sm in _SHAPE_RE.finditer(shapes_str):
+            dt, dims = sm.group(1), sm.group(2)
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * _DTYPE_BYTES[dt]
+        factor = 2.0 if op == "all-reduce" else 1.0
+        out[op] = out.get(op, 0.0) + factor * nbytes
+        counts[op] = counts.get(op, 0) + 1
+    total = sum(out.values())
+    out["total"] = total
+    out["op_counts"] = counts
+    return out
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
+             force: bool = False, variant: str = "baseline") -> dict:
+    suffix = "" if variant == "baseline" else f"__{variant}"
+    out_path = os.path.join(
+        out_dir, f"{arch}__{shape_name}__{mesh_kind}{suffix}.json")
+    if os.path.exists(out_path) and not force:
+        with open(out_path) as f:
+            return json.load(f)
+    os.makedirs(out_dir, exist_ok=True)
+    mesh = mesh_lib.make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    chips = mesh.devices.size
+    t0 = time.time()
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind, "ok": False,
+           "variant": variant}
+    try:
+        lower_fn, meta = build_cell(arch, shape_name, mesh, variant)
+        rec.update(meta)
+        with jax.sharding.set_mesh(mesh):
+            lowered = lower_fn()
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        ca = compiled.cost_analysis() or {}
+        flops = float(ca.get("flops", 0.0))
+        bytes_acc = float(ca.get("bytes accessed", 0.0))
+        try:
+            ma = compiled.memory_analysis()
+            mem = {
+                "argument_bytes": getattr(ma, "argument_size_in_bytes", 0),
+                "output_bytes": getattr(ma, "output_size_in_bytes", 0),
+                "temp_bytes": getattr(ma, "temp_size_in_bytes", 0),
+                "peak_bytes": getattr(ma, "peak_memory_in_bytes", 0),
+            }
+        except Exception as e:  # backend may not implement it
+            mem = {"error": str(e)}
+        coll = collective_bytes(compiled.as_text())
+        rec.update(
+            ok=True, chips=chips, lower_s=round(t_lower, 1),
+            compile_s=round(t_compile, 1),
+            hlo_flops=flops, hlo_bytes=bytes_acc, collectives=coll,
+            memory=mem,
+        )
+        # roofline terms (per chip; cost_analysis reports the per-device
+        # partitioned module — calibration against 6·N·D recorded alongside)
+        rec["t_compute"] = flops / PEAK_FLOPS
+        rec["t_memory"] = bytes_acc / HBM_BW
+        rec["t_collective"] = coll["total"] / ICI_BW
+        terms = {"compute": rec["t_compute"], "memory": rec["t_memory"],
+                 "collective": rec["t_collective"]}
+        rec["bottleneck"] = max(terms, key=terms.get)
+    except Exception as e:
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    rec["total_s"] = round(time.time() - t0, 1)
+    with open(out_path, "w") as f:
+        json.dump(rec, f, indent=1)
+    status = "OK" if rec.get("ok") else f"FAIL ({rec.get('error', '?')[:80]})"
+    print(f"[dryrun] {arch:24s} {shape_name:12s} {mesh_kind:6s} "
+          f"{variant:8s} {status} {rec['total_s']}s", flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--variant", default="baseline",
+                    choices=["baseline", "opt"])
+    args = ap.parse_args()
+
+    archs = registry.list_archs() if args.arch == "all" else [args.arch]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    failures = 0
+    for arch in archs:
+        shape_names = (shapes_lib.cases(arch) if args.shape == "all"
+                       else [args.shape])
+        for shape_name in shape_names:
+            if not shapes_lib.runnable(arch, shape_name):
+                print(f"[dryrun] {arch} {shape_name}: skipped "
+                      f"(full attention at 500k — DESIGN.md §6)")
+                continue
+            for mesh_kind in meshes:
+                rec = run_cell(arch, shape_name, mesh_kind, args.out,
+                               force=args.force, variant=args.variant)
+                failures += 0 if rec.get("ok") else 1
+    print(f"[dryrun] done, failures={failures}")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

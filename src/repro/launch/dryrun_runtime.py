@@ -1,0 +1,76 @@
+"""Dry-run of the work-stealing runtime itself on the production worker mesh.
+
+This is the paper's core claim made structural: lower one steal round of the
+shard_map executor for a 16×16 worker mesh (one satellite per device) under
+both strategies and compare the *compiled collective schedules*:
+
+  * NEIGHBOR — must contain ONLY `collective-permute` ops (single-hop ISL
+    traffic, constant payload ⇒ the 2τ side of §3.3) plus the termination
+    psum;
+  * GLOBAL — contains `all-gather`s whose payload grows with the worker
+    count (the multi-hop (4/3)√N·τ side).
+
+  PYTHONPATH=src python -m repro.launch.dryrun_runtime
+"""
+
+# Must run before any other import — 256 placeholder devices for the
+# 16×16 worker mesh (one worker per device).
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=256 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import argparse
+import json
+
+import jax
+
+from repro.core import scheduler, stealing, tasks
+from repro.launch.dryrun import collective_bytes
+
+
+def lower_steal_round(strategy: stealing.Strategy, rows: int = 16,
+                      cols: int = 16, capacity: int = 256):
+    """Lower (without executing) the full sharded executor for one strategy."""
+    mesh = jax.make_mesh((rows, cols), ("row", "col"))
+    cfg = scheduler.SchedulerConfig(strategy=strategy, capacity=capacity,
+                                    max_rounds=64,
+                                    steal_subrounds=1, expansions_per_round=1)
+    wl = tasks.FibWorkload(n=30, cutoff=12)
+    run = scheduler.build_sharded_run(mesh, cfg, wl)
+    jitted = jax.jit(lambda: run())
+    return jitted.lower(), mesh
+
+
+def analyze(strategy: stealing.Strategy):
+    lowered, mesh = lower_steal_round(strategy)
+    compiled = lowered.compile()
+    coll = collective_bytes(compiled.as_text())
+    return coll
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="results/dryrun/paper_runtime.json")
+    args = ap.parse_args()
+    out = {}
+    for strat in (stealing.Strategy.NEIGHBOR, stealing.Strategy.GLOBAL):
+        coll = analyze(strat)
+        counts = coll.get("op_counts", {})
+        out[strat.value] = coll
+        print(f"[paper-runtime] {strat.value:9s} op_counts={counts} "
+              f"permute_bytes={coll.get('collective-permute', 0):.2e} "
+              f"allgather_bytes={coll.get('all-gather', 0):.2e}")
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=1)
+    n = out["neighbor"]
+    g = out["global"]
+    single_hop_only = n.get("all-gather", 0) == 0 and n.get("all-to-all", 0) == 0
+    print(f"[paper-runtime] neighbor single-hop-only (no gathers): "
+          f"{single_hop_only}")
+    print(f"[paper-runtime] global gather bytes / neighbor permute bytes = "
+          f"{g.get('all-gather', 1) / max(n.get('collective-permute', 1), 1):.1f}x")
+
+
+if __name__ == "__main__":
+    main()

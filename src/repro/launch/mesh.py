@@ -1,0 +1,35 @@
+"""Production device meshes.
+
+Defined as FUNCTIONS (never module-level constants) so importing this module
+never touches jax device state — the dry-run must set
+XLA_FLAGS=--xla_force_host_platform_device_count before first jax init, and
+smoke tests must keep seeing 1 device.
+"""
+
+from __future__ import annotations
+
+import jax
+
+SINGLE_POD = (16, 16)                 # 256 chips (TPU v5e pod slice)
+MULTI_POD = (2, 16, 16)               # 2 pods × 256 chips
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = MULTI_POD if multi_pod else SINGLE_POD
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_worker_mesh(rows: int, cols: int):
+    """Mesh for the shard_map work-stealing executor (one worker/device)."""
+    return jax.make_mesh((rows, cols), ("row", "col"))
+
+
+def dp_axes(mesh) -> tuple:
+    """The data-parallel axes of a mesh (pod folds into DP)."""
+    names = mesh.axis_names
+    return tuple(n for n in names if n in ("pod", "data"))
+
+
+def n_chips(mesh) -> int:
+    return mesh.devices.size

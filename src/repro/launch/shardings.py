@@ -1,0 +1,231 @@
+"""Sharding rules: parameter / optimizer / batch / cache PartitionSpecs.
+
+Strategy (DESIGN.md §4):
+  * TP over "model": attention heads, FFN hidden, experts (EP), vocab;
+  * FSDP over "data": the d_model axis of every weight (ZeRO-3-style —
+    optimizer state inherits the same specs, giving ZeRO sharding for free);
+  * "pod" is pure DP: params replicated across pods, batch sharded over
+    ("pod", "data");
+  * decode caches: batch over "data"; the *time* axis of long dense caches
+    over "model" (flash-decoding style split-K — GSPMD inserts the partial
+    softmax reduction);
+  * long_500k (batch=1): batch axes unshardable — recurrent state shards
+    heads/width over "model" and the data axis idles (reported honestly in
+    the roofline).
+
+Rules are assigned by parameter *path suffix* matching, so they transfer
+across all 10 architectures without per-arch tables.
+"""
+
+from __future__ import annotations
+
+import re
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+# --------------------------------------------------------------------------- #
+# Parameter rules (path → spec for the *trailing* dims; leading stack dims
+# (n_layers / n_groups / per_group) are always unsharded).
+# --------------------------------------------------------------------------- #
+_PARAM_RULES = [
+    # attention / generic dense projections:  (D, out) and (in, D)
+    (r"attn/wq/w$", ("data", "model")),
+    (r"attn/wk/w$", ("data", "model")),
+    (r"attn/wv/w$", ("data", "model")),
+    (r"attn/wo/w$", ("model", "data")),
+    (r"xattn/w[qkv]/w$", ("data", "model")),
+    (r"xattn/wo/w$", ("model", "data")),
+    (r"attn/w[qkv]/b$", ("model",)),
+    (r"attn/wo/b$", ("data",)),
+    (r"xattn/w[qkv]/b$", ("model",)),
+    # dense MLP
+    (r"mlp/wg/w$", ("data", "model")),
+    (r"mlp/wu/w$", ("data", "model")),
+    (r"mlp/wd/w$", ("model", "data")),
+    (r"mlp/wu/b$", ("model",)),
+    (r"mlp/wd/b$", ("data",)),
+    # MoE: experts over "model" (EP), d_model over "data" (FSDP)
+    (r"moe/router/w$", ("data", "model")),
+    (r"moe/wg$", ("model", "data", None)),
+    (r"moe/wu$", ("model", "data", None)),
+    (r"moe/wd$", ("model", None, "data")),
+    (r"moe/shared/wg$", (None, "data", "model")),
+    (r"moe/shared/wu$", (None, "data", "model")),
+    (r"moe/shared/wd$", (None, "model", "data")),
+    # embeddings / unembedding. The unembed head wants vocab TP (sharded
+    # logits); the *input* gather from a vocab-sharded table forces XLA into
+    # involuntary full rematerialization of the table (observed in the
+    # partitioner log — §Perf iteration 3), so the embed table shards d_model
+    # over both axes instead and the gather stays local. Tied-embedding
+    # models pay one extra psum at the head, once per step.
+    (r"embed/table$", (None, ("data", "model"))),
+    (r"head/table$", ("model", "data")),
+    # rwkv6 time/channel mix
+    (r"w[rkvgo]$", ("data", "model")),
+    (r"w_lora_a$", ("data", None)),
+    (r"w_lora_b$", (None, "model")),
+    (r"^layers/u$", ("model", None)),
+    (r"c[kr]$", ("data", "model")),
+    (r"cv$", ("model", "data")),
+    (r"w0$", ("model",)),
+    # rg-lru recurrent blocks
+    (r"in_[xg]$", ("data", "model")),
+    (r"rec/.*out$", ("model", "data")),
+    (r"conv_w$", (None, "model")),
+    (r"conv_b$", ("model",)),
+    (r"w[ax]$", ("data", "model")),
+    (r"b[ax]$", ("model",)),
+    (r"lam$", ("model",)),
+]
+
+
+def _n_stack_dims(path: str) -> int:
+    """Leading stacked dims to skip: layers/... → 1; rec|attn group stacks → 2."""
+    if re.match(r"^(rec|attn)/", path):
+        return 2
+    if path.startswith("layers/"):
+        return 1
+    if path.startswith("rem/"):
+        return 0
+    return 0
+
+
+def _axis_size(mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return mesh.shape[axis]
+
+
+def sanitize(spec: P, shape, mesh) -> P:
+    """Drop spec axes that do not evenly divide the dim (NamedSharding on
+    abstract inputs requires divisibility; e.g. whisper/granite vocabs)."""
+    out = []
+    for i, ax in enumerate(spec):
+        size = _axis_size(mesh, ax)
+        out.append(ax if (size > 1 and shape[i] % size == 0) or size == 1
+                   else None)
+    return P(*out)
+
+
+def param_spec(path: str, ndim: int) -> P:
+    core = path
+    for pat, spec in _PARAM_RULES:
+        if re.search(pat, core):
+            skip = ndim - len(spec)
+            assert skip >= 0, f"{path}: spec {spec} too long for ndim {ndim}"
+            return P(*([None] * skip + list(spec)))
+    return P()  # norms, lerp coefficients, u/bonus vectors: replicated
+
+
+def tree_paths(tree) -> list:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return ["/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in kp)
+            for kp, _ in flat]
+
+
+_EMBED_CANDIDATES = [
+    # preferred: d_model over both axes (local gather — see rule comment)
+    P(None, ("data", "model")),
+    # fallback for small d_model: vocab over data, d over model
+    P("data", "model"),
+    # last resort: d over model only
+    P(None, "model"),
+]
+
+
+def param_specs(params_abstract, mesh=None):
+    """Pytree of PartitionSpec matching `params_abstract` (ShapeDtypeStructs)."""
+    flat, treedef = jax.tree.flatten(params_abstract)
+    paths = tree_paths(params_abstract)
+    specs = [param_spec(p, l.ndim) for p, l in zip(paths, flat)]
+    if mesh is not None:
+        out = []
+        for path, spec, leaf in zip(paths, specs, flat):
+            if path.endswith("embed/table"):
+                # pick the first candidate that divides evenly
+                for cand in _EMBED_CANDIDATES:
+                    if sanitize(cand, leaf.shape, mesh) == cand:
+                        spec = cand
+                        break
+                else:
+                    spec = sanitize(spec, leaf.shape, mesh)
+            else:
+                spec = sanitize(spec, leaf.shape, mesh)
+            out.append(spec)
+        specs = out
+    return jax.tree.unflatten(treedef, specs)
+
+
+def opt_specs(param_specs_tree, opt_abstract):
+    """AdamW state: m/v mirror params; count replicated."""
+    from repro.optim.adamw import AdamWState
+    return AdamWState(m=param_specs_tree, v=param_specs_tree, count=P())
+
+
+# --------------------------------------------------------------------------- #
+# Batch / cache rules
+# --------------------------------------------------------------------------- #
+def batch_specs(batch_abstract, mesh, batch_divisible: bool = True):
+    """Shard the leading batch dim over the DP axes (pod folds in)."""
+    dp = tuple(n for n in mesh.axis_names if n in ("pod", "data"))
+    dp_size = int(np.prod([mesh.shape[a] for a in dp]))
+
+    def spec(leaf):
+        if leaf.ndim == 0:
+            return P()
+        if leaf.shape[0] % dp_size == 0:
+            return P(dp, *([None] * (leaf.ndim - 1)))
+        return P()  # unshardable batch (e.g. B=1): replicate
+    return jax.tree.map(spec, batch_abstract)
+
+
+def cache_specs(cache_abstract, mesh, time_axis_model: bool = True):
+    """Decode caches: (L, B, T, KV, hd) → B over data, T over model (long
+    dense caches); recurrent states: heads/width over model."""
+    data_size = mesh.shape["data"]
+    model_size = mesh.shape["model"]
+
+    def spec(path: str, leaf):
+        nd = leaf.ndim
+        if nd >= 5 and path.split("/")[-1] in ("k", "v", "xk", "xv"):
+            # (L, B, T, KV, hd)
+            b_ok = leaf.shape[1] % data_size == 0
+            t_ok = time_axis_model and leaf.shape[2] % model_size == 0 \
+                and leaf.shape[2] >= 4096
+            return P(None, "data" if b_ok else None,
+                     "model" if t_ok else None, None, None)
+        if path.endswith("wkv"):          # (L, B, H, hdk, hdv)
+            b_ok = leaf.shape[1] % data_size == 0
+            h_ok = leaf.shape[2] % model_size == 0
+            return P(None, "data" if b_ok else None,
+                     "model" if h_ok else None, None, None)
+        if path.endswith("shift_att") or path.endswith("shift_ffn"):
+            b_ok = leaf.shape[1] % data_size == 0
+            return P(None, "data" if b_ok else None,
+                     "model" if leaf.shape[2] % model_size == 0 else None)
+        if path.endswith("h"):            # (R, B, W)
+            b_ok = leaf.shape[1] % data_size == 0
+            return P(None, "data" if b_ok else None,
+                     "model" if leaf.shape[2] % model_size == 0 else None)
+        if path.endswith("conv"):         # (R, B, K-1, W)
+            b_ok = leaf.shape[1] % data_size == 0
+            return P(None, "data" if b_ok else None, None,
+                     "model" if leaf.shape[3] % model_size == 0 else None)
+        return P()
+
+    flat, treedef = jax.tree.flatten(cache_abstract)
+    paths = tree_paths(cache_abstract)
+    return jax.tree.unflatten(treedef, [spec(p, l) for p, l in zip(paths, flat)])
+
+
+def with_shardings(abstract_tree, spec_tree, mesh):
+    """Attach NamedShardings to a ShapeDtypeStruct tree (for .lower())."""
+    return jax.tree.map(
+        lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype,
+                                          sharding=NamedSharding(mesh, s)),
+        abstract_tree, spec_tree)

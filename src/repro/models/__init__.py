@@ -1,0 +1,6 @@
+# Model zoo substrate: one implementation per family, configs in
+# repro.configs, resolution via repro.models.registry.
+from . import config, encdec, layers, moe, registry, rglru, rwkv6, transformer
+
+__all__ = ["config", "encdec", "layers", "moe", "registry", "rglru",
+           "rwkv6", "transformer"]

@@ -1,0 +1,95 @@
+"""Architecture registry: `--arch <id>` → (config, model functions).
+
+Every assigned architecture registers its `ModelConfig` (from
+`repro.configs.<module>`) plus the family's init/loss/prefill/decode
+functions. `reduced()` shrinks any config to a CPU-smoke-test size while
+preserving its family structure (GQA ratio, MoE top-k, layer pattern, ...).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Callable, NamedTuple
+
+from . import encdec, rglru, rwkv6, transformer
+from .config import ModelConfig
+
+
+class ModelFns(NamedTuple):
+    init: Callable
+    loss_fn: Callable
+    prefill: Callable
+    decode_step: Callable
+
+
+_FAMILY_FNS = {
+    "dense": ModelFns(transformer.init, transformer.loss_fn,
+                      transformer.prefill, transformer.decode_step),
+    "moe": ModelFns(transformer.init, transformer.loss_fn,
+                    transformer.prefill, transformer.decode_step),
+    "vlm": ModelFns(transformer.init, transformer.loss_fn,
+                    transformer.prefill, transformer.decode_step),
+    "ssm": ModelFns(rwkv6.init, rwkv6.loss_fn, rwkv6.prefill, rwkv6.decode_step),
+    "hybrid": ModelFns(rglru.init, rglru.loss_fn, rglru.prefill,
+                       rglru.decode_step),
+    "encdec": ModelFns(encdec.init, encdec.loss_fn, encdec.prefill,
+                       encdec.decode_step),
+}
+
+ARCH_MODULES = {
+    "mistral-large-123b": "repro.configs.mistral_large_123b",
+    "granite-3-8b": "repro.configs.granite_3_8b",
+    "qwen2-0.5b": "repro.configs.qwen2_0_5b",
+    "yi-34b": "repro.configs.yi_34b",
+    "llava-next-mistral-7b": "repro.configs.llava_next_mistral_7b",
+    "whisper-tiny": "repro.configs.whisper_tiny",
+    "rwkv6-1.6b": "repro.configs.rwkv6_1_6b",
+    "qwen2-moe-a2.7b": "repro.configs.qwen2_moe_a2_7b",
+    "phi3.5-moe-42b-a6.6b": "repro.configs.phi35_moe_42b",
+    "recurrentgemma-9b": "repro.configs.recurrentgemma_9b",
+    # the paper's own experimental setup (mesh executor config, not an LM)
+    "paper-mesh": "repro.configs.paper_mesh",
+}
+
+
+def list_archs() -> list[str]:
+    return [a for a in ARCH_MODULES if a != "paper-mesh"]
+
+
+def get_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(ARCH_MODULES[arch])
+    return mod.CONFIG
+
+
+def get_fns(cfg: ModelConfig) -> ModelFns:
+    return _FAMILY_FNS[cfg.family]
+
+
+def reduced(cfg: ModelConfig, n_layers: int = 2, d_model: int = 64,
+            vocab: int = 128, seq_hint: int = 64) -> ModelConfig:
+    """Shrink a config to smoke-test size, preserving family structure."""
+    ratio = max(cfg.n_heads // cfg.n_kv_heads, 1)
+    n_kv = 2 if cfg.n_kv_heads > 1 else 1
+    n_heads = n_kv * min(ratio, 4)
+    head_dim = max(d_model // n_heads, 8)
+    updates = dict(
+        n_layers=max(n_layers, len(cfg.pattern)),
+        d_model=d_model,
+        n_heads=n_heads,
+        n_kv_heads=n_kv,
+        head_dim=head_dim,
+        d_ff=d_model * 2,
+        vocab=vocab,
+        window=min(cfg.window, seq_hint // 2) if cfg.window else None,
+        lru_width=d_model if cfg.lru_width else 0,
+        n_encoder_layers=min(cfg.n_encoder_layers, 2),
+        n_frontend_tokens=min(cfg.n_frontend_tokens, 16) if cfg.n_frontend_tokens else 0,
+        rwkv_head_dim=16,
+    )
+    if cfg.moe is not None:
+        updates["moe"] = dataclasses.replace(
+            cfg.moe, n_experts=8, top_k=min(cfg.moe.top_k, 2),
+            n_shared=min(cfg.moe.n_shared, 1), d_ff_expert=d_model,
+            d_ff_shared=d_model if cfg.moe.d_ff_shared else 0, ep_pad_to=0)
+    return dataclasses.replace(cfg, **updates)

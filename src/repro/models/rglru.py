@@ -1,0 +1,322 @@
+"""RecurrentGemma-style hybrid: RG-LRU recurrent blocks + local attention
+(Griffin, arXiv:2402.19427), the [hybrid] architecture of the assignment.
+
+Layer pattern cycles ("rec", "rec", "attn"):
+
+  * **recurrent block** — input proj to `lru_width` ×2 (value branch + GeLU
+    gate branch); the value branch goes through a short causal conv1d
+    (width 4) and the RG-LRU:
+        r_t = σ(W_a x_t + b_a)           recurrence gate
+        i_t = σ(W_x x_t + b_x)           input gate
+        a_t = exp(c · softplus(Λ) · (-r_t))        (a = σ(Λ)^(c·r) form)
+        h_t = a_t ⊙ h_{t-1} + sqrt(1 − a_t²) ⊙ (i_t ⊙ x_t)
+    merged with the gate branch and projected back to d_model.
+  * **attention block** — MQA (kv=1) with a sliding window (2048) and RoPE.
+  * every block is followed by a gated-MLP block (GeGLU, d_ff).
+
+Sequential scan is the reference; `repro.kernels.rglru_scan` is the Pallas
+kernel. Decode state: (h, conv window) per recurrent layer + ring KV caches
+of window size per attention layer — O(window), so this arch runs
+`long_500k`.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from .config import ModelConfig
+
+RGLRU_C = 8.0
+
+
+def _lru_width(cfg: ModelConfig) -> int:
+    return cfg.lru_width or cfg.d_model
+
+
+def _rec_layer_init(key, cfg: ModelConfig):
+    D, W = cfg.d_model, _lru_width(cfg)
+    ks = jax.random.split(key, 8)
+    s = 0.02
+    nrm = jax.random.normal
+    return {
+        "ln1": L.rmsnorm_init(D),
+        "in_x": nrm(ks[0], (D, W), jnp.float32) * s,   # value branch
+        "in_g": nrm(ks[1], (D, W), jnp.float32) * s,   # gate branch
+        "conv_w": nrm(ks[2], (cfg.conv1d_width, W), jnp.float32) * s,
+        "conv_b": jnp.zeros((W,), jnp.float32),
+        "wa": nrm(ks[3], (W, W), jnp.float32) * s,
+        "ba": jnp.zeros((W,), jnp.float32),
+        "wx": nrm(ks[4], (W, W), jnp.float32) * s,
+        "bx": jnp.zeros((W,), jnp.float32),
+        "lam": jnp.full((W,), 2.0, jnp.float32),       # softplus(2) ≈ slow decay
+        "out": nrm(ks[5], (W, D), jnp.float32) * s,
+        "ln2": L.rmsnorm_init(D),
+        "mlp": L.mlp_init(ks[6], D, cfg.d_ff, "swiglu"),
+    }
+
+
+def _attn_layer_init(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 3)
+    dims = L.AttnDims(cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd, False)
+    return {
+        "ln1": L.rmsnorm_init(cfg.d_model),
+        "attn": L.attention_init(ks[0], dims),
+        "ln2": L.rmsnorm_init(cfg.d_model),
+        "mlp": L.mlp_init(ks[1], cfg.d_model, cfg.d_ff, "swiglu"),
+    }
+
+
+def layer_layout(cfg: ModelConfig):
+    """(n_groups, remainder_kinds): groups of the full pattern + leftovers."""
+    kinds = cfg.block_kinds()
+    p = len(cfg.pattern)
+    n_groups = cfg.n_layers // p
+    rem = kinds[n_groups * p:]
+    return n_groups, rem
+
+
+def init(key, cfg: ModelConfig):
+    n_groups, rem = layer_layout(cfg)
+    ks = jax.random.split(key, 6)
+    rec_per_group = sum(1 for k in cfg.pattern if k == "rec")
+    att_per_group = sum(1 for k in cfg.pattern if k == "attn")
+    rkeys = jax.random.split(ks[0], max(n_groups * rec_per_group, 1))
+    akeys = jax.random.split(ks[1], max(n_groups * att_per_group, 1))
+    params = {
+        "embed": L.embed_init(ks[2], cfg.vocab, cfg.d_model),
+        "rec": jax.vmap(partial(_rec_layer_init, cfg=cfg))(rkeys),
+        "attn": jax.vmap(partial(_attn_layer_init, cfg=cfg))(akeys),
+        "final_norm": L.rmsnorm_init(cfg.d_model),
+        "head": L.embed_init(ks[3], cfg.vocab, cfg.d_model),
+        "rem": [
+            (_rec_layer_init if k == "rec" else _attn_layer_init)(
+                jax.random.fold_in(ks[4], i), cfg)
+            for i, k in enumerate(rem)
+        ],
+    }
+    # reshape stacked per-kind params to (n_groups, per_group, ...)
+    params["rec"] = jax.tree.map(
+        lambda a: a.reshape(n_groups, rec_per_group, *a.shape[1:]), params["rec"])
+    params["attn"] = jax.tree.map(
+        lambda a: a.reshape(n_groups, att_per_group, *a.shape[1:]), params["attn"])
+    return params
+
+
+# --------------------------------------------------------------------------- #
+# RG-LRU core
+# --------------------------------------------------------------------------- #
+def rglru_scan(x, r, i, lam, h0):
+    """x, r, i: (B, S, W); lam: (W,); h0: (B, W) → (y (B,S,W), hT)."""
+    log_a = -RGLRU_C * jax.nn.softplus(lam)[None, None, :] * r.astype(jnp.float32)
+    a = jnp.exp(log_a)
+    gated = (i * x).astype(jnp.float32) * jnp.sqrt(
+        jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+
+    def step(h, inp):
+        at, gt = inp
+        h = at * h + gt
+        return h, h
+
+    a_s = jnp.moveaxis(a, 1, 0)
+    g_s = jnp.moveaxis(gated, 1, 0)
+    hT, ys = jax.lax.scan(step, h0.astype(jnp.float32), (a_s, g_s))
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), hT
+
+
+def _causal_conv(x, w, b, state):
+    """Short causal conv along S. x: (B,S,W); w: (K,W); state: (B,K-1,W)."""
+    K = w.shape[0]
+    xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, k:k + x.shape[1], :] * L.cast(w[k], x.dtype) for k in range(K))
+    new_state = xp[:, xp.shape[1] - (K - 1):, :]
+    return y + L.cast(b, x.dtype), new_state
+
+
+def _rec_block(lp, x, cfg, h0, conv_state):
+    y = L.rmsnorm(lp["ln1"], x)
+    vx = y @ L.cast(lp["in_x"], x.dtype)
+    g = jax.nn.gelu(y @ L.cast(lp["in_g"], x.dtype))
+    vx, conv_state = _causal_conv(vx, lp["conv_w"], lp["conv_b"], conv_state)
+    r = jax.nn.sigmoid(vx @ L.cast(lp["wa"], x.dtype) + L.cast(lp["ba"], x.dtype))
+    i = jax.nn.sigmoid(vx @ L.cast(lp["wx"], x.dtype) + L.cast(lp["bx"], x.dtype))
+    h, hT = rglru_scan(vx, r, i, lp["lam"], h0)
+    out = (h * g) @ L.cast(lp["out"], x.dtype)
+    x = x + out
+    x = x + L.mlp_apply(lp["mlp"], L.rmsnorm(lp["ln2"], x), "swiglu")
+    return x, hT, conv_state
+
+
+def _attn_block(lp, x, cfg, positions):
+    dims = L.AttnDims(cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd, False)
+    y = L.rmsnorm(lp["ln1"], x)
+    a, kv = L.attention_apply(lp["attn"], dims, y, y, positions, positions,
+                              cfg.rope_theta, causal=True, window=cfg.window,
+                              chunk_q=cfg.attn_chunk_q, chunk_k=cfg.attn_chunk_k,
+                              skip_masked_blocks=cfg.attn_skip_masked)
+    x = x + a
+    x = x + L.mlp_apply(lp["mlp"], L.rmsnorm(lp["ln2"], x), "swiglu")
+    return x, kv
+
+
+def _empty_state(cfg: ModelConfig, B: int, cache_len: int):
+    n_groups, rem = layer_layout(cfg)
+    W = _lru_width(cfg)
+    rec_pg = sum(1 for k in cfg.pattern if k == "rec")
+    att_pg = sum(1 for k in cfg.pattern if k == "attn")
+    n_rec = n_groups * rec_pg + sum(1 for k in rem if k == "rec")
+    n_att = n_groups * att_pg + sum(1 for k in rem if k == "attn")
+    T = min(cache_len, cfg.window) if cfg.window else cache_len
+    return {
+        "h": jnp.zeros((n_rec, B, W), jnp.float32),
+        "conv": jnp.zeros((n_rec, B, cfg.conv1d_width - 1, W), cfg.dtype),
+        "k": jnp.zeros((n_att, B, T, cfg.n_kv_heads, cfg.hd), cfg.dtype),
+        "v": jnp.zeros((n_att, B, T, cfg.n_kv_heads, cfg.hd), cfg.dtype),
+    }
+
+
+def forward(params, cfg: ModelConfig, tokens, remat: str = "none",
+            collect_kv: bool = False):
+    x = L.embed(params["embed"], tokens, cfg.dtype)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    n_groups, rem = layer_layout(cfg)
+    W = _lru_width(cfg)
+    rec_pg = sum(1 for k in cfg.pattern if k == "rec")
+    kinds = list(cfg.pattern)
+
+    def group(x, gp):
+        rp, ap = gp
+        ri = ai = 0
+        kvs = []
+        for kind in kinds:
+            if kind == "rec":
+                lp = jax.tree.map(lambda a: a[ri], rp)
+                h0 = jnp.zeros((B, W), jnp.float32)
+                cs = jnp.zeros((B, cfg.conv1d_width - 1, W), x.dtype)
+                x, _, _ = _rec_block(lp, x, cfg, h0, cs)
+                ri += 1
+            else:
+                lp = jax.tree.map(lambda a: a[ai], ap)
+                x, kv = _attn_block(lp, x, cfg, positions)
+                kvs.append(kv)
+                ai += 1
+        ys = jax.tree.map(lambda *t: jnp.stack(t), *kvs) if (collect_kv and kvs) else None
+        return x, ys
+
+    if remat != "none":
+        group = jax.checkpoint(group)
+
+    x, kvs = jax.lax.scan(group, x, (params["rec"], params["attn"]))
+    for lp_rem, kind in zip(params["rem"], cfg.block_kinds()[n_groups * len(kinds):]):
+        if kind == "rec":
+            h0 = jnp.zeros((B, W), jnp.float32)
+            cs = jnp.zeros((B, cfg.conv1d_width - 1, W), x.dtype)
+            x, _, _ = _rec_block(lp_rem, x, cfg, h0, cs)
+        else:
+            x, _ = _attn_block(lp_rem, x, cfg, positions)
+    x = L.rmsnorm(params["final_norm"], x)
+    logits = L.unembed(params["head"], x)
+    return logits, {}, kvs
+
+
+def loss_fn(params, cfg: ModelConfig, batch, remat: str = "none"):
+    logits, metrics, _ = forward(params, cfg, batch["tokens"], remat=remat)
+    mask = batch.get("loss_mask")
+    loss = L.softmax_xent(logits[:, :-1], batch["tokens"][:, 1:],
+                          None if mask is None else mask[:, 1:])
+    metrics["xent"] = loss
+    return loss, metrics
+
+
+# --------------------------------------------------------------------------- #
+# Serving
+# --------------------------------------------------------------------------- #
+def prefill(params, cfg: ModelConfig, tokens, cache_len: int):
+    """Sequential prefill that also fills decode state.
+
+    For simplicity (and because recurrent state must thread through time),
+    prefill re-runs the stack but carrying state; attention KV rings are
+    filled with the last `window` positions.
+    """
+    x = L.embed(params["embed"], tokens, cfg.dtype)
+    B, S, _ = x.shape
+    state = _empty_state(cfg, B, cache_len)
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    kinds_all = cfg.block_kinds()
+    ri = ai = 0
+    h_list, conv_list, k_list, v_list = [], [], [], []
+    for li, kind in enumerate(kinds_all):
+        lp = _layer_params(params, cfg, li)
+        if kind == "rec":
+            h0 = jnp.zeros((B, _lru_width(cfg)), jnp.float32)
+            cs = jnp.zeros((B, cfg.conv1d_width - 1, _lru_width(cfg)), x.dtype)
+            x, hT, csT = _rec_block(lp, x, cfg, h0, cs)
+            h_list.append(hT)
+            conv_list.append(csT)
+            ri += 1
+        else:
+            x, (k, v) = _attn_block(lp, x, cfg, positions)
+            T = state["k"].shape[2]
+            if S <= T:
+                ck = state["k"][ai].at[:, :S].set(k)
+                cv = state["v"][ai].at[:, :S].set(v)
+            else:
+                slots = jnp.arange(S - T, S) % T
+                ck = state["k"][ai].at[:, slots].set(k[:, S - T:])
+                cv = state["v"][ai].at[:, slots].set(v[:, S - T:])
+            k_list.append(ck)
+            v_list.append(cv)
+            ai += 1
+    x = L.rmsnorm(params["final_norm"], x)
+    logits = L.unembed(params["head"], x[:, -1:])
+    state = {"h": jnp.stack(h_list), "conv": jnp.stack(conv_list),
+             "k": jnp.stack(k_list), "v": jnp.stack(v_list)}
+    return logits[:, 0], state, jnp.full((B,), S, jnp.int32)
+
+
+def _layer_params(params, cfg: ModelConfig, li: int):
+    """Materialize layer li's params from the grouped stacks."""
+    p = len(cfg.pattern)
+    n_groups, _ = layer_layout(cfg)
+    g, off = divmod(li, p)
+    if g >= n_groups:
+        return params["rem"][li - n_groups * p]
+    kind = cfg.pattern[off]
+    idx = sum(1 for k in cfg.pattern[:off] if k == kind)
+    stack = params["rec"] if kind == "rec" else params["attn"]
+    return jax.tree.map(lambda a: a[g, idx], stack)
+
+
+def decode_step(params, cfg: ModelConfig, token, state, pos):
+    B = token.shape[0]
+    x = L.embed(params["embed"], token[:, None], cfg.dtype)
+    dims = L.AttnDims(cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd, False)
+    kinds_all = cfg.block_kinds()
+    ri = ai = 0
+    h_new, conv_new, k_new, v_new = [], [], [], []
+    for li, kind in enumerate(kinds_all):
+        lp = _layer_params(params, cfg, li)
+        if kind == "rec":
+            x, hT, csT = _rec_block(lp, x, cfg, state["h"][ri], state["conv"][ri])
+            h_new.append(hT)
+            conv_new.append(csT)
+            ri += 1
+        else:
+            y = L.rmsnorm(lp["ln1"], x)
+            a, ck, cv = L.attention_decode(lp["attn"], dims, y, state["k"][ai],
+                                           state["v"][ai], pos, cfg.rope_theta,
+                                           cfg.window)
+            x = x + a
+            x = x + L.mlp_apply(lp["mlp"], L.rmsnorm(lp["ln2"], x), "swiglu")
+            k_new.append(ck)
+            v_new.append(cv)
+            ai += 1
+    x = L.rmsnorm(params["final_norm"], x)
+    logits = L.unembed(params["head"], x)[:, 0]
+    state = {"h": jnp.stack(h_new), "conv": jnp.stack(conv_new),
+             "k": jnp.stack(k_new), "v": jnp.stack(v_new)}
+    return logits, state, pos + 1

@@ -1,0 +1,270 @@
+"""RWKV-6 "Finch" — attention-free decoder with data-dependent decay
+(arXiv:2404.05892), the [ssm] architecture of the assignment.
+
+Per block:
+  * **time mix (WKV6)** — token-shift lerp produces r, k, v, g streams and a
+    *data-dependent* per-channel decay w_t = exp(-exp(w0 + lora(x_t)));
+    per head h with state S ∈ R^{hd×hd}:
+        o_t = r_t · (S_{t-1} + diag(u) k_tᵀ v_t)
+        S_t = diag(w_t) S_{t-1} + k_tᵀ v_t
+    followed by a per-head group norm, SiLU(g) gating, and output proj.
+  * **channel mix** — token-shift lerp, k = relu(x Wk)², out = σ(x Wr)⊙(k Wv).
+
+The sequential scan here is the reference; `repro.kernels.rwkv6_scan` is the
+chunked Pallas kernel for TPU. Decode carries (shift_att, shift_ffn, S) —
+O(1) state, which is why this arch runs the `long_500k` cell.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from .config import ModelConfig
+
+LORA_RANK = 64
+
+
+def _n_heads(cfg: ModelConfig) -> int:
+    return cfg.d_model // cfg.rwkv_head_dim
+
+
+def _layer_init(key, cfg: ModelConfig):
+    D, dff = cfg.d_model, cfg.d_ff
+    H, hd = _n_heads(cfg), cfg.rwkv_head_dim
+    ks = jax.random.split(key, 12)
+    s = 0.02
+    nrm = jax.random.normal
+    return {
+        "ln1": L.layernorm_init(D),
+        "mix": {  # token-shift lerp coefficients per stream
+            "mu_r": jnp.full((D,), 0.5, jnp.float32),
+            "mu_k": jnp.full((D,), 0.5, jnp.float32),
+            "mu_v": jnp.full((D,), 0.5, jnp.float32),
+            "mu_g": jnp.full((D,), 0.5, jnp.float32),
+            "mu_w": jnp.full((D,), 0.5, jnp.float32),
+        },
+        "wr": nrm(ks[0], (D, D), jnp.float32) * s,
+        "wk": nrm(ks[1], (D, D), jnp.float32) * s,
+        "wv": nrm(ks[2], (D, D), jnp.float32) * s,
+        "wg": nrm(ks[3], (D, D), jnp.float32) * s,
+        "wo": nrm(ks[4], (D, D), jnp.float32) * s,
+        "w0": jnp.full((D,), -6.0, jnp.float32),        # slow decay at init
+        "w_lora_a": nrm(ks[5], (D, LORA_RANK), jnp.float32) * s,
+        "w_lora_b": nrm(ks[6], (LORA_RANK, D), jnp.float32) * s,
+        "u": jnp.zeros((H, hd), jnp.float32),           # bonus term
+        "gn": L.rmsnorm_init(D),                        # per-head norm (flattened)
+        "ln2": L.layernorm_init(D),
+        "cmix": {
+            "mu_k": jnp.full((D,), 0.5, jnp.float32),
+            "mu_r": jnp.full((D,), 0.5, jnp.float32),
+        },
+        "ck": nrm(ks[7], (D, dff), jnp.float32) * s,
+        "cv": nrm(ks[8], (dff, D), jnp.float32) * s,
+        "cr": nrm(ks[9], (D, D), jnp.float32) * s,
+    }
+
+
+def init(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 3)
+    lkeys = jax.random.split(ks[0], cfg.n_layers)
+    params = {
+        "embed": L.embed_init(ks[1], cfg.vocab, cfg.d_model),
+        "layers": jax.vmap(partial(_layer_init, cfg=cfg))(lkeys),
+        "final_norm": L.layernorm_init(cfg.d_model),
+        "head": L.embed_init(ks[2], cfg.vocab, cfg.d_model),
+    }
+    return params
+
+
+def _token_shift(x, prev):
+    """x: (B,S,D); prev: (B,D) last token of the previous chunk."""
+    return jnp.concatenate([prev[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _lerp(x, xs, mu):
+    return x + (xs - x) * mu.astype(x.dtype)
+
+
+def wkv_scan(r, k, v, w, u, state):
+    """Reference WKV6 recurrence.
+
+    r,k,v: (B,S,H,hd); w: (B,S,H,hd) decay in (0,1); u: (H,hd);
+    state: (B,H,hd,hd) [key-dim × value-dim]. Returns (out (B,S,H,hd), state).
+    """
+    def step(S, inp):
+        rt, kt, vt, wt = inp  # (B,H,hd)
+        kv = kt[..., :, None] * vt[..., None, :]          # (B,H,hdk,hdv)
+        out = jnp.einsum("bhk,bhkv->bhv", rt, S + u[None, :, :, None] * kv)
+        S = wt[..., :, None] * S + kv
+        return S, out
+
+    rs, ks_, vs, ws = (jnp.moveaxis(t, 1, 0) for t in (r, k, v, w))
+    state, outs = jax.lax.scan(step, state, (rs, ks_, vs, ws))
+    return jnp.moveaxis(outs, 0, 1), state
+
+
+def wkv_chunked(r, k, v, w, u, state, chunk: int = 256):
+    """Chunk-parallel WKV6 (§Perf cell B / context parallelism).
+
+    The state update S_t = diag(w_t)·S_{t-1} + k_tᵀv_t is a *linear*
+    recurrence, so a chunk composes to S_end = D ⊙ S_start + C with
+    D = ∏ w (per key-dim) and C the locally accumulated decayed outer
+    products. Three passes:
+      1. per chunk (parallel): local outputs with S_start = 0, the
+         correction queries q_t = r_t ⊙ (∏_{s<t} w_s), and (D, C);
+      2. a tiny exclusive scan over chunk states (the only sequential /
+         cross-shard step — on a context-parallel mesh this is one
+         (B, H, hd, hd) handoff per chunk boundary);
+      3. per chunk (parallel): out_t += q_t @ S_start.
+    Exactly equals `wkv_scan` (tests/test_models.py); chunks can live on
+    different devices, which removes the TP all-reduces entirely.
+    """
+    B, S, H, hd = r.shape
+    if S % chunk or S <= chunk:
+        return wkv_scan(r, k, v, w, u, state)
+    nc = S // chunk
+
+    def to_chunks(t):
+        return t.reshape(B, nc, chunk, H, hd)
+
+    rc, kc, vc, wc = map(to_chunks, (r, k, v, w))
+
+    def local(rci, kci, vci, wci):
+        """One chunk with S_start = 0. Shapes (B, chunk, H, hd)."""
+        def step(carry, inp):
+            Sl, P = carry                     # (B,H,hdk,hdv), (B,H,hdk)
+            rt, kt, vt, wt = inp
+            kv = kt[..., :, None] * vt[..., None, :]
+            out = jnp.einsum("bhk,bhkv->bhv", rt,
+                             Sl + u[None, :, :, None] * kv)
+            q = rt * P                        # correction query
+            Sl = wt[..., :, None] * Sl + kv
+            P = P * wt
+            return (Sl, P), (out, q)
+
+        S0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+        P0 = jnp.ones((B, H, hd), jnp.float32)
+        seq = tuple(jnp.moveaxis(t, 1, 0) for t in (rci, kci, vci, wci))
+        (Sl, P), (outs, qs) = jax.lax.scan(step, (S0, P0), seq)
+        return (jnp.moveaxis(outs, 0, 1), jnp.moveaxis(qs, 0, 1), Sl, P)
+
+    out_local, q, C, D = jax.vmap(local, in_axes=1, out_axes=(1, 1, 1, 1))(
+        rc, kc, vc, wc)
+    # pass 2: exclusive scan of (D, C) over the chunk axis
+    def combine(S_start, dc):
+        Di, Ci = dc                           # (B,H,hdk), (B,H,hdk,hdv)
+        S_end = Di[..., :, None] * S_start + Ci
+        return S_end, S_start
+
+    Dm = jnp.moveaxis(D, 1, 0)                # (nc, B, H, hd)
+    Cm = jnp.moveaxis(C, 1, 0)
+    final_state, starts = jax.lax.scan(combine, state.astype(jnp.float32),
+                                       (Dm, Cm))
+    starts = jnp.moveaxis(starts, 0, 1)       # (B, nc, H, hdk, hdv)
+    # pass 3: correction
+    corr = jnp.einsum("bnchk,bnhkv->bnchv", q, starts)
+    out = (out_local + corr).reshape(B, S, H, hd)
+    return out, final_state
+
+
+def _time_mix(lp, x, cfg, shift_state, wkv_state):
+    B, S, D = x.shape
+    H, hd = _n_heads(cfg), cfg.rwkv_head_dim
+    xs = _token_shift(x, shift_state)
+    new_shift = x[:, -1, :]
+    xr = _lerp(x, xs, lp["mix"]["mu_r"])
+    xk = _lerp(x, xs, lp["mix"]["mu_k"])
+    xv = _lerp(x, xs, lp["mix"]["mu_v"])
+    xg = _lerp(x, xs, lp["mix"]["mu_g"])
+    xw = _lerp(x, xs, lp["mix"]["mu_w"])
+
+    r = (xr @ L.cast(lp["wr"], x.dtype)).reshape(B, S, H, hd)
+    k = (xk @ L.cast(lp["wk"], x.dtype)).reshape(B, S, H, hd)
+    v = (xv @ L.cast(lp["wv"], x.dtype)).reshape(B, S, H, hd)
+    g = xg @ L.cast(lp["wg"], x.dtype)
+    # data-dependent decay (Finch): w = exp(-exp(w0 + lora(xw)))
+    dlog = lp["w0"].astype(jnp.float32) + (
+        (xw @ L.cast(lp["w_lora_a"], x.dtype)) @ L.cast(lp["w_lora_b"], x.dtype)
+    ).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(dlog)).reshape(B, S, H, hd).astype(jnp.float32)
+
+    out, wkv_state = wkv_chunked(r.astype(jnp.float32), k.astype(jnp.float32),
+                                 v.astype(jnp.float32), w,
+                                 lp["u"].astype(jnp.float32),
+                                 wkv_state, chunk=256)
+    out = out.reshape(B, S, D)
+    out = L.rmsnorm(lp["gn"], out).astype(x.dtype) * jax.nn.silu(g)
+    return out @ L.cast(lp["wo"], x.dtype), new_shift, wkv_state
+
+
+def _channel_mix(lp, x, shift_state):
+    xs = _token_shift(x, shift_state)
+    new_shift = x[:, -1, :]
+    xk = _lerp(x, xs, lp["cmix"]["mu_k"])
+    xr = _lerp(x, xs, lp["cmix"]["mu_r"])
+    k = jnp.square(jax.nn.relu(xk @ L.cast(lp["ck"], x.dtype)))
+    return jax.nn.sigmoid(xr @ L.cast(lp["cr"], x.dtype)) * (
+        k @ L.cast(lp["cv"], x.dtype)), new_shift
+
+
+def _empty_state(cfg: ModelConfig, B: int):
+    H, hd = _n_heads(cfg), cfg.rwkv_head_dim
+    return {
+        "shift_att": jnp.zeros((cfg.n_layers, B, cfg.d_model), cfg.dtype),
+        "shift_ffn": jnp.zeros((cfg.n_layers, B, cfg.d_model), cfg.dtype),
+        "wkv": jnp.zeros((cfg.n_layers, B, H, hd, hd), jnp.float32),
+    }
+
+
+def forward(params, cfg: ModelConfig, tokens, state=None, remat: str = "none"):
+    """tokens (B,S) → (logits, metrics, state)."""
+    x = L.embed(params["embed"], tokens, cfg.dtype)
+    B = x.shape[0]
+    state = state or _empty_state(cfg, B)
+
+    def body(x, scanned):
+        from .transformer import _seq_constraint
+        lp, sa, sf, wkv = scanned
+        x = _seq_constraint(x, cfg)
+        a, sa, wkv = _time_mix(lp, L.layernorm(lp["ln1"], x), cfg, sa, wkv)
+        x = x + a
+        x = _seq_constraint(x, cfg)
+        c, sf = _channel_mix(lp, L.layernorm(lp["ln2"], x), sf)
+        x = x + c
+        return x, (sa, sf, wkv)
+
+    if remat != "none":
+        body = jax.checkpoint(body)
+
+    x, (sa, sf, wkv) = jax.lax.scan(
+        body, x, (params["layers"], state["shift_att"], state["shift_ffn"],
+                  state["wkv"]))
+    x = L.layernorm(params["final_norm"], x)
+    logits = L.unembed(params["head"], x)
+    new_state = {"shift_att": sa, "shift_ffn": sf, "wkv": wkv}
+    return logits, {}, new_state
+
+
+def loss_fn(params, cfg: ModelConfig, batch, remat: str = "none"):
+    logits, metrics, _ = forward(params, cfg, batch["tokens"], remat=remat)
+    mask = batch.get("loss_mask")
+    loss = L.softmax_xent(logits[:, :-1], batch["tokens"][:, 1:],
+                          None if mask is None else mask[:, 1:])
+    metrics["xent"] = loss
+    return loss, metrics
+
+
+# Serving: state IS the cache — prefill = forward, decode = 1-token forward.
+def prefill(params, cfg: ModelConfig, tokens, cache_len: int = 0):
+    logits, _, state = forward(params, cfg, tokens)
+    B = tokens.shape[0]
+    return logits[:, -1], state, jnp.full((B,), tokens.shape[1], jnp.int32)
+
+
+def decode_step(params, cfg: ModelConfig, token, state, pos):
+    logits, _, state = forward(params, cfg, token[:, None], state=state)
+    return logits[:, 0], state, pos + 1

@@ -1,0 +1,3 @@
+from . import elastic, serve_loop, train_loop
+
+__all__ = ["elastic", "serve_loop", "train_loop"]

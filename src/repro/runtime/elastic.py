@@ -1,0 +1,47 @@
+"""Elastic scaling: checkpoint-reshard-restart across different meshes.
+
+The constellation analogy (paper §5 malleability): satellites join/leave, so
+the runtime must restore any checkpoint onto any worker count. For the LM
+framework this means: params/opt-state saved from an (A×B) mesh restore onto
+an (A'×B') mesh — the manifest stores only logical shapes, and
+`Checkpointer.restore(shardings=...)` re-places leaves under the new mesh's
+NamedShardings. The work-stealing runtime equivalently redistributes pending
+deques via `TaskCheckpointer` (round-robin with locality).
+
+`reshard_plan` computes the per-leaf resharding (what moves where) so a real
+deployment can pre-size the transfer; on this container the placement is
+exercised with host-device meshes in tests.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def make_shardings(mesh, params, rules):
+    """Map every param leaf to a NamedSharding under `mesh` using `rules`
+    (see launch/shardings.py)."""
+    return jax.tree.map(lambda spec: NamedSharding(mesh, spec), rules)
+
+
+def reshard_plan(old_mesh_shape: tuple, new_mesh_shape: tuple,
+                 leaf_shapes: dict) -> dict:
+    """Bytes that must move per leaf when the mesh changes size.
+
+    Conservative model: a leaf sharded over axes that changed size moves
+    entirely; replicated leaves move only if the device set changed.
+    """
+    plan = {}
+    changed = old_mesh_shape != new_mesh_shape
+    for path, (shape, dtype_size, sharded) in leaf_shapes.items():
+        nbytes = int(np.prod(shape)) * dtype_size
+        plan[path] = nbytes if (changed and sharded) else 0
+    return plan
+
+
+def elastic_restore(ckpt, target_tree, mesh, rules):
+    """Restore the latest checkpoint onto `mesh` (any shape)."""
+    shardings = make_shardings(mesh, target_tree, rules)
+    return ckpt.restore(target_tree, shardings=shardings)

@@ -1,0 +1,85 @@
+"""Steal-rebalancer: conservation, convergence, serving occupancy."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import balancer
+from repro.data import imbalance
+
+
+def _mk(S, slots, costs, valid):
+    items = np.arange(S * slots * 2, dtype=np.int32).reshape(S, slots, 2)
+    return (jnp.asarray(items), jnp.asarray(valid), jnp.asarray(costs))
+
+
+@given(st.integers(2, 10), st.integers(2, 12), st.data())
+@settings(max_examples=30, deadline=None)
+def test_conservation(S, slots, data):
+    valid = np.array(data.draw(st.lists(
+        st.lists(st.booleans(), min_size=slots, max_size=slots),
+        min_size=S, max_size=S)))
+    costs = np.array(data.draw(st.lists(
+        st.lists(st.integers(1, 50), min_size=slots, max_size=slots),
+        min_size=S, max_size=S)), dtype=np.int32)
+    items, v, c = _mk(S, slots, costs, valid)
+    before = sorted(map(tuple, np.asarray(items)[valid]))
+    it, va, co, dropped = balancer.rebalance_reference(items, v, c, rounds=3)
+    after = sorted(map(tuple, np.asarray(it)[np.asarray(va)]))
+    assert int(dropped) == 0
+    assert before == after
+
+
+def test_root_loaded_diffusion():
+    """All work on shard 0 (paper initial phase) spreads within O(S) rounds."""
+    S, slots = 8, 16
+    costs = imbalance.root_loaded(S, slots, total=1600)
+    valid = costs > 0
+    items, v, c = _mk(S, slots, costs, valid)
+    it, va, co, _ = balancer.rebalance_reference(items, v, c, rounds=S)
+    loads = np.where(np.asarray(va), np.asarray(co), 0).sum(1)
+    assert (loads > 0).sum() >= S - 1  # reached (almost) everyone
+    assert imbalance.imbalance_ratio(np.asarray(co), np.asarray(va)) < 3.0
+
+
+def test_irregular_imbalance_reduced():
+    S, slots = 16, 12
+    costs = imbalance.irregular_costs(S, slots, seed=1)
+    # queues keep headroom (a full queue cannot accept steals — physical
+    # invariant; serving/training queues are sized with slack)
+    valid = np.ones_like(costs, bool)
+    valid[:, 8:] = False
+    before = imbalance.imbalance_ratio(costs * valid)
+    items, v, c = _mk(S, slots, costs, valid)
+    it, va, co, _ = balancer.rebalance_reference(items, v, c, rounds=4)
+    after = imbalance.imbalance_ratio(np.asarray(co), np.asarray(va))
+    assert after < before
+
+
+def test_full_queues_cannot_deadlock_items():
+    """Fully-loaded queues: nothing moves, nothing drops."""
+    S, slots = 4, 4
+    costs = imbalance.irregular_costs(S, slots, seed=2)
+    valid = np.ones_like(costs, bool)
+    items, v, c = _mk(S, slots, costs, valid)
+    before = sorted(map(tuple, np.asarray(items)[valid]))
+    it, va, co, dropped = balancer.rebalance_reference(items, v, c, rounds=3)
+    after = sorted(map(tuple, np.asarray(it)[np.asarray(va)]))
+    assert int(dropped) == 0 and before == after
+
+
+def test_serving_occupancy_improves():
+    from repro.runtime import serve_loop
+    rng = np.random.default_rng(0)
+    # 8 shards × (4 active slots + 12 backlog), heavy-tailed lengths
+    lens = np.minimum((rng.pareto(1.2, (8, 16)) * 15 + 3), 60).astype(np.int32)
+    cfg_on = serve_loop.ServeConfig(batch_slots=4, rebalance=True,
+                                    rebalance_every=2)
+    cfg_off = serve_loop.ServeConfig(batch_slots=4, rebalance=False)
+    on = serve_loop.simulate_serving(None, cfg_on, lens)
+    off = serve_loop.simulate_serving(None, cfg_off, lens)
+    assert on.completed == off.completed  # same requests served
+    assert on.moved > 0
+    assert on.occupancy > off.occupancy
+    assert on.steps <= off.steps

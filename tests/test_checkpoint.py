@@ -1,0 +1,112 @@
+"""Checkpointing: roundtrip, async, pruning, elastic task redistribution."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import Checkpointer, TaskCheckpointer
+from repro.checkpoint.task_checkpoint import pack_state, unpack_state
+from repro.core import deque as dq
+
+
+def _tree(key):
+    k1, k2 = jax.random.split(key)
+    return {"a": jax.random.normal(k1, (4, 8)),
+            "nested": {"b": jax.random.normal(k2, (3,)),
+                       "c": jnp.arange(5, dtype=jnp.int32)}}
+
+
+def test_roundtrip(tmp_path):
+    ckpt = Checkpointer(str(tmp_path), async_save=False)
+    tree = _tree(jax.random.PRNGKey(0))
+    ckpt.save(7, tree)
+    restored, step = ckpt.restore(jax.tree.map(jnp.zeros_like, tree))
+    assert step == 7
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), tree, restored)
+
+
+def test_async_save_and_prune(tmp_path):
+    ckpt = Checkpointer(str(tmp_path), keep=2, async_save=True)
+    tree = _tree(jax.random.PRNGKey(1))
+    for s in (1, 2, 3, 4):
+        ckpt.save(s, jax.tree.map(lambda x: x + s, tree))
+    ckpt.wait()
+    assert ckpt.all_steps() == [3, 4]
+    restored, step = ckpt.restore(tree)
+    assert step == 4
+    np.testing.assert_allclose(np.asarray(restored["a"]),
+                               np.asarray(tree["a"]) + 4)
+
+
+def test_shape_mismatch_rejected(tmp_path):
+    ckpt = Checkpointer(str(tmp_path), async_save=False)
+    ckpt.save(0, {"a": jnp.zeros((4,))})
+    with pytest.raises(ValueError, match="shape mismatch"):
+        ckpt.restore({"a": jnp.zeros((5,))})
+
+
+def test_restart_continues_training(tmp_path):
+    """Save at step k, restore, verify opt state count continues."""
+    from repro.optim import adamw
+    params = {"w": jnp.ones((3,))}
+    state = adamw.init(params)
+    cfg = adamw.AdamWConfig(lr_peak=0.1, warmup_steps=1, total_steps=10)
+    for _ in range(3):
+        g = {"w": jnp.ones((3,))}
+        params, state, _ = adamw.update(cfg, g, state, params)
+    ckpt = Checkpointer(str(tmp_path), async_save=False)
+    ckpt.save(3, (params, state))
+    (params2, state2), step = ckpt.restore((params, state))
+    assert step == 3 and int(state2.count) == 3
+    params3, state3, _ = adamw.update(cfg, {"w": jnp.ones((3,))}, state2, params2)
+    assert int(state3.count) == 4
+
+
+# --------------------------------------------------------------------------- #
+# Task-level checkpointing (elastic constellation)
+# --------------------------------------------------------------------------- #
+def _deques_with_tasks(W, cap, counts):
+    state = dq.make(W, cap)
+    for w, n in enumerate(counts):
+        for i in range(n):
+            task = jnp.zeros((W, 4), jnp.int32).at[w].set(
+                jnp.asarray([2, w, i, 0]))
+            mask = jnp.arange(W) == w
+            state, ok = dq.push_top(state, task, mask)
+            assert bool(ok[w])
+    return state
+
+
+@pytest.mark.parametrize("new_W", [4, 16, 7])
+def test_task_checkpoint_elastic_redistribution(new_W):
+    W, cap = 8, 16
+    counts = [5, 0, 3, 1, 0, 0, 2, 7]
+    acc = np.arange(W, dtype=np.int64) * 11
+    state = _deques_with_tasks(W, cap, counts)
+    packed = pack_state(state, acc)
+    new_deques, new_acc = unpack_state(packed, new_W, cap)
+    # every task preserved exactly once
+    assert int(new_deques.size.sum()) == sum(counts)
+    all_tasks = set()
+    for w in range(new_W):
+        for t in dq.to_list(new_deques, w):
+            all_tasks.add(t)
+    assert len(all_tasks) == sum(counts)
+    # accumulator checksum preserved
+    assert int(np.asarray(new_acc, np.int64).sum() % (2**31 - 1)) \
+        == int(acc.sum() % (2**31 - 1))
+
+
+def test_task_checkpointer_roundtrip(tmp_path):
+    W, cap = 4, 8
+    state = _deques_with_tasks(W, cap, [2, 1, 0, 3])
+    acc = np.asarray([1, 2, 3, 4], np.int64)
+    tc = TaskCheckpointer(str(tmp_path))
+    tc.save(5, state, acc)
+    (deques, acc2), step = tc.restore(W, cap)
+    assert step == 5
+    assert int(deques.size.sum()) == 6

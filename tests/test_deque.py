@@ -1,0 +1,100 @@
+"""Work-stealing deque: property tests against a Python reference model."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import deque as dq
+
+
+class PyDeque:
+    """Reference model: list with owner top ops + thief bottom steals."""
+
+    def __init__(self, cap):
+        self.items = []
+        self.cap = cap
+
+    def push(self, task):
+        if len(self.items) >= self.cap:
+            return False
+        self.items.append(task)
+        return True
+
+    def pop(self):
+        return self.items.pop() if self.items else None
+
+    def steal(self, k):
+        k = min(k, len(self.items))
+        out = self.items[:k]
+        self.items = self.items[k:]
+        return out
+
+
+ops_strategy = st.lists(
+    st.one_of(
+        st.tuples(st.just("push"), st.integers(1, 1000)),
+        st.tuples(st.just("pop"), st.just(0)),
+        st.tuples(st.just("steal"), st.integers(1, 3)),
+    ),
+    min_size=1, max_size=60,
+)
+
+
+@given(ops_strategy, st.integers(2, 16))
+@settings(max_examples=40, deadline=None)
+def test_deque_matches_reference(ops, cap):
+    W = 3  # exercise masking: only worker 1 is active
+    state = dq.make(W, cap)
+    ref = PyDeque(cap)
+    active = jnp.asarray([False, True, False])
+    for op, arg in ops:
+        if op == "push":
+            task = jnp.asarray([[0, arg, 0, 0]] * W, jnp.int32)
+            state, ok = dq.push_top(state, task, active)
+            assert bool(ok[1]) == ref.push(arg)
+            assert not bool(ok[0]) and not bool(ok[2])
+        elif op == "pop":
+            state, task, ok = dq.pop_top(state, active)
+            expected = ref.pop()
+            assert bool(ok[1]) == (expected is not None)
+            if expected is not None:
+                assert int(task[1, 1]) == expected
+        else:  # steal
+            want = jnp.asarray([0, arg, 0], jnp.int32)
+            k = min(arg, int(state.size[1]))
+            got = [int(dq.peek_bottom(state, jnp.full((W,), r))[1, 1])
+                   for r in range(k)]
+            state = dq.steal_bottom(state, want)
+            assert got == ref.steal(arg)
+        assert int(state.size[1]) == len(ref.items)
+        # inactive workers untouched
+        assert int(state.size[0]) == 0 and int(state.size[2]) == 0
+    # final content identical bottom→top
+    assert [t[1] for t in dq.to_list(state, 1)] == ref.items
+
+
+@given(st.integers(1, 8), st.integers(0, 8))
+@settings(max_examples=20, deadline=None)
+def test_push_many_overflow_accounting(count, pre_fill):
+    cap = 8
+    state = dq.make(1, cap)
+    for i in range(pre_fill):
+        state, _ = dq.push_top(state, jnp.asarray([[1, i, 0, 0]]),
+                               jnp.asarray([True]))
+    tasks = jnp.arange(8 * 4, dtype=jnp.int32).reshape(1, 8, 4)
+    state, overflow = dq.push_top_many(state, tasks, jnp.asarray([count]))
+    expected_pushed = min(count, cap - pre_fill)
+    assert int(state.size[0]) == pre_fill + expected_pushed
+    assert int(overflow[0]) == count - expected_pushed
+
+
+def test_ring_wraparound():
+    state = dq.make(1, 4)
+    t = jnp.asarray([True])
+    for i in range(4):
+        state, _ = dq.push_top(state, jnp.asarray([[0, i, 0, 0]]), t)
+    state = dq.steal_bottom(state, jnp.asarray([2]))  # bot → 2
+    for i in (4, 5):
+        state, ok = dq.push_top(state, jnp.asarray([[0, i, 0, 0]]), t)
+        assert bool(ok[0])
+    assert [x[1] for x in dq.to_list(state, 0)] == [2, 3, 4, 5]

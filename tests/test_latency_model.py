@@ -1,0 +1,48 @@
+"""Analytical model of §3.3 — Table 1, Eq. 1, Ineq. 2."""
+
+import numpy as np
+import pytest
+
+from repro.core import latency
+
+
+def test_table1_exact():
+    rows = latency.table1()
+    got = [(r.nodes, round(r.threshold, 1), round(r.neighbor_rt_ms),
+            round(r.global_rt_ms)) for r in rows]
+    # paper Table 1: thresholds 3.3/6.7/13.3/26.7; global RT 33/67/133/267 ms
+    assert got == [(25, 3.3, 10, 33), (100, 6.7, 10, 67),
+                   (400, 13.3, 10, 133), (1600, 26.7, 10, 267)]
+
+
+def test_speedup_matches_paper_400():
+    # §4.2: "each neighbor-only steal attempt would complete roughly 13×
+    # faster" for N=400
+    assert abs(latency.speedup_per_attempt(400) - 13.333) < 0.01
+
+
+def test_eq1_expected_time():
+    # E[T] = RT / P
+    assert latency.neighbor_expected_time(0.5, tau=5e-3) == pytest.approx(0.02)
+    assert latency.global_expected_time(100, 1.0, tau=5e-3) == pytest.approx(
+        2 * (2 / 3) * 10 * 5e-3)
+
+
+def test_ineq2_threshold():
+    # neighbor wins iff P_g/P_n < (2/3)√N
+    n = 100
+    th = latency.threshold(n)  # 6.67
+    assert latency.neighbor_wins(n, p_global=0.6, p_neighbor=0.1)  # ratio 6 < th
+    assert not latency.neighbor_wins(n, p_global=0.7, p_neighbor=0.1)  # 7 > th
+
+
+def test_initial_phase_duration():
+    # §3.3: ≈400 ms for N=400, τ=5 ms
+    assert latency.initial_phase_duration(400, 5e-3) == pytest.approx(0.4)
+
+
+def test_monotone_in_n():
+    ns = np.array([25, 100, 400, 1600])
+    rt = latency.global_round_trip(ns)
+    assert (np.diff(rt) > 0).all()
+    assert np.allclose(latency.neighbor_round_trip(), 0.01)

@@ -1,0 +1,43 @@
+"""Structural proof of the paper's single-hop property: the compiled HLO of
+the NEIGHBOR executor contains only collective-permutes (plus the
+termination psum), while GLOBAL needs all-gathers whose payload scales with
+the worker count. Runs in a subprocess (needs forced host devices)."""
+
+import subprocess
+import sys
+import textwrap
+
+
+def test_neighbor_hlo_is_single_hop_only():
+    code = textwrap.dedent("""
+        import os
+        os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=16'
+        import sys; sys.path.insert(0, 'src')
+        import jax
+        from repro.core import scheduler, stealing, tasks
+        from repro.launch.dryrun import collective_bytes
+
+        out = {}
+        for strat in (stealing.Strategy.NEIGHBOR, stealing.Strategy.GLOBAL):
+            mesh = jax.make_mesh((4, 4), ('row', 'col'))
+            cfg = scheduler.SchedulerConfig(strategy=strat, capacity=64,
+                                            max_rounds=16, steal_subrounds=1,
+                                            expansions_per_round=1)
+            wl = tasks.FibWorkload(n=16, cutoff=8)
+            run = scheduler.build_sharded_run(mesh, cfg, wl)
+            compiled = jax.jit(lambda: run()).lower().compile()
+            out[strat.value] = collective_bytes(compiled.as_text())
+
+        n, g = out['neighbor'], out['global']
+        # neighbor: no gathers/all-to-alls — every steal message is 1 hop
+        assert n.get('all-gather', 0) == 0, n
+        assert n.get('all-to-all', 0) == 0, n
+        assert n.get('collective-permute', 0) > 0, n
+        # global: needs all-gathers, with strictly more wire bytes
+        assert g.get('all-gather', 0) > 0, g
+        assert g['total'] > n['total'], (g['total'], n['total'])
+        print('COLLECTIVE_SCHEDULE_OK')
+    """)
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=900, cwd=".")
+    assert "COLLECTIVE_SCHEDULE_OK" in out.stdout, out.stdout + out.stderr

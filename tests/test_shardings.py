@@ -1,0 +1,77 @@
+"""Sharding rules: divisibility sanitation, full-arch spec coverage."""
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.launch import shardings as sh
+from repro.models import registry
+from repro.optim import adamw
+
+
+class FakeMesh:
+    """Shape-only stand-in (never touches devices)."""
+    def __init__(self, shape):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+MESH_MP = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+@pytest.mark.parametrize("arch", registry.list_archs())
+def test_param_specs_cover_and_divide(arch):
+    cfg = registry.get_config(arch)
+    fns = registry.get_fns(cfg)
+    params_abs = jax.eval_shape(lambda k: fns.init(k, cfg),
+                                jax.random.PRNGKey(0))
+    specs = sh.param_specs(params_abs, MESH)
+    flat_l, _ = jax.tree.flatten(params_abs)
+    flat_s = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    n_sharded = 0
+    total = sharded_bytes = 0
+    for leaf, spec in zip(flat_l, flat_s):
+        nbytes = int(np.prod(leaf.shape)) * leaf.dtype.itemsize
+        total += nbytes
+        factor = 1
+        for i, ax in enumerate(spec):
+            if ax is None:
+                continue
+            size = MESH.shape[ax] if isinstance(ax, str) else \
+                int(np.prod([MESH.shape[a] for a in ax]))
+            assert leaf.shape[i] % size == 0, (arch, leaf.shape, spec)
+            factor *= size
+        if factor > 1:
+            n_sharded += 1
+        sharded_bytes += nbytes // factor
+    # the overwhelming majority of bytes must actually shard
+    assert sharded_bytes / total < 0.05 or cfg.n_params() < 1e8, \
+        f"{arch}: only {total/sharded_bytes:.1f}x reduction"
+    assert n_sharded > 0
+
+
+def test_sanitize_drops_nondividing_axes():
+    spec = sh.sanitize(P("model", "data"), (51865, 384), MESH)
+    assert spec == P(None, "data")
+
+
+def test_batch_specs_pod_folds_into_dp():
+    import jax.numpy as jnp
+    batch = {"tokens": jax.ShapeDtypeStruct((256, 128), jnp.int32)}
+    s = sh.batch_specs(batch, MESH_MP)
+    assert s["tokens"] == P(("pod", "data"), None)
+    # unshardable batch stays replicated
+    b1 = {"tokens": jax.ShapeDtypeStruct((1, 128), jnp.int32)}
+    assert sh.batch_specs(b1, MESH_MP)["tokens"] == P()
+
+
+def test_cache_specs_long_dense_cache_time_sharded():
+    import jax.numpy as jnp
+    cache = {"k": jax.ShapeDtypeStruct((8, 128, 32768, 8, 128), jnp.bfloat16),
+             "v": jax.ShapeDtypeStruct((8, 128, 32768, 8, 128), jnp.bfloat16)}
+    s = sh.cache_specs(cache, MESH)
+    assert s["k"] == P(None, "data", "model", None, None)
+    small = {"k": jax.ShapeDtypeStruct((8, 128, 2048, 8, 128), jnp.bfloat16)}
+    assert sh.cache_specs(small, MESH)["k"] == P(None, "data", None, None, None)

@@ -1,0 +1,151 @@
+"""High-latency mesh simulator: exactness, latency accounting, fault
+tolerance (TC / supervision / malleable pre-shed), stragglers."""
+
+import numpy as np
+import pytest
+
+from repro.core import simulator, stealing, tasks, topology
+
+FIB = tasks.FibWorkload(n=24, cutoff=10, max_leaf_cost=8)
+MESH = topology.MeshTopology.square(16)
+EXPECT = FIB.expected_result()
+
+
+def run(cfg, fail=None, speed=None, wl=FIB, mesh=MESH):
+    return simulator.simulate(wl, mesh, cfg, fail_time=fail, speed=speed)
+
+
+@pytest.mark.parametrize("strategy", [stealing.Strategy.NEIGHBOR,
+                                      stealing.Strategy.GLOBAL,
+                                      stealing.Strategy.ADAPTIVE])
+def test_exact_no_failures(strategy):
+    cfg = simulator.SimConfig(strategy=strategy, hop_ticks=3, capacity=256,
+                              max_ticks=300_000)
+    r = run(cfg)
+    assert r.result == EXPECT
+    assert r.overflow == 0
+
+
+def test_neighbor_steal_wait_is_2tau():
+    """Every completed neighbor attempt costs exactly 2·hop_ticks of waiting
+    (assumption (ii): neighbor RTT = 2τ)."""
+    cfg = simulator.SimConfig(strategy=stealing.Strategy.NEIGHBOR, hop_ticks=4,
+                              capacity=256, max_ticks=300_000)
+    r = run(cfg)
+    # every completed attempt waits 2·hop_ticks (±1 tick of phase-boundary
+    # accounting); attempts still in flight at termination wait less
+    per_attempt = r.steal_wait_ticks / max(r.attempts, 1)
+    assert per_attempt <= 2 * 4
+    assert per_attempt >= 2 * 4 * 0.75
+
+
+def test_global_pays_multihop():
+    """Global steals wait ≥ 2τ and on average strictly more (multi-hop)."""
+    n_cfg = simulator.SimConfig(strategy=stealing.Strategy.NEIGHBOR,
+                                hop_ticks=5, capacity=256, max_ticks=500_000)
+    g_cfg = simulator.SimConfig(strategy=stealing.Strategy.GLOBAL,
+                                hop_ticks=5, capacity=256, max_ticks=500_000)
+    rn, rg = run(n_cfg), run(g_cfg)
+    wait_per_attempt_n = rn.steal_wait_ticks / max(rn.attempts, 1)
+    wait_per_attempt_g = rg.steal_wait_ticks / max(rg.attempts, 1)
+    assert wait_per_attempt_g > wait_per_attempt_n
+    # bytes×hops (congestion) must also be higher for global
+    assert rg.bytes_hops / max(rg.attempts, 1) > rn.bytes_hops / max(rn.attempts, 1)
+
+
+def test_tc_exact_under_failures():
+    W = MESH.num_workers
+    ft = -np.ones(W, np.int32)
+    ft[3], ft[7], ft[12] = 100, 250, 400
+    cfg = simulator.SimConfig(strategy=stealing.Strategy.NEIGHBOR, hop_ticks=3,
+                              capacity=256, recovery=simulator.Recovery.TC,
+                              ckpt_interval=40, max_ticks=500_000)
+    r = run(cfg, fail=ft)
+    assert r.result == EXPECT
+    assert r.ckpt_bytes > 0
+
+
+def test_tc_exact_global_strategy_adjacent_failures():
+    W = MESH.num_workers
+    ft = -np.ones(W, np.int32)
+    ft[1], ft[2] = 50, 51  # adjacent ticks
+    cfg = simulator.SimConfig(strategy=stealing.Strategy.GLOBAL, hop_ticks=2,
+                              capacity=256, recovery=simulator.Recovery.TC,
+                              ckpt_interval=25, max_ticks=500_000)
+    assert run(cfg, fail=ft).result == EXPECT
+
+
+@pytest.mark.parametrize("schedule", [
+    [(1, 50), (2, 51), (3, 52)],              # cascade: rollback resurrects
+    [(4, 80), (8, 80), (12, 80)],             # simultaneous at ckpt boundary
+    [(1, 50), (2, 50), (5, 90), (6, 130), (9, 170)],
+])
+def test_tc_exact_adversarial_schedules(schedule):
+    """Regression: scatter-clobber in _transplant and snapshot resurrection
+    of long-dead workers (both found by these schedules)."""
+    W = MESH.num_workers
+    ft = -np.ones(W, np.int32)
+    for w, t in schedule:
+        ft[w] = t
+    cfg = simulator.SimConfig(strategy=stealing.Strategy.NEIGHBOR, hop_ticks=3,
+                              capacity=256, recovery=simulator.Recovery.TC,
+                              ckpt_interval=40, max_ticks=500_000)
+    assert run(cfg, fail=ft).result == EXPECT
+
+
+def test_preshed_exact():
+    """Malleability (§5/§6): predictable shutdowns with warning lose nothing."""
+    W = MESH.num_workers
+    ft = -np.ones(W, np.int32)
+    ft[5], ft[9], ft[14] = 120, 300, 500
+    cfg = simulator.SimConfig(strategy=stealing.Strategy.NEIGHBOR, hop_ticks=3,
+                              capacity=256, preshed=True, warn_ticks=10,
+                              max_ticks=500_000)
+    assert run(cfg, fail=ft).result == EXPECT
+
+
+def test_supervision_exact_single_early_failure():
+    W = MESH.num_workers
+    ft = -np.ones(W, np.int32)
+    ft[7] = 60
+    cfg = simulator.SimConfig(strategy=stealing.Strategy.NEIGHBOR, hop_ticks=3,
+                              capacity=256,
+                              recovery=simulator.Recovery.SUPERVISION,
+                              max_ticks=500_000)
+    assert run(cfg, fail=ft).result == EXPECT
+
+
+def test_no_recovery_loses_work():
+    W = MESH.num_workers
+    ft = -np.ones(W, np.int32)
+    ft[5] = 150
+    cfg = simulator.SimConfig(strategy=stealing.Strategy.NEIGHBOR, hop_ticks=3,
+                              capacity=256, recovery=simulator.Recovery.NONE,
+                              max_ticks=500_000)
+    r = run(cfg, fail=ft)
+    assert r.result != EXPECT  # the baseline really does lose work
+
+
+def test_stragglers_exact_but_slower():
+    W = MESH.num_workers
+    sp = np.ones(W, np.int32)
+    sp[[2, 5, 11]] = 4
+    cfg = simulator.SimConfig(strategy=stealing.Strategy.NEIGHBOR, hop_ticks=3,
+                              capacity=256, max_ticks=500_000)
+    r_slow = run(cfg, speed=sp)
+    r_fast = run(cfg)
+    assert r_slow.result == EXPECT
+    assert r_slow.ticks >= r_fast.ticks  # stealing absorbs but can't erase
+
+
+def test_neighbor_beats_global_at_high_latency():
+    """The paper's central prediction (§3.3): with real hop latency,
+    neighbor-only finishes sooner."""
+    wl = tasks.FibWorkload(n=26, cutoff=10, max_leaf_cost=8)
+    mesh = topology.MeshTopology.square(25)
+    times = {}
+    for strat in (stealing.Strategy.NEIGHBOR, stealing.Strategy.GLOBAL):
+        cfg = simulator.SimConfig(strategy=strat, hop_ticks=8, capacity=256,
+                                  max_ticks=1_000_000)
+        times[strat] = simulator.simulate(wl, mesh, cfg).ticks
+    assert times[stealing.Strategy.NEIGHBOR] < times[stealing.Strategy.GLOBAL]

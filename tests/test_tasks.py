@@ -1,0 +1,92 @@
+"""FIB/UTS task-tree encodings vs host oracles."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import tasks
+
+
+def test_fib_mod_table():
+    t = tasks.fib_mod_table()
+    assert t[10] == 55 and t[20] == 6765
+    # modular consistency at the wrap point
+    assert (int(t[47]) == (int(t[46]) + int(t[45])) % int(tasks.RESULT_MOD))
+
+
+def test_fib_workload_oracles():
+    wl = tasks.FibWorkload(n=20, cutoff=5, max_leaf_cost=8)
+    # expected_nodes via independent recursion
+    def nodes(n):
+        return 1 if n <= 5 else 1 + nodes(n - 1) + nodes(n - 2)
+    assert wl.expected_nodes() == nodes(20)
+    assert wl.expected_result() == 6765
+
+
+def test_fib_expand_structure():
+    wl = tasks.FibWorkload(n=10, cutoff=4)
+    tbl = wl.tables()
+    task = jnp.asarray([[tasks.KIND_FIB, 10, 0, 0],
+                        [tasks.KIND_FIB, 3, 0, 0]], jnp.int32)
+    ex = tasks.expand(task, jnp.asarray([True, True]), tbl)
+    assert int(ex["n_children"][0]) == 2          # internal node
+    assert int(ex["children"][0, 0, 1]) == 9
+    assert int(ex["children"][0, 1, 1]) == 8
+    assert int(ex["n_children"][1]) == 0          # leaf (3 <= cutoff)
+    assert int(ex["value"][1]) == 2               # fib(3)
+
+
+def test_uts_host_device_child_count_agree():
+    for depth in range(0, 8):
+        for seed in (19, 12345, 999999):
+            host = tasks.host_child_count(depth, seed, 3.0, 8)
+            dev = tasks._uts_child_count(
+                jnp.asarray([depth]), jnp.asarray([seed]),
+                jnp.float32(3.0), jnp.int32(8))
+            assert host == int(dev[0])
+
+
+def test_uts_chunking_preserves_children():
+    """Expanding a node with m>7 children emits chunks that, fully expanded,
+    yield exactly m children."""
+    wl = tasks.UtsWorkload(b0=4.0, d_max=6, root_seed=3)
+    tbl = wl.tables()
+    # find a seed with many children
+    seed = None
+    for s in range(200):
+        if tasks.host_child_count(0, s, 4.0, 6) > 10:
+            seed = s
+            break
+    assert seed is not None
+    m = tasks.host_child_count(0, seed, 4.0, 6)
+    emitted = []
+    frontier = [np.array([tasks.KIND_UTS, 0, seed, 0], np.int32)]
+    while frontier:
+        t = frontier.pop()
+        ex = tasks.expand(jnp.asarray(t[None]), jnp.asarray([True]), tbl)
+        nc = int(ex["n_children"][0])
+        for i in range(nc):
+            child = np.asarray(ex["children"][0, i])
+            if child[0] == tasks.KIND_CHUNK:
+                frontier.append(child)
+            else:
+                emitted.append(tuple(child))
+    assert len(emitted) == m
+    assert len(set(emitted)) == m  # all distinct seeds
+
+
+@given(st.integers(0, 2**30), st.integers(0, 64))
+@settings(max_examples=50, deadline=None)
+def test_child_seed_deterministic_and_nonneg(seed, idx):
+    a = tasks.host_child_seed(seed, idx)
+    b = int(tasks.child_seed(jnp.asarray([seed]), jnp.asarray([idx]))[0])
+    assert a == b and a >= 0
+
+
+def test_uts_tree_oracle_small():
+    wl = tasks.UtsWorkload(b0=2.0, d_max=6, root_seed=42)
+    n = wl.count_tree()
+    assert n >= 1
+    # deterministic
+    assert n == tasks.UtsWorkload(b0=2.0, d_max=6, root_seed=42).count_tree()

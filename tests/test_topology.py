@@ -1,0 +1,76 @@
+"""Mesh topology invariants (paper §2.1/§4.1)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import topology as topo
+
+
+def test_square_mapping_paper():
+    # paper §4.1: side length ceil(sqrt(C)), rows filled in order
+    m = topo.MeshTopology.square(640)
+    assert m.cols == 26 and m.rows == 25  # ceil(sqrt(640)) = 26
+    assert m.num_workers == 640
+
+
+def test_neighbor_counts_square():
+    m = topo.MeshTopology.square(25)
+    counts = m.neighbor_counts
+    assert counts.min() == 2 and counts.max() == 4
+    assert (counts == 4).sum() == 9  # interior of a 5x5
+
+
+def test_last_row_corner_has_two_neighbors():
+    # paper §4.1 (at its own config sizes): "processes at the end of the
+    # last row have two neighbors, the same as any other corner process".
+    m = topo.MeshTopology.square(40)  # paper's 1-node case: 7-wide, ragged
+    last = m.num_workers - 1          # (5, 4): north + west
+    assert len(m.neighbors_of(last)) == 2
+    # degenerate 1-worker last row: only the north neighbor remains
+    m13 = topo.MeshTopology.square(13)
+    assert len(m13.neighbors_of(12)) == 1
+
+
+@given(st.integers(2, 200))
+@settings(max_examples=30, deadline=None)
+def test_neighbor_symmetry(n):
+    m = topo.MeshTopology.square(n)
+    tab = m.neighbor_table
+    for w in range(n):
+        for nb in m.neighbors_of(w):
+            assert w in m.neighbors_of(nb)
+
+
+@given(st.integers(2, 150))
+@settings(max_examples=25, deadline=None)
+def test_hops_are_manhattan_and_symmetric(n):
+    m = topo.MeshTopology.square(n)
+    h = m.hop_matrix
+    assert (h == h.T).all()
+    assert (np.diag(h) == 0).all()
+    # neighbors are exactly hop distance 1
+    for w in range(min(n, 20)):
+        for nb in m.neighbors_of(w):
+            assert h[w, nb] == 1
+
+
+def test_mean_hops_approaches_two_thirds_sqrt_n():
+    # paper §3.3: average hops ≈ (2/3)√N for a full √N×√N mesh
+    for side in (10, 20, 30):
+        m = topo.MeshTopology.grid(side, side)
+        expected = topo.theoretical_mean_hops(side * side)
+        assert abs(m.mean_hops() - expected) / expected < 0.11
+
+
+def test_torus_wraps():
+    m = topo.MeshTopology.grid(4, 4, torus=True)
+    assert (m.neighbor_counts == 4).all()
+    assert m.hops(0, 3) == 1  # wrap along the row
+
+
+def test_ppermute_pairs_valid():
+    m = topo.MeshTopology.grid(3, 3)
+    for d in range(4):
+        for src, dst in m.ppermute_pairs(d):
+            assert m.hops(src, dst) == 1
