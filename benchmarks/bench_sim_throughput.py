@@ -1,0 +1,117 @@
+"""Simulator throughput: event-leaping stepper vs the one-tick oracle.
+
+Measures wall-clock and ticks-simulated-per-second for GLOBAL / NEIGHBOR /
+ADAPTIVE at W ∈ {100, 640, 2500} on the `paper_mesh` granularity-faithful
+workload (`fib_granular`: leaf cost >> steal RTT, the paper's regime).
+Both steppers are timed on the SAME simulated horizon (a per-W tick cap
+keeps the one-tick baseline affordable; leap-mode full runs finish far
+beyond it), so `speedup` is a like-for-like wall-clock ratio.
+
+What to expect (CPU, W=100, hop_ticks=5):
+
+  * GLOBAL — utilization ~0.99, thieves spend their idle time in multi-hop
+    flights: dead ticks dominate and the leap factor (ticks/events) is
+    ~8x, hence >= 5x wall-clock speedup.
+  * NEIGHBOR — the famine-churn regime the paper studies: distant idle
+    workers re-probe empty neighbors every 2τ, so nearly every tick
+    carries an event and leap ≈ 1x. The win here is the O(W log W) grant
+    resolution: W=2500 never materializes a (W, W) intermediate in the
+    per-tick path (the seed's pairwise matrices would be 25 MB/tick).
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.bench_sim_throughput            # sweep
+  PYTHONPATH=src python -m benchmarks.bench_sim_throughput --quick    # CI smoke
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+from repro.configs import paper_mesh
+from repro.core import simulator, stealing, topology
+from .common import emit
+
+STRATS = {
+    "global": stealing.Strategy.GLOBAL,
+    "neighbor": stealing.Strategy.NEIGHBOR,
+    "adaptive": stealing.Strategy.ADAPTIVE,
+}
+
+# Shared simulated horizon per W (the one-tick oracle pays ~0.5-5 ms/tick
+# on CPU; the cap keeps its measurement to ~a minute per config).
+TICK_CAPS = {100: 60_000, 640: 24_000, 2500: 6_000}
+# ADAPTIVE needs the radius-2 table (O(W^2) python init) — skip at 2500.
+SKIP = {(2500, "adaptive")}
+
+
+def _run(wl, mesh, strategy, step_mode, max_ticks, hop_ticks, capacity):
+    cfg = simulator.SimConfig(strategy=strategy, hop_ticks=hop_ticks,
+                              capacity=capacity, max_ticks=max_ticks,
+                              step_mode=step_mode)
+    t0 = time.perf_counter()
+    r = simulator.simulate(wl, mesh, cfg)
+    compile_wall = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    r = simulator.simulate(wl, mesh, cfg)
+    wall = time.perf_counter() - t0
+    return r, wall, compile_wall
+
+
+def run(workers=(100, 640, 2500), strategies=("global", "neighbor", "adaptive"),
+        hop_ticks: int = 5, quick: bool = False):
+    wl = paper_mesh.CONFIG.fib_granular
+    capacity = 2048
+    results = {}
+    for W in workers:
+        mesh = topology.MeshTopology.square(W)
+        cap = TICK_CAPS.get(W, 20_000)
+        if quick:
+            cap = min(cap, 4_000)
+        for sname in strategies:
+            if (W, sname) in SKIP:
+                continue
+            per = {}
+            for mode in ("leap", "tick"):
+                r, wall, cwall = _run(wl, mesh, STRATS[sname], mode, cap,
+                                      hop_ticks, capacity)
+                per[mode] = dict(ticks=r.ticks, events=r.events, wall=wall,
+                                 compile_wall=cwall,
+                                 tps=r.ticks / max(wall, 1e-9),
+                                 util=r.utilization)
+            leap, tick = per["leap"], per["tick"]
+            assert leap["ticks"] == tick["ticks"], "steppers diverged"
+            speedup = tick["wall"] / max(leap["wall"], 1e-9)
+            leap_factor = leap["ticks"] / max(leap["events"], 1)
+            results[(W, sname)] = dict(per=per, speedup=speedup,
+                                       leap_factor=leap_factor)
+            emit(f"bench_sim/{sname}/W={W}", leap["wall"] * 1e6,
+                 f"ticks={leap['ticks']};events={leap['events']};"
+                 f"leap_factor={leap_factor:.1f}x;"
+                 f"leap_tps={leap['tps']:.0f};tick_tps={tick['tps']:.0f};"
+                 f"leap_wall={leap['wall']:.2f}s;tick_wall={tick['wall']:.2f}s;"
+                 f"speedup={speedup:.2f}x;util={leap['util']:.2f}")
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: W=100 only, tiny tick horizon")
+    ap.add_argument("--workers", type=int, nargs="+", default=None)
+    ap.add_argument("--strategies", nargs="+", default=None,
+                    choices=sorted(STRATS))
+    ap.add_argument("--hop-ticks", type=int, default=5)
+    args = ap.parse_args()
+    workers = tuple(args.workers) if args.workers else (
+        (100,) if args.quick else (100, 640, 2500))
+    strategies = tuple(args.strategies) if args.strategies else (
+        ("global", "neighbor") if args.quick
+        else ("global", "neighbor", "adaptive"))
+    print("name,us_per_call,derived")
+    run(workers=workers, strategies=strategies, hop_ticks=args.hop_ticks,
+        quick=args.quick)
+
+
+if __name__ == "__main__":
+    main()

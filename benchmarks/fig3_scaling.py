@@ -34,15 +34,18 @@ QUICK_WORKERS = (25, 49, 100)
 FULL_WORKERS = (25, 49, 100, 160, 320, 640)
 
 
-def run_once(workload, workers: int, strategy, seed: int, expansions: int,
-             capacity: int = 4096):
+def run_seeds(workload, workers: int, strategy, runs: int, expansions: int,
+              capacity: int = 4096):
+    """All seeds in one vmapped compilation (vs one while_loop per seed)."""
     mesh = topology.MeshTopology.square(workers)
     cfg = scheduler.SchedulerConfig(strategy=strategy, capacity=capacity,
-                                    max_rounds=2_000_000, seed=seed,
+                                    max_rounds=2_000_000,
                                     expansions_per_round=expansions)
-    r = scheduler.run_vectorized(workload, mesh, cfg)
-    assert r.overflow == 0
-    return r
+    rs = scheduler.run_vectorized_batch(workload, mesh, cfg,
+                                        seeds=range(runs))
+    for r in rs:
+        assert r.overflow == 0
+    return rs
 
 
 def run(worker_counts=QUICK_WORKERS, runs: int = 3, small: bool = True):
@@ -51,14 +54,11 @@ def run(worker_counts=QUICK_WORKERS, runs: int = 3, small: bool = True):
         for workers in worker_counts:
             per = {}
             for strat in (stealing.Strategy.GLOBAL, stealing.Strategy.NEIGHBOR):
-                rounds, ps = [], []
-                for seed in range(runs):
-                    r = run_once(wl, workers, strat, seed,
-                                 EXPANSIONS[wl_name])
-                    if wl_name == "FIB":
-                        assert r.result == wl.expected_result()
-                    rounds.append(r.rounds)
-                    ps.append(r.p_success)
+                rs = run_seeds(wl, workers, strat, runs, EXPANSIONS[wl_name])
+                if wl_name == "FIB":
+                    assert all(r.result == wl.expected_result() for r in rs)
+                rounds = [r.rounds for r in rs]
+                ps = [r.p_success for r in rs]
                 per[strat.value] = (float(np.mean(rounds)), float(np.mean(ps)))
             tg, pg = per["global"]
             tn, pn = per["neighbor"]

@@ -24,8 +24,22 @@ STRATS = {
 }
 
 
+def _mean_result(rs):
+    """Average the scalar stats of per-seed SimResults into one view."""
+    first = rs[0]
+    if len(rs) == 1:
+        return first
+    mean = lambda f: float(np.mean([getattr(r, f) for r in rs]))
+    return first._replace(
+        ticks=int(mean("ticks")), attempts=int(mean("attempts")),
+        successes=int(mean("successes")), p_success=mean("p_success"),
+        busy_ticks=int(mean("busy_ticks")),
+        steal_wait_ticks=int(mean("steal_wait_ticks")),
+        bytes_hops=mean("bytes_hops"), utilization=mean("utilization"))
+
+
 def run(sizes=(25, 64, 100, 196), hop_ticks=(2, 5, 10), small: bool = False,
-        strategies=("neighbor", "global", "adaptive")):
+        strategies=("neighbor", "global", "adaptive"), runs: int = 1):
     fib = tasks.FibWorkload(n=30 if not small else 26, cutoff=12,
                             max_leaf_cost=16)
     uts = tasks.UtsWorkload(b0=3.5 if not small else 3.0,
@@ -40,9 +54,11 @@ def run(sizes=(25, 64, 100, 196), hop_ticks=(2, 5, 10), small: bool = False,
                     cfg = simulator.SimConfig(
                         strategy=STRATS[sname], hop_ticks=tau, capacity=2048,
                         max_ticks=5_000_000)
-                    r = simulator.simulate(wl, mesh, cfg)
-                    assert r.overflow == 0
-                    per[sname] = r
+                    # all seeds in one vmapped compilation
+                    rs = simulator.simulate_batch(wl, mesh, cfg,
+                                                  seeds=range(runs))
+                    assert all(r.overflow == 0 for r in rs)
+                    per[sname] = _mean_result(rs)
                 rn, rg = per["neighbor"], per["global"]
                 ratio = (rg.p_success / max(rn.p_success, 1e-9))
                 th = float(latency.threshold(n))
@@ -65,9 +81,11 @@ def main():
     ap.add_argument("--small", action="store_true")
     ap.add_argument("--sizes", type=int, nargs="+", default=[25, 64, 100, 196])
     ap.add_argument("--taus", type=int, nargs="+", default=[2, 5, 10])
+    ap.add_argument("--runs", type=int, default=1,
+                    help="seeds per config (batched in one compiled call)")
     args = ap.parse_args()
     print("# mesh-latency study (paper future work §6)")
-    run(tuple(args.sizes), tuple(args.taus), args.small)
+    run(tuple(args.sizes), tuple(args.taus), args.small, runs=args.runs)
 
 
 if __name__ == "__main__":

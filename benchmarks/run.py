@@ -17,7 +17,7 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="paper-scale workloads (minutes-hours)")
     ap.add_argument("--only", default="",
-                    help="comma list: table1,fig3,fig4,mesh,moe,roofline")
+                    help="comma list: table1,fig3,fig4,mesh,sim,moe,roofline")
     args = ap.parse_args()
     small = not args.full
     only = set(args.only.split(",")) if args.only else None
@@ -44,6 +44,12 @@ def main() -> None:
                          small=small,
                          strategies=("neighbor", "global") if small
                          else ("neighbor", "global", "adaptive"))
+
+    if want("sim"):
+        from . import bench_sim_throughput
+        bench_sim_throughput.run(workers=(100,) if small else (100, 640, 2500),
+                                 strategies=("global", "neighbor"),
+                                 quick=small)
 
     if want("moe"):
         from . import moe_overflow

@@ -121,6 +121,38 @@ def peek_bottom_window(state: DequeState, window: int) -> jax.Array:
     return jnp.take_along_axis(state.buf, idx[:, :, None], axis=1)
 
 
+def export_bottom(state: DequeState, grants: jax.Array, width: int,
+                  use_kernel: bool = False):
+    """Extract `grants[w]` bottom records into a dense staging block and
+    advance each deque's bottom — the victim side of a steal round.
+
+    Returns (stolen, state): `stolen` is (W, width, T) with the first
+    min(grants, size)[w] rows of worker w's bottom window and zeros beyond;
+    thief t reads `stolen[victim[t], rank[t]]`. With `use_kernel=True` the
+    extraction runs through the Pallas `steal_compact` kernel (compiled on
+    TPU, interpret mode elsewhere); the jnp fallback is bit-identical —
+    both are oracle-checked against `kernels.ref.steal_compact_ref`.
+    """
+    # never advance the bottom past what the staging block exports: a
+    # grant beyond `width` would hand thieves duplicate records while the
+    # victim silently loses the real tasks
+    grants = jnp.minimum(grants, width)
+    if use_kernel:
+        from ..kernels import ops as kernel_ops  # lazy: pallas import is heavy
+
+        stolen, new_bot, new_size = kernel_ops.steal_compact(
+            state.buf, state.bot, state.size, grants)
+        assert stolen.shape[1] >= width, (
+            f"steal_compact staging width {stolen.shape[1]} < requested {width}"
+        )
+        return stolen[:, :width], DequeState(state.buf, new_bot, new_size)
+    g = jnp.minimum(grants, state.size)
+    ranks = jnp.arange(width)[None, :]
+    rows = peek_bottom_window(state, width)
+    stolen = jnp.where((ranks < g[:, None])[:, :, None], rows, 0)
+    return stolen, steal_bottom(state, g)
+
+
 def steal_bottom(state: DequeState, counts: jax.Array) -> DequeState:
     """Remove `counts[w]` tasks from worker w's bottom (already handed out).
 

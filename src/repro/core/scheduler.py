@@ -152,14 +152,13 @@ def _round(state: WorkerState, key, tables, mesh_tables, cfg: SchedulerConfig):
         victim = _select_victims(cfg, mesh_tables, subkey, is_thief, fails, W)
         plan = stealing.resolve_grants(victim, deque_.size,
                                        cfg.max_grants_per_victim)
-        # thieves gather their granted record from the victim's bottom slots
+        # victims export their granted bottom records as a dense staging
+        # block (same grant path as the latency simulator) and advance
         v = jnp.clip(plan.victim, 0, W - 1)
-        victim_bot = deque_.bot[v]
-        cap = dq.capacity(deque_)
-        slot = (victim_bot + plan.rank) % cap
-        stolen = deque_.buf[v, slot]  # (W, T)
-        # victims drop granted tasks from their bottom
-        deque_ = dq.steal_bottom(deque_, plan.taken)
+        stolen_blk, deque_ = dq.export_bottom(deque_, plan.taken,
+                                              stealing.GRANT_WIDTH)
+        stolen = stolen_blk[v, jnp.clip(plan.rank, 0,
+                                        stealing.GRANT_WIDTH - 1)]  # (W, T)
         # thieves push their loot (their deque is empty → never overflows)
         deque_, _ = dq.push_top(deque_, stolen, plan.got)
         attempts = attempts + is_thief.astype(jnp.int32)
@@ -173,8 +172,12 @@ def _round(state: WorkerState, key, tables, mesh_tables, cfg: SchedulerConfig):
     return new_state, any_live
 
 
-@partial(jax.jit, static_argnames=("workload", "mesh", "cfg"))
-def _run_jit(workload, mesh: topo.MeshTopology, cfg: SchedulerConfig, key0):
+def _run_core(workload, mesh: topo.MeshTopology, cfg: SchedulerConfig, key0):
+    assert cfg.max_grants_per_victim <= stealing.GRANT_WIDTH, (
+        f"max_grants_per_victim={cfg.max_grants_per_victim} exceeds the "
+        f"grant/export staging width GRANT_WIDTH={stealing.GRANT_WIDTH}: "
+        "thieves ranked beyond the staging block would receive duplicate "
+        "records while the victim loses the real tasks")
     tables = workload.tables()
     mesh_tables = {
         "neighbors": jnp.asarray(stealing.neighbor_list(mesh)),
@@ -198,13 +201,15 @@ def _run_jit(workload, mesh: topo.MeshTopology, cfg: SchedulerConfig, key0):
     return state, rounds
 
 
-def run_vectorized(workload, mesh: topo.MeshTopology,
-                   cfg: SchedulerConfig | None = None) -> RunResult:
-    """Execute `workload` on `mesh` and return aggregate statistics."""
-    cfg = cfg or SchedulerConfig()
-    key0 = jax.random.PRNGKey(cfg.seed)
-    state, rounds = _run_jit(workload, mesh, cfg, key0)
-    state = jax.device_get(state)
+_run_jit = partial(jax.jit, static_argnames=("workload", "mesh", "cfg"))(_run_core)
+
+
+@partial(jax.jit, static_argnames=("workload", "mesh", "cfg"))
+def _run_batch_jit(workload, mesh, cfg, keys):
+    return jax.vmap(lambda k: _run_core(workload, mesh, cfg, k))(keys)
+
+
+def _finalize_run(state, rounds) -> RunResult:
     attempts = int(state.attempts.sum())
     successes = int(state.successes.sum())
     return RunResult(
@@ -219,6 +224,33 @@ def run_vectorized(workload, mesh: topo.MeshTopology,
         per_worker_attempts=np.asarray(state.attempts),
         per_worker_successes=np.asarray(state.successes),
     )
+
+
+def run_vectorized(workload, mesh: topo.MeshTopology,
+                   cfg: SchedulerConfig | None = None) -> RunResult:
+    """Execute `workload` on `mesh` and return aggregate statistics."""
+    cfg = cfg or SchedulerConfig()
+    key0 = jax.random.PRNGKey(cfg.seed)
+    state, rounds = _run_jit(workload, mesh, cfg, key0)
+    return _finalize_run(jax.device_get(state), rounds)
+
+
+def run_vectorized_batch(workload, mesh: topo.MeshTopology,
+                         cfg: SchedulerConfig | None = None,
+                         seeds=(0,)) -> list[RunResult]:
+    """One executor run per seed in a single compiled, vmapped call.
+
+    `cfg.seed` is ignored; returns one `RunResult` per seed, identical to
+    serial `run_vectorized` calls with that seed (benchmark sweeps run all
+    their seeds in one compilation instead of one while_loop per seed)."""
+    cfg = cfg or SchedulerConfig()
+    seeds = list(seeds)
+    keys = jnp.stack([jax.random.PRNGKey(int(s)) for s in seeds])
+    states, rounds = jax.device_get(_run_batch_jit(workload, mesh, cfg, keys))
+    return [
+        _finalize_run(jax.tree.map(lambda x: x[i], states), rounds[i])
+        for i in range(len(seeds))
+    ]
 
 
 # =========================================================================== #
@@ -377,7 +409,13 @@ def build_sharded_run(device_mesh, cfg: SchedulerConfig, workload,
     """Return a jit-able `fn(key) -> (WorkerState, rounds)` sharded over
     `device_mesh` (axes "row","col"), one worker per device."""
     from jax.sharding import PartitionSpec as P
-    from jax import shard_map
+
+    try:  # jax >= 0.6 exposes shard_map at top level (check_vma spelling)
+        from jax import shard_map
+        sm_kwargs = {"check_vma": False}
+    except ImportError:  # older jax: experimental API, check_rep spelling
+        from jax.experimental.shard_map import shard_map
+        sm_kwargs = {"check_rep": False}
 
     R, C = device_mesh.devices.shape
     tables = workload.tables()
@@ -413,7 +451,7 @@ def build_sharded_run(device_mesh, cfg: SchedulerConfig, workload,
                        deque=dq.DequeState(pw, pw, pw),
                        acc=pw, work=pw, fails=pw, attempts=pw,
                        successes=pw, nodes=pw, overflow=pw, busy=pw), P()),
-                   check_vma=False)
+                   **sm_kwargs)
 
     root = jnp.asarray(workload.root_task())
     return lambda: jax.jit(fn)(root)

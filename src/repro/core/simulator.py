@@ -15,6 +15,43 @@ tick-stepped model of the constellation where
     one bottom task each while tasks last (§3.1 step 3-4: a failed attempt
     sends the thief straight back to victim selection).
 
+Event-leaping execution (``step_mode="leap"``, the default)
+-----------------------------------------------------------
+The model above is defined tick-by-tick, but almost all ticks are *dead*:
+every worker is either burning down a multi-tick leaf, or waiting out a
+steal-message flight, and the only state change is a uniform decrement.
+The leap stepper exploits this. Each `lax.while_loop` iteration
+
+  1. executes ONE tick with full semantics (expansion, grant resolution,
+     failures, checkpoints — exactly the code the one-tick oracle runs,
+     keyed by ``fold_in(key0, t)`` so randomness is a pure function of the
+     tick index, not of how we reached it); then
+  2. computes ``Δ = min`` over every pending event horizon — remaining
+     `work` on running workers (straggler-aware), in-flight steal `timer`s,
+     each worker's scheduled failure and pre-shed warning tick, and the
+     next checkpoint tick — and advances the clock by Δ in one fused step,
+     accumulating the per-tick stats (`busy` for burners, `steal_wait` for
+     in-flight thieves) in bulk.
+
+Iterations therefore scale with the number of *events* (task expansions,
+steal phase transitions, failures, checkpoints), not the number of ticks:
+with `hop_ticks` ≥ 1 or leaf costs > 1 the dead ticks collapse and
+constellation-scale sweeps (W ≥ 640) become tractable.
+
+Equivalence guarantee: because the event tick runs the unmodified one-tick
+code and the leap skips only ticks in which that code provably reduces to
+the bulk decrement, ``step_mode="leap"`` produces `SimResult`s identical to
+``step_mode="tick"`` (the seed one-tick stepper, kept as the test oracle) —
+same `result`, `ticks`, `nodes`, `attempts`, `successes`, and per-worker
+`busy`/`steal_wait`. The test suite asserts this over a matrix of
+strategy × recovery × {pre-shed, straggler} configs.
+
+Steal-conflict resolution uses sort-based segment ranking
+(`stealing.segment_prefix`) and the victim-side export runs through
+`deque.export_bottom` — optionally the Pallas `steal_compact` kernel
+(``use_steal_kernel``; auto-enabled on TPU) — so the per-tick path never
+materializes a (W, W) intermediate and W ≥ 2500 meshes fit comfortably.
+
 Beyond the paper's model, the simulator also covers the SEC failure modes the
 paper lists in §2.1/§5, each as an orthogonal, testable mechanism:
 
@@ -28,10 +65,10 @@ paper lists in §2.1/§5, each as an orthogonal, testable mechanism:
       - ``Recovery.SUPERVISION``: every victim remembers the tasks stolen
         from it (ring buffer of `supervision_slots`); when a thief dies its
         victims re-push the un-acknowledged records, and the dead worker's
-        local state is lost. Exact when the dead worker's loot was not itself
-        re-stolen (single-level protocol, per Kestor et al. [26]); the
-        general nested case needs subtree acks — documented limitation,
-        measured rather than hidden.
+        local state is lost. Exact when nothing was re-stolen from the dead
+        worker before its death (single-level protocol, per Kestor et al.
+        [26]); the general nested case needs subtree acks — documented
+        limitation, measured rather than hidden (see tests).
       - ``Recovery.NONE``: lost work stays lost (baseline for overhead).
   * **malleability** (§5/§6) — predictable shutdowns (battery/eclipse) give a
     `warn_ticks` lead; the doomed worker *pre-sheds*, pushing its entire
@@ -41,7 +78,10 @@ paper lists in §2.1/§5, each as an orthogonal, testable mechanism:
 
 Congestion accounting: every steal message contributes payload_bytes × hops
 to `bytes_hops`, the quantity behind the paper's §4.2 remark that multi-hop
-steals "would further penalize the global strategy".
+steals "would further penalize the global strategy". Totals accumulate in an
+exact 62-bit integer (a pair of int32 lanes with explicit carry — JAX's
+default int64-disabled mode would silently truncate) so long runs never lose
+congestion counts to float32 rounding.
 """
 
 from __future__ import annotations
@@ -65,6 +105,14 @@ PHASE_RESP = 2  # steal response in flight (victim → thief)
 
 STEAL_MSG_BYTES = 32  # request+reply payload estimate (task record + header)
 
+# Exact hop accounting: low lane holds 30 bits, high lane the carries.
+_HOP_LANE_BITS = 30
+_HOP_LANE_MASK = (1 << _HOP_LANE_BITS) - 1
+
+# Next-event sentinel: beyond any reachable tick (max_ticks is asserted
+# smaller), safe to take min/clip against without int32 overflow.
+_NEVER = jnp.int32(1 << 30)
+
 
 class Recovery(enum.Enum):
     NONE = "none"
@@ -77,10 +125,16 @@ class SimConfig:
     strategy: stealing.Strategy = stealing.Strategy.NEIGHBOR
     hop_ticks: int = 5                 # τ in work-unit ticks
     capacity: int = 1024
-    max_grants_per_victim: int = 4
+    max_grants_per_victim: int = 4     # per-round budget, <= stealing.GRANT_WIDTH
     escalate_after: int = 4
     max_ticks: int = 2_000_000
     seed: int = 0
+    # execution: "leap" = event-leaping stepper (fast, default);
+    # "tick" = the seed one-tick-per-iteration stepper (equivalence oracle)
+    step_mode: str = "leap"
+    # victim-side grant export via the Pallas steal_compact kernel;
+    # None = auto (compiled kernel on TPU, plain jnp gather elsewhere)
+    use_steal_kernel: bool | None = None
     # fault tolerance
     recovery: Recovery = Recovery.NONE
     ckpt_interval: int = 0             # TC: ticks between snapshots (0 = off)
@@ -110,8 +164,9 @@ class SimState(NamedTuple):
     nodes: jax.Array
     busy: jax.Array         # (W,) ticks spent working
     steal_wait: jax.Array   # (W,) ticks spent in REQ/RESP
-    bytes_hops: jax.Array   # () int64-ish float32: Σ msg_bytes × hops
-    ckpt_bytes: jax.Array   # () float32 checkpoint traffic
+    hops_lo: jax.Array      # () int32: Σ msg hops, low 30-bit lane (exact)
+    hops_hi: jax.Array      # () int32: Σ msg hops, carry lane
+    ckpt_count: jax.Array   # () int32 checkpoints taken
     overflow: jax.Array     # () int32
 
 
@@ -129,15 +184,42 @@ class SimResult(NamedTuple):
     overflow: int
     utilization: float
     per_worker_busy: np.ndarray
+    # loop iterations executed (== ticks in "tick" mode; == event ticks in
+    # "leap" mode — the leap factor is ticks / events)
+    events: int = 0
 
 
-def _mesh_tables(mesh: topo.MeshTopology):
-    return {
+def _mesh_tables(mesh: topo.MeshTopology, strategy: stealing.Strategy):
+    """Static lookup tables, built only for what `strategy` needs.
+
+    Hop distances are computed on the fly from (W, 2) coordinates — the
+    dense (W, W) hop matrix is never built, so W >= 4k meshes don't embed
+    multi-MB constants in the graph.
+    """
+    tbl = {
         "neighbors": jnp.asarray(stealing.neighbor_list(mesh)),
-        "radius2": jnp.asarray(stealing.radius2_list(mesh)),
-        "lifelines": jnp.asarray(stealing.lifeline_list(mesh.num_workers)),
-        "hops": jnp.asarray(mesh.hop_matrix),
+        "coords": jnp.asarray(mesh.coords),
     }
+    if strategy == stealing.Strategy.ADAPTIVE:
+        tbl["radius2"] = jnp.asarray(stealing.radius2_list(mesh))
+    if strategy == stealing.Strategy.LIFELINE:
+        tbl["lifelines"] = jnp.asarray(stealing.lifeline_list(mesh.num_workers))
+    return tbl
+
+
+def _hop_dist(mesh: topo.MeshTopology, coords: jax.Array, victim: jax.Array):
+    """Per-worker Manhattan hop count to `victim[w]` (torus-aware).
+
+    Matches `mesh.hop_matrix[w, victim[w]]` without materializing the
+    (W, W) matrix; O(W) gathers from the (W, 2) coordinate table.
+    """
+    v = jnp.clip(victim, 0, mesh.num_workers - 1)
+    dr = jnp.abs(coords[:, 0] - coords[v, 0])
+    dc = jnp.abs(coords[:, 1] - coords[v, 1])
+    if mesh.torus and mesh.num_workers == mesh.rows * mesh.cols:
+        dr = jnp.minimum(dr, mesh.rows - dr)
+        dc = jnp.minimum(dc, mesh.cols - dc)
+    return (dr + dc).astype(jnp.int32)
 
 
 def _select(cfg: SimConfig, tbl, key, is_thief, fails, W):
@@ -177,11 +259,10 @@ def _transplant(deque_, acc, src_mask, heir, overflow):
     src_counts = jnp.where(src_mask, deque_.size, 0)
 
     # Scatter: heir h receives all tasks of its dead sources, sequentially.
-    # Multiple sources per heir are handled by offsetting with a cumulative
-    # count per heir (deterministic by worker id).
-    same_heir = (heir[:, None] == heir[None, :]) & src_mask[:, None] & src_mask[None, :]
-    earlier = same_heir & (jnp.arange(W)[None, :] < jnp.arange(W)[:, None])
-    offset = jnp.sum(jnp.where(earlier, src_counts[None, :], 0), axis=1)
+    # Multiple sources per heir are handled by offsetting each source with
+    # the summed counts of its heir's earlier (lower worker id) sources —
+    # a sorted segment prefix, no (W, W) pairwise matrix.
+    offset = stealing.segment_prefix(heir, src_mask, src_counts)
 
     buf, bot, size = deque_.buf, deque_.bot, deque_.size
     heir_base = size[heir] + offset                        # insertion cursor per source
@@ -211,13 +292,60 @@ def _transplant(deque_, acc, src_mask, heir, overflow):
     return dq.DequeState(buf, bot, size), new_acc, overflow
 
 
-@partial(jax.jit, static_argnames=("workload", "mesh", "cfg"))
-def _sim_jit(workload, mesh: topo.MeshTopology, cfg: SimConfig, key0,
-             fail_time, speed):
+def _next_event(state: SimState, t, speed, fail_time, cfg: SimConfig, W: int):
+    """First tick >= t at which any worker does more than a bulk decrement.
+
+    Conservative (may return a tick with no visible state change — that
+    costs one loop iteration, never correctness): the leap stepper skips
+    exactly the ticks in which `tick_fn` provably reduces to
+    work/timer decrements plus busy/steal_wait accumulation.
+    """
+    alive = state.alive
+    # first straggler-active tick >= t per worker
+    t0 = t + ((speed - t % speed) % speed)
+    run = (state.phase == PHASE_RUN) & alive
+    # burning workers: event when work hits 0 on their work-th active tick
+    burn_ev = t0 + state.work * speed
+    # work-exhausted workers expand (deque nonempty) or start a steal
+    # (always possible for W > 1 under every strategy) at their next active
+    # tick — unless retired by a pre-shed warning (they idle until death).
+    if cfg.preshed:
+        retired = (fail_time >= 0) & (t >= fail_time - cfg.warn_ticks)
+    else:
+        retired = jnp.zeros((W,), bool)
+    idle_acts = (state.deque.size > 0) | (jnp.bool_(W > 1) & ~retired)
+    run_ev = jnp.where(state.work > 0, burn_ev,
+                       jnp.where(idle_acts, t0, _NEVER))
+    ev = jnp.where(run, run_ev, _NEVER)
+    # in-flight steal messages arrive when the timer reaches 0
+    flight = (state.phase != PHASE_RUN) & alive
+    ev = jnp.where(flight, t + jnp.maximum(state.timer - 1, 0), ev)
+    ne = jnp.min(ev)
+    # scheduled deaths (and pre-shed warnings) of still-alive workers
+    ne = jnp.minimum(ne, jnp.min(
+        jnp.where(alive & (fail_time >= t), fail_time, _NEVER)))
+    if cfg.preshed:
+        warn_at = fail_time - cfg.warn_ticks
+        ne = jnp.minimum(ne, jnp.min(
+            jnp.where(alive & (fail_time >= 0) & (warn_at >= t),
+                      warn_at, _NEVER)))
+    if cfg.ckpt_interval > 0:
+        ck = cfg.ckpt_interval
+        ne = jnp.minimum(ne, t + ((ck - t % ck) % ck))
+    return ne
+
+
+def _sim_core(workload, mesh: topo.MeshTopology, cfg: SimConfig, key0,
+              fail_time, speed):
     W = mesh.num_workers
-    tbl = _mesh_tables(mesh)
+    tbl = _mesh_tables(mesh, cfg.strategy)
     tables = workload.tables()
     S = cfg.supervision_slots
+    use_kernel = (cfg.use_steal_kernel if cfg.use_steal_kernel is not None
+                  else jax.default_backend() == "tpu")
+    assert cfg.max_grants_per_victim <= stealing.GRANT_WIDTH, (
+        f"max_grants_per_victim={cfg.max_grants_per_victim} exceeds the "
+        f"shared grant/export staging width GRANT_WIDTH={stealing.GRANT_WIDTH}")
 
     deques = dq.make(W, cfg.capacity)
     root = jnp.asarray(workload.root_task())
@@ -231,10 +359,8 @@ def _sim_jit(workload, mesh: topo.MeshTopology, cfg: SimConfig, key0,
         sup_buf=jnp.zeros((W, S, 4), jnp.int32),
         sup_thief=jnp.full((W, S), -1, jnp.int32), sup_n=z,
         attempts=z, successes=z, nodes=z, busy=z, steal_wait=z,
-        bytes_hops=jnp.float32(0), ckpt_bytes=jnp.float32(0),
-        overflow=jnp.int32(0))
-
-    ckpt_state_bytes = float(W * cfg.capacity * 4 * 4 + W * 4)  # deque + acc
+        hops_lo=jnp.int32(0), hops_hi=jnp.int32(0),
+        ckpt_count=jnp.int32(0), overflow=jnp.int32(0))
 
     def tick_fn(carry):
         state, snap, t = carry
@@ -289,16 +415,32 @@ def _sim_jit(workload, mesh: topo.MeshTopology, cfg: SimConfig, key0,
                 got=jnp.where(dead, False, merged.got))
 
         def apply_supervision(state):
-            # victims re-push records whose thief just died
+            # victims re-push records whose thief just died. Clearing uses
+            # the raw repush mask (dead victims forget too); the actual
+            # pushes additionally require the victim to be alive.
             repush = (state.sup_thief >= 0) & dying_now[jnp.clip(state.sup_thief, 0, W - 1)]
+            pushing = repush & (state.alive & ~dying_now)[:, None]
             deq = state.deque
-            ovf = state.overflow
-            # push back up to S records (static unroll over slots)
-            for s in range(S):
-                rec = state.sup_buf[:, s]
-                m = repush[:, s] & state.alive & ~dying_now
-                deq, ok = dq.push_top(deq, rec, m)
-                ovf = ovf + jnp.sum(m & ~ok)
+            # compact each victim's repushed records to the front, slot order
+            slot_order = jnp.argsort(~pushing, axis=1, stable=True)
+            recs = jnp.take_along_axis(state.sup_buf, slot_order[:, :, None],
+                                       axis=1)                    # (W, S, T)
+            n_re = jnp.sum(pushing, axis=1).astype(jnp.int32)
+            cap = dq.capacity(deq)
+            n_push = jnp.minimum(n_re, cap - deq.size)
+            ovf = state.overflow + jnp.sum(n_re - n_push)
+            # one batched scatter; dead lanes route to a padding row (see
+            # _transplant on XLA duplicate-scatter ordering)
+            j = jnp.arange(S)[None, :]
+            dst_slot = (deq.bot[:, None] + deq.size[:, None] + j) % cap
+            put = j < n_push[:, None]
+            dst_w = jnp.where(put, jnp.arange(W)[:, None], W)
+            buf_p = jnp.concatenate(
+                [deq.buf, jnp.zeros((1, cap, deq.buf.shape[2]),
+                                    deq.buf.dtype)], axis=0)
+            buf = buf_p.at[dst_w, dst_slot].set(
+                jnp.where(put[:, :, None], recs, buf_p[dst_w, dst_slot]))[:W]
+            deq = dq.DequeState(buf, deq.bot, deq.size + n_push)
             sup_thief = jnp.where(repush, -1, state.sup_thief)
             # dead worker's own state is lost
             deq = dq.DequeState(deq.buf, deq.bot,
@@ -326,10 +468,11 @@ def _sim_jit(workload, mesh: topo.MeshTopology, cfg: SimConfig, key0,
 
         # ------------- periodic checkpoint (TC) ---------------------------- #
         take_ckpt = (cfg.ckpt_interval > 0) & (t % max(cfg.ckpt_interval, 1) == 0)
-        snap = jax.tree.map(lambda s, c: jnp.where(take_ckpt, c, s), snap, state)
-        ckpt_bytes = state.ckpt_bytes + jnp.where(take_ckpt,
-                                                  jnp.float32(ckpt_state_bytes), 0.0)
-        state = state._replace(ckpt_bytes=ckpt_bytes)
+        if cfg.recovery == Recovery.TC:
+            # only TC consumes snapshots — other modes don't carry one
+            snap = jax.tree.map(lambda s, c: jnp.where(take_ckpt, c, s), snap, state)
+        state = state._replace(
+            ckpt_count=state.ckpt_count + take_ckpt.astype(jnp.int32))
 
         # ------------- phase RUN: work / expand / start steal -------------- #
         active_tick = alive & (t % speed == 0)  # stragglers advance slowly
@@ -356,14 +499,13 @@ def _sim_jit(workload, mesh: topo.MeshTopology, cfg: SimConfig, key0,
         victim_new = _select(cfg, tbl, key, idle, state.fails, W)
         has_victim = victim_new >= 0
         vhops = jnp.where(has_victim,
-                          tbl["hops"][jnp.arange(W), jnp.clip(victim_new, 0, W - 1)], 0)
+                          _hop_dist(mesh, tbl["coords"], victim_new), 0)
         start_req = idle & has_victim & alive
         phase = jnp.where(start_req, PHASE_REQ, state.phase)
         timer = jnp.where(start_req, vhops * cfg.hop_ticks, state.timer)
         victim = jnp.where(start_req, victim_new, state.victim)
         attempts = state.attempts + start_req.astype(jnp.int32)
-        bytes_hops = state.bytes_hops + jnp.sum(
-            jnp.where(start_req, vhops, 0)).astype(jnp.float32) * STEAL_MSG_BYTES
+        hop_units = jnp.sum(jnp.where(start_req, vhops, 0))
 
         # ------------- phase REQ: in flight / arrival ----------------------- #
         in_req = (phase == PHASE_REQ) & alive
@@ -374,20 +516,23 @@ def _sim_jit(workload, mesh: topo.MeshTopology, cfg: SimConfig, key0,
         plan = stealing.resolve_grants(jnp.where(valid_victim, victim, -1),
                                        deque_.size, cfg.max_grants_per_victim)
         v = jnp.clip(plan.victim, 0, W - 1)
-        cap = dq.capacity(deque_)
-        slot = (deque_.bot[v] + plan.rank) % cap
-        stolen = deque_.buf[v, slot]
-        deque_ = dq.steal_bottom(deque_, plan.taken)
+        stolen_blk, deque_ = dq.export_bottom(
+            deque_, plan.taken, stealing.GRANT_WIDTH, use_kernel=use_kernel)
+        stolen = stolen_blk[v, jnp.clip(plan.rank, 0, stealing.GRANT_WIDTH - 1)]
         got = plan.got
         # supervision: victims log (record, thief)
         if cfg.recovery == Recovery.SUPERVISION:
             sup_buf, sup_thief, sup_n = state.sup_buf, state.sup_thief, state.sup_n
-            # scatter: for each granted thief w, write into victim's buffer
+            # scatter: for each granted thief w, write into victim's buffer;
+            # ungranted lanes route to a padding row, not a no-op write
             vslot = jnp.clip(sup_n[v] + plan.rank, 0, S - 1)
-            sup_buf = sup_buf.at[v, vslot].set(
-                jnp.where(got[:, None], stolen, sup_buf[v, vslot]))
-            sup_thief = sup_thief.at[v, vslot].set(
-                jnp.where(got, jnp.arange(W), sup_thief[v, vslot]))
+            dst_v = jnp.where(got, v, W)
+            sup_buf = jnp.concatenate(
+                [sup_buf, jnp.zeros((1, S, 4), jnp.int32)],
+                axis=0).at[dst_v, vslot].set(stolen)[:W]
+            sup_thief = jnp.concatenate(
+                [sup_thief, jnp.full((1, S), -1, jnp.int32)],
+                axis=0).at[dst_v, vslot].set(jnp.arange(W))[:W]
             sup_n = sup_n + jnp.zeros((W,), jnp.int32).at[v].add(got.astype(jnp.int32))
             state = state._replace(sup_buf=sup_buf, sup_thief=sup_thief,
                                    sup_n=jnp.minimum(sup_n, S - 1))
@@ -395,12 +540,16 @@ def _sim_jit(workload, mesh: topo.MeshTopology, cfg: SimConfig, key0,
         resp_start = arriving
         phase = jnp.where(resp_start, PHASE_RESP, phase)
         back_hops = jnp.where(resp_start,
-                              tbl["hops"][jnp.arange(W), jnp.clip(victim, 0, W - 1)], 0)
+                              _hop_dist(mesh, tbl["coords"], victim), 0)
         timer = jnp.where(resp_start, back_hops * cfg.hop_ticks, timer)
-        bytes_hops = bytes_hops + jnp.sum(
-            jnp.where(resp_start, back_hops, 0)).astype(jnp.float32) * STEAL_MSG_BYTES
+        hop_units = hop_units + jnp.sum(jnp.where(resp_start, back_hops, 0))
         loot = jnp.where(resp_start[:, None], stolen, state.loot)
         got_flight = jnp.where(resp_start, got, state.got)
+
+        # exact 62-bit hop accumulation (int32 lanes with explicit carry)
+        lo = state.hops_lo + hop_units.astype(jnp.int32)
+        hops_hi = state.hops_hi + (lo >> _HOP_LANE_BITS)
+        hops_lo = lo & _HOP_LANE_MASK
 
         # ------------- phase RESP: in flight / delivery --------------------- #
         in_resp = (phase == PHASE_RESP) & alive
@@ -417,24 +566,112 @@ def _sim_jit(workload, mesh: topo.MeshTopology, cfg: SimConfig, key0,
             deque=deque_, acc=acc, work=work, fails=fails, phase=phase,
             timer=timer, victim=victim, loot=loot, got=got_flight & ~delivered,
             alive=alive, attempts=attempts, successes=successes, nodes=nodes,
-            busy=busy, steal_wait=steal_wait, bytes_hops=bytes_hops,
+            busy=busy, steal_wait=steal_wait, hops_lo=hops_lo, hops_hi=hops_hi,
             overflow=overflow)
         live = (jnp.sum(deque_.size) + jnp.sum(work)
                 + jnp.sum((got_flight & ~delivered).astype(jnp.int32))) > 0
         return new_state, snap, t + 1, live
 
+    def leap(state: SimState, t, live):
+        """Fused fast-forward over the dead ticks in [t, next_event).
+
+        Returns (state, t, live). If the window's bulk burn consumes the
+        LAST pending work, the one-tick stepper would have exited right
+        after the final burn tick — land exactly there (not on the next
+        event tick, which would run a phantom extra tick) and clear live.
+        """
+        ne = _next_event(state, t, speed, fail_time, cfg, W)
+        delta = jnp.clip(jnp.minimum(ne, cfg.max_ticks) - t, 0, None)
+        delta = jnp.where(live, delta, 0)
+        t0 = t + ((speed - t % speed) % speed)  # first active tick >= t
+        burning = (state.phase == PHASE_RUN) & state.alive & (state.work > 0)
+        # burners: one work unit per straggler-active tick in the window
+        n_in = lambda d: ((t + d + speed - 1) // speed - (t + speed - 1) // speed)
+        nact = jnp.where(burning, jnp.minimum(n_in(delta), state.work), 0)
+        drained = (jnp.sum(state.deque.size) + jnp.sum(state.work - nact)
+                   + jnp.sum(state.got.astype(jnp.int32))) == 0
+        # tick right after the last burn of the burners that finish in-window
+        exit_t = jnp.max(jnp.where(
+            burning & (nact == state.work),
+            t0 + (state.work - 1) * speed + 1, 0))
+        delta = jnp.where(live & drained,
+                          jnp.minimum(delta, jnp.maximum(exit_t - t, 0)),
+                          delta)
+        nact = jnp.where(burning, jnp.minimum(n_in(delta), state.work), 0)
+        # in-flight messages: timers tick down, thieves accumulate wait
+        flight = (state.phase != PHASE_RUN) & state.alive
+        dflt = jnp.where(flight, delta, 0)
+        return state._replace(
+            timer=state.timer - dflt,
+            steal_wait=state.steal_wait + dflt,
+            work=state.work - nact,
+            busy=state.busy + nact), t + delta, live & ~drained
+
     def cond(carry):
-        state, snap, t, live = carry
+        state, snap, t, live, iters = carry
         return live & (t < cfg.max_ticks)
 
     def body(carry):
-        state, snap, t, _ = carry
+        state, snap, t, _, iters = carry
         state, snap, t, live = tick_fn((state, snap, t))
-        return state, snap, t, live
+        if cfg.step_mode == "leap":
+            state, t, live = leap(state, t, live)
+        return state, snap, t, live, iters + 1
 
-    state, _, ticks, _ = jax.lax.while_loop(
-        cond, body, (state0, state0, jnp.int32(0), jnp.bool_(True)))
-    return state, ticks
+    # non-TC modes don't carry the (W, C, T) snapshot copy through the loop
+    snap0 = state0 if cfg.recovery == Recovery.TC else ()
+    state, _, ticks, _, iters = jax.lax.while_loop(
+        cond, body, (state0, snap0, jnp.int32(0), jnp.bool_(True), jnp.int32(0)))
+    return state, ticks, iters
+
+
+_sim_jit = partial(jax.jit, static_argnames=("workload", "mesh", "cfg"))(_sim_core)
+
+
+@partial(jax.jit, static_argnames=("workload", "mesh", "cfg"))
+def _sim_batch_jit(workload, mesh, cfg, keys, fail_time, speed):
+    return jax.vmap(
+        lambda k, ft, sp: _sim_core(workload, mesh, cfg, k, ft, sp)
+    )(keys, fail_time, speed)
+
+
+def _check_cfg(cfg: SimConfig):
+    if cfg.step_mode not in ("leap", "tick"):
+        raise ValueError(f"step_mode must be 'leap' or 'tick', got {cfg.step_mode!r}")
+    if cfg.max_ticks >= int(_NEVER):
+        raise ValueError(f"max_ticks must stay below {int(_NEVER)}")
+
+
+def _ckpt_state_bytes(mesh: topo.MeshTopology, cfg: SimConfig) -> int:
+    return mesh.num_workers * cfg.capacity * 4 * 4 + mesh.num_workers * 4
+
+
+def _finalize(state, ticks, iters, mesh: topo.MeshTopology,
+              cfg: SimConfig) -> SimResult:
+    att, suc = int(state.attempts.sum()), int(state.successes.sum())
+    busy = int(np.asarray(state.busy, np.int64).sum())
+    t = int(ticks)
+    alive_n = int(state.alive.sum())
+    hop_units = (int(state.hops_hi) << _HOP_LANE_BITS) + int(state.hops_lo)
+    return SimResult(
+        result=int(np.asarray(state.acc, np.int64).sum() % int(tasks.RESULT_MOD)),
+        ticks=t, nodes=int(state.nodes.sum()), attempts=att, successes=suc,
+        p_success=suc / max(att, 1), busy_ticks=busy,
+        steal_wait_ticks=int(np.asarray(state.steal_wait, np.int64).sum()),
+        bytes_hops=float(hop_units * STEAL_MSG_BYTES),
+        ckpt_bytes=float(int(state.ckpt_count) * _ckpt_state_bytes(mesh, cfg)),
+        overflow=int(state.overflow),
+        utilization=busy / max(t * max(alive_n, 1), 1),
+        per_worker_busy=np.asarray(state.busy),
+        events=int(iters))
+
+
+def _fail_speed_arrays(W, fail_time, speed):
+    ft = jnp.asarray(fail_time if fail_time is not None
+                     else -np.ones(W, np.int32), jnp.int32)
+    sp = jnp.asarray(speed if speed is not None
+                     else np.ones(W, np.int32), jnp.int32)
+    return ft, sp
 
 
 def simulate(workload, mesh: topo.MeshTopology, cfg: SimConfig | None = None,
@@ -443,23 +680,38 @@ def simulate(workload, mesh: topo.MeshTopology, cfg: SimConfig | None = None,
     """Run the tick simulator. `fail_time[w]` = death tick (-1: immortal);
     `speed[w]` = straggler divisor (1 = nominal)."""
     cfg = cfg or SimConfig()
+    _check_cfg(cfg)
+    ft, sp = _fail_speed_arrays(mesh.num_workers, fail_time, speed)
+    state, ticks, iters = _sim_jit(workload, mesh, cfg,
+                                   jax.random.PRNGKey(cfg.seed), ft, sp)
+    return _finalize(jax.device_get(state), ticks, iters, mesh, cfg)
+
+
+def simulate_batch(workload, mesh: topo.MeshTopology,
+                   cfg: SimConfig | None = None,
+                   seeds=(0,),
+                   fail_time: np.ndarray | None = None,
+                   speed: np.ndarray | None = None) -> list[SimResult]:
+    """Run one simulation per seed in a single compiled, vmapped call.
+
+    All seeds share `cfg` (whose own `seed` field is ignored), the failure
+    schedule, and the straggler speeds; the batch advances until the
+    slowest seed terminates. Returns one `SimResult` per seed, identical
+    to `simulate(..., cfg._replace-ish(seed=s))` run serially.
+    """
+    cfg = cfg or SimConfig()
+    _check_cfg(cfg)
     W = mesh.num_workers
-    ft = jnp.asarray(fail_time if fail_time is not None
-                     else -np.ones(W, np.int32), jnp.int32)
-    sp = jnp.asarray(speed if speed is not None
-                     else np.ones(W, np.int32), jnp.int32)
-    state, ticks = _sim_jit(workload, mesh, cfg, jax.random.PRNGKey(cfg.seed), ft, sp)
-    state = jax.device_get(state)
-    att, suc = int(state.attempts.sum()), int(state.successes.sum())
-    busy = int(state.busy.sum())
-    t = int(ticks)
-    alive_n = int(state.alive.sum())
-    return SimResult(
-        result=int(np.asarray(state.acc, np.int64).sum() % int(tasks.RESULT_MOD)),
-        ticks=t, nodes=int(state.nodes.sum()), attempts=att, successes=suc,
-        p_success=suc / max(att, 1), busy_ticks=busy,
-        steal_wait_ticks=int(state.steal_wait.sum()),
-        bytes_hops=float(state.bytes_hops), ckpt_bytes=float(state.ckpt_bytes),
-        overflow=int(state.overflow),
-        utilization=busy / max(t * max(alive_n, 1), 1),
-        per_worker_busy=np.asarray(state.busy))
+    seeds = list(seeds)
+    keys = jnp.stack([jax.random.PRNGKey(int(s)) for s in seeds])
+    ft, sp = _fail_speed_arrays(W, fail_time, speed)
+    B = len(seeds)
+    fts = jnp.broadcast_to(ft[None], (B, W))
+    sps = jnp.broadcast_to(sp[None], (B, W))
+    states, ticks, iters = _sim_batch_jit(workload, mesh, cfg, keys, fts, sps)
+    states, ticks, iters = jax.device_get((states, ticks, iters))
+    return [
+        _finalize(jax.tree.map(lambda x: x[i], states), ticks[i], iters[i],
+                  mesh, cfg)
+        for i in range(B)
+    ]

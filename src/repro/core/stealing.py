@@ -43,6 +43,15 @@ class Strategy(enum.Enum):
     ADAPTIVE = "adaptive"
 
 
+# Staging width of the grant/export path: the maximum number of bottom tasks
+# a victim can hand out in one steal round. Single source of truth shared by
+# `resolve_grants` callers, `kernels.steal_compact` (its VMEM staging block
+# is (block_w, GRANT_WIDTH, T)) and `kernels.ref.steal_compact_ref`; config
+# budgets (`max_grants_per_victim`) must stay <= GRANT_WIDTH, asserted where
+# the kernel is invoked.
+GRANT_WIDTH = 8
+
+
 class StealPlan(NamedTuple):
     victim: jax.Array   # (W,) int32 chosen victim, -1 for non-thieves
     rank: jax.Array     # (W,) int32 rank among same-victim requesters
@@ -145,10 +154,54 @@ def choose_adaptive(key, neighbor_table: jax.Array, radius2_table: jax.Array,
 # --------------------------------------------------------------------------- #
 # Conflict resolution (shared by all strategies and both executors)
 # --------------------------------------------------------------------------- #
+def segment_prefix(key: jax.Array, active: jax.Array,
+                   weights: jax.Array | None = None,
+                   priority: jax.Array | None = None) -> jax.Array:
+    """Exclusive prefix sum of `weights` within equal-`key` segments.
+
+    Workers are ordered inside a segment by (priority, worker id); worker
+    w's result is the sum of the weights of same-key active workers that
+    precede it. Sort-based: O(W log W) and never materializes a (W, W)
+    intermediate — the shared primitive behind `resolve_grants` service
+    ranks (unit weights) and the simulator's multi-source transplant
+    insertion offsets (deque-size weights).
+
+    Args:
+      key: (W,) int segment id per worker (e.g. chosen victim, heir).
+      active: (W,) bool — inactive workers sort last and return 0.
+      weights: (W,) int summands; defaults to ones (prefix = rank).
+      priority: (W,) optional within-segment order (lower = first);
+        worker id breaks ties. Defaults to worker id.
+    """
+    W = key.shape[0]
+    ids = jnp.arange(W)
+    if weights is None:
+        weights = jnp.ones((W,), jnp.int32)
+    if priority is None:
+        priority = ids
+    skey = jnp.where(active, key, W)  # inactive → sentinel segment, sorts last
+    # lexsort is keyed last-to-first; the id key makes the order total, so no
+    # reliance on sort stability.
+    order = jnp.lexsort((ids, priority, skey))
+    skey_sorted = skey[order]
+    w_sorted = jnp.where(active, weights, 0)[order].astype(jnp.int32)
+    excl = jnp.cumsum(w_sorted) - w_sorted  # global exclusive prefix
+    is_start = jnp.concatenate(
+        [jnp.ones((1,), bool), skey_sorted[1:] != skey_sorted[:-1]])
+    seg_first = jax.lax.cummax(jnp.where(is_start, ids, 0))
+    prefix_sorted = excl - excl[seg_first]  # subtract segment base
+    prefix = jnp.zeros((W,), jnp.int32).at[order].set(prefix_sorted)
+    return jnp.where(active, prefix, 0)
+
+
 def resolve_grants(victim: jax.Array, sizes: jax.Array,
                    max_grants_per_victim: int = 4,
                    priority: jax.Array | None = None) -> StealPlan:
     """Deterministically match thieves to victim deque-bottom slots.
+
+    Sort-based segment ranking (O(W log W), no (W, W) intermediates);
+    bit-identical to `resolve_grants_pairwise`, the O(W^2) reference kept
+    for the equivalence property test.
 
     Args:
       victim: (W,) chosen victim per worker, NO_NEIGHBOR for non-thieves.
@@ -161,6 +214,28 @@ def resolve_grants(victim: jax.Array, sizes: jax.Array,
     Returns a StealPlan; `rank[w]` is w's position in its victim's service
     order, `got[w]` whether a task is granted (rank < min(size, budget)),
     `taken[v]` how many tasks leave victim v's bottom this round.
+    """
+    W = victim.shape[0]
+    req = victim >= 0
+    rank = segment_prefix(victim, req, priority=priority)
+    vsize = jnp.where(req, sizes[jnp.clip(victim, 0, W - 1)], 0)
+    budget = jnp.minimum(vsize, max_grants_per_victim)
+    got = req & (rank < budget)
+    taken = jnp.zeros((W,), jnp.int32).at[jnp.clip(victim, 0, W - 1)].add(
+        got.astype(jnp.int32))
+    return StealPlan(victim=jnp.where(req, victim, topo.NO_NEIGHBOR),
+                     rank=rank, got=got, taken=taken,
+                     hops=jnp.zeros((W,), jnp.int32))
+
+
+def resolve_grants_pairwise(victim: jax.Array, sizes: jax.Array,
+                            max_grants_per_victim: int = 4,
+                            priority: jax.Array | None = None) -> StealPlan:
+    """O(W^2) pairwise-rank reference for `resolve_grants` (test oracle only).
+
+    Builds the full same-victim comparison matrix; kept out of every hot
+    path but asserted equivalent to the sorted implementation over random
+    victim/priority/size vectors in the test suite.
     """
     W = victim.shape[0]
     req = victim >= 0

@@ -90,14 +90,13 @@ def steal_compact_ref(buf, bot, size, grants):
     """Extract `grants[w]` records from each deque's bottom and advance it.
 
     buf: (W, C, T) int32 ring buffers; bot, size, grants: (W,).
-    Returns (stolen (W, Gmax, T) zero-padded, new_bot, new_size) where
-    Gmax = int(grants.max-capable) is supplied by the caller via shape.
+    Returns (stolen (W, Gmax, T) zero-padded, new_bot, new_size) with
+    Gmax = `stealing.GRANT_WIDTH`, the staging width shared with the kernel.
     """
+    from repro.core.stealing import GRANT_WIDTH as Gmax
+
     W, C, T = buf.shape
     g = jnp.minimum(grants, size)
-    gmax = int(grants.shape[-1]) if grants.ndim > 1 else None
-    del gmax
-    Gmax = 8  # fixed staging width (matches kernel)
     ranks = jnp.arange(Gmax)[None, :]
     idx = (bot[:, None] + ranks) % C
     rows = jnp.take_along_axis(buf, idx[:, :, None], axis=1)

@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-GMAX = 8  # staging width (max grants per victim per round)
+from repro.core.stealing import GRANT_WIDTH as GMAX  # single shared constant
 
 
 def _steal_kernel(buf_ref, bot_ref, size_ref, grants_ref,
@@ -46,8 +46,11 @@ def steal_compact(buf, bot, size, grants, *, block_w: int = 64,
     """buf: (W, C, T) int32; bot/size/grants: (W,) →
     (stolen (W, GMAX, T), new_bot, new_size)."""
     W, C, T = buf.shape
+    # Largest divisor of W that fits the requested block: the grid must tile
+    # W exactly (W=100 with the default 64 would otherwise be rejected).
     block_w = min(block_w, W)
-    assert W % block_w == 0
+    while W % block_w:
+        block_w -= 1
     kernel = functools.partial(_steal_kernel, cap=C)
     return pl.pallas_call(
         kernel,

@@ -41,7 +41,10 @@ def dequantize(q, scale):
 def compressed_psum(grads, errors, axis_name: str, transport: str = "psum_bf16"):
     """Mean-reduce `grads` over `axis_name` with int8 error-feedback
     compression. Returns (reduced fp32 grads, new errors)."""
-    n = jax.lax.axis_size(axis_name)
+    if hasattr(jax.lax, "axis_size"):
+        n = jax.lax.axis_size(axis_name)
+    else:  # older jax: derive the axis size with a unit psum
+        n = jax.lax.psum(1, axis_name)
 
     def one(g, e):
         q, scale, e_new = quantize(g, e)

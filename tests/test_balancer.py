@@ -3,7 +3,7 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st  # degrades to skips without hypothesis
 
 from repro.core import balancer
 from repro.data import imbalance

@@ -1,7 +1,7 @@
 """Data pipeline: determinism, packing invariants."""
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st  # degrades to skips without hypothesis
 
 from repro.data import imbalance, packing, sharding, synthetic
 

@@ -2,7 +2,7 @@
 
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st  # degrades to skips without hypothesis
 
 from repro.core import deque as dq
 

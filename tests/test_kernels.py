@@ -97,8 +97,11 @@ def test_rglru_sweep(B, S, W, chunk, block_w):
                                rtol=1e-5, atol=1e-5)
 
 
-@pytest.mark.parametrize("W,C", [(64, 16), (128, 64), (256, 8)])
+@pytest.mark.parametrize("W,C", [(64, 16), (128, 64), (256, 8),
+                                 (100, 32), (9, 16)])
 def test_steal_compact_sweep(W, C):
+    """Includes W not divisible by the default block (100, 9): the kernel
+    picks the largest dividing block width."""
     buf = jnp.asarray(RNG.integers(1, 1000, (W, C, 4)), jnp.int32)
     bot = jnp.asarray(RNG.integers(0, C, W), jnp.int32)
     size = jnp.asarray(RNG.integers(0, C + 1, W), jnp.int32)
@@ -107,6 +110,26 @@ def test_steal_compact_sweep(W, C):
     expect = ref.steal_compact_ref(buf, bot, size, grants)
     for a, b in zip(got, expect):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_steal_compact_matches_export_bottom():
+    """deque.export_bottom's jnp fallback and the kernel path agree."""
+    from repro.core import deque as dq
+    from repro.core.stealing import GRANT_WIDTH
+
+    W, C = 32, 16
+    buf = jnp.asarray(RNG.integers(1, 1000, (W, C, 4)), jnp.int32)
+    bot = jnp.asarray(RNG.integers(0, C, W), jnp.int32)
+    size = jnp.asarray(RNG.integers(0, C + 1, W), jnp.int32)
+    grants = jnp.asarray(RNG.integers(0, GRANT_WIDTH + 1, W), jnp.int32)
+    state = dq.DequeState(buf, bot, size)
+    a_blk, a_state = dq.export_bottom(state, grants, GRANT_WIDTH,
+                                      use_kernel=False)
+    b_blk, b_state = dq.export_bottom(state, grants, GRANT_WIDTH,
+                                      use_kernel=True)
+    np.testing.assert_array_equal(np.asarray(a_blk), np.asarray(b_blk))
+    np.testing.assert_array_equal(np.asarray(a_state.bot), np.asarray(b_state.bot))
+    np.testing.assert_array_equal(np.asarray(a_state.size), np.asarray(b_state.size))
 
 
 def test_flash_attention_used_by_model_layer():

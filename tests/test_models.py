@@ -149,7 +149,10 @@ def test_windowed_chunked_attention_matches_dense():
 # --------------------------------------------------------------------------- #
 # MoE dispatch
 # --------------------------------------------------------------------------- #
-def _moe_setup(overflow, cf=0.6, E=8, k=2):
+def _moe_setup(overflow, cf=0.75, E=8, k=2):
+    # cf must leave SOME experts spare capacity for neighbor_steal to have
+    # room to reroute into (at cf=0.6 this router/input realization loads
+    # every expert to exactly C — no ring neighbor can absorb anything)
     cfg = MoEConfig(n_experts=E, top_k=k, n_shared=0, d_ff_expert=32,
                     capacity_factor=cf, overflow=overflow)
     key = jax.random.PRNGKey(0)

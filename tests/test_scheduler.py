@@ -9,7 +9,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st  # degrades to skips without hypothesis
 
 from repro.core import scheduler, stealing, tasks, topology
 
@@ -30,6 +30,22 @@ def test_fib_exact_all_strategies(strategy):
     assert r.nodes == FIB.expected_nodes()
     assert r.overflow == 0
     assert r.rounds < 100_000
+
+
+def test_batch_driver_matches_serial():
+    """run_vectorized_batch (one vmapped compilation for all seeds) returns
+    per-seed results identical to serial run_vectorized calls."""
+    import dataclasses
+    seeds = [0, 1, 2]
+    cfg = scheduler.SchedulerConfig(strategy=stealing.Strategy.NEIGHBOR,
+                                    capacity=256, max_rounds=100_000)
+    batch = scheduler.run_vectorized_batch(FIB, MESH, cfg, seeds=seeds)
+    for s, rb in zip(seeds, batch):
+        rs = scheduler.run_vectorized(FIB, MESH,
+                                      dataclasses.replace(cfg, seed=s))
+        assert rb.result == rs.result == FIB.expected_result()
+        for f in ("rounds", "nodes", "attempts", "successes", "overflow"):
+            assert getattr(rb, f) == getattr(rs, f), (s, f)
 
 
 @pytest.mark.parametrize("strategy",

@@ -1,9 +1,14 @@
 """High-latency mesh simulator: exactness, latency accounting, fault
-tolerance (TC / supervision / malleable pre-shed), stragglers."""
+tolerance (TC / supervision / malleable pre-shed), stragglers, and the
+event-leaping stepper's bit-equivalence with the one-tick oracle."""
 
+import dataclasses
+
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core import deque as dq
 from repro.core import simulator, stealing, tasks, topology
 
 FIB = tasks.FibWorkload(n=24, cutoff=10, max_leaf_cost=8)
@@ -105,14 +110,33 @@ def test_preshed_exact():
 
 
 def test_supervision_exact_single_early_failure():
+    """Single-level supervision is exact when nothing was re-stolen from the
+    dead thief before its death (module docstring's stated guarantee).
+    Worker 1 dies at tick 16 holding unfinished stolen work: NO recovery
+    provably loses it, supervision's re-push provably restores it."""
     W = MESH.num_workers
     ft = -np.ones(W, np.int32)
-    ft[7] = 60
+    ft[1] = 16
+    mk = lambda rec: simulator.SimConfig(
+        strategy=stealing.Strategy.NEIGHBOR, hop_ticks=3, capacity=256,
+        recovery=rec, max_ticks=500_000)
+    assert run(mk(simulator.Recovery.NONE), fail=ft).result != EXPECT
+    assert run(mk(simulator.Recovery.SUPERVISION), fail=ft).result == EXPECT
+
+
+def test_supervision_nested_resteal_is_inexact():
+    """The documented single-level limitation, measured rather than hidden:
+    when tasks were re-stolen FROM the thief before it died, re-pushing its
+    originally stolen records double-counts the emigrated subtrees (exact
+    recovery would need subtree acks — Kestor et al. [26])."""
+    W = MESH.num_workers
+    ft = -np.ones(W, np.int32)
+    ft[7] = 60  # late enough that worker 7's expansions were re-stolen
     cfg = simulator.SimConfig(strategy=stealing.Strategy.NEIGHBOR, hop_ticks=3,
                               capacity=256,
                               recovery=simulator.Recovery.SUPERVISION,
                               max_ticks=500_000)
-    assert run(cfg, fail=ft).result == EXPECT
+    assert run(cfg, fail=ft).result != EXPECT
 
 
 def test_no_recovery_loses_work():
@@ -136,6 +160,165 @@ def test_stragglers_exact_but_slower():
     r_fast = run(cfg)
     assert r_slow.result == EXPECT
     assert r_slow.ticks >= r_fast.ticks  # stealing absorbs but can't erase
+
+
+# --------------------------------------------------------------------------- #
+# Event-leaping stepper ≡ one-tick oracle
+# --------------------------------------------------------------------------- #
+EQ_FIELDS = ("result", "ticks", "nodes", "attempts", "successes",
+             "busy_ticks", "steal_wait_ticks", "bytes_hops", "ckpt_bytes",
+             "overflow")
+
+EQ_FIB = tasks.FibWorkload(n=20, cutoff=9, max_leaf_cost=8)
+EQ_MESH = topology.MeshTopology.square(9)
+
+# strategy × recovery, alternating the {pre-shed, straggler} modifier so
+# both appear under every recovery mode and every strategy
+EQ_MATRIX = [
+    (strat, rec, modifier)
+    for si, strat in enumerate([stealing.Strategy.NEIGHBOR,
+                                stealing.Strategy.GLOBAL,
+                                stealing.Strategy.LIFELINE,
+                                stealing.Strategy.ADAPTIVE])
+    for ri, rec in enumerate([simulator.Recovery.NONE,
+                              simulator.Recovery.TC,
+                              simulator.Recovery.SUPERVISION])
+    for modifier in [("preshed" if (si + ri) % 2 == 0 else "stragglers")]
+]
+
+
+@pytest.mark.parametrize("strategy,recovery,modifier", EQ_MATRIX)
+def test_leap_equals_tick_oracle(strategy, recovery, modifier):
+    """Event-leaping `simulate()` returns a SimResult identical to the seed
+    one-tick stepper (kept as step_mode="tick") across the full
+    strategy × recovery × {pre-shed, straggler} matrix, failures included."""
+    W = EQ_MESH.num_workers
+    ft = -np.ones(W, np.int32)
+    ft[2], ft[5] = 70, 150
+    speed = None
+    preshed, warn = False, 0
+    if modifier == "stragglers":
+        speed = np.ones(W, np.int32)
+        speed[[1, 4]] = 3
+    else:
+        preshed, warn = True, 8
+    results = {}
+    for mode in ("tick", "leap"):
+        cfg = simulator.SimConfig(
+            strategy=strategy, hop_ticks=3, capacity=128, max_ticks=200_000,
+            recovery=recovery, ckpt_interval=30 if recovery is simulator.Recovery.TC else 0,
+            preshed=preshed, warn_ticks=warn, step_mode=mode)
+        results[mode] = simulator.simulate(EQ_FIB, EQ_MESH, cfg,
+                                           fail_time=ft, speed=speed)
+    a, b = results["tick"], results["leap"]
+    for f in EQ_FIELDS:
+        assert getattr(a, f) == getattr(b, f), (
+            f"{f}: tick={getattr(a, f)} leap={getattr(b, f)}")
+    assert (a.per_worker_busy == b.per_worker_busy).all()
+    assert b.events <= b.ticks + 1  # leap iterations = event ticks only
+
+
+def test_leap_equals_tick_with_steal_kernel():
+    """The Pallas grant/export path (interpret mode on CPU) leaves results
+    bit-identical to the plain jnp gather, in both step modes."""
+    base = dict(strategy=stealing.Strategy.NEIGHBOR, hop_ticks=3,
+                capacity=128, max_ticks=200_000)
+    res = {}
+    for kern in (False, True):
+        for mode in ("tick", "leap"):
+            cfg = simulator.SimConfig(step_mode=mode, use_steal_kernel=kern, **base)
+            res[(kern, mode)] = simulator.simulate(EQ_FIB, EQ_MESH, cfg)
+    ref = res[(False, "tick")]
+    assert ref.result == EQ_FIB.expected_result()
+    for k, r in res.items():
+        for f in EQ_FIELDS:
+            assert getattr(r, f) == getattr(ref, f), (k, f)
+
+
+def test_simulate_batch_matches_serial():
+    """The vmapped batch driver returns per-seed results identical to
+    serial `simulate` calls."""
+    seeds = [0, 1, 2]
+    cfg = simulator.SimConfig(strategy=stealing.Strategy.NEIGHBOR, hop_ticks=3,
+                              capacity=128, max_ticks=200_000)
+    batch = simulator.simulate_batch(EQ_FIB, EQ_MESH, cfg, seeds=seeds)
+    for s, rb in zip(seeds, batch):
+        rs = simulator.simulate(EQ_FIB, EQ_MESH,
+                                dataclasses.replace(cfg, seed=s))
+        for f in EQ_FIELDS:
+            assert getattr(rb, f) == getattr(rs, f), (s, f)
+
+
+# --------------------------------------------------------------------------- #
+# _transplant: overflow accounting and multi-source-per-heir ordering
+# --------------------------------------------------------------------------- #
+def _mk_deque(rows, cap):
+    """Build a DequeState from per-worker task lists (bottom→top)."""
+    W = len(rows)
+    state = dq.make(W, cap)
+    buf = np.zeros((W, cap, dq.TASK_WIDTH), np.int32)
+    size = np.zeros(W, np.int32)
+    for w, tasks_ in enumerate(rows):
+        for i, t in enumerate(tasks_):
+            buf[w, i] = t
+        size[w] = len(tasks_)
+    return dq.DequeState(jnp.asarray(buf), state.bot, jnp.asarray(size))
+
+
+def test_transplant_multi_source_per_heir_ordering():
+    """Two dead sources with the same heir append in worker-id order,
+    each preserving its own bottom→top order, after the heir's tasks."""
+    cap = 8
+    rows = [[(9, 0, 0, 0)],                       # heir 0
+            [(1, 1, 0, 0), (1, 2, 0, 0)],         # source 1
+            [(2, 1, 0, 0)],                       # source 2
+            []]
+    deq = _mk_deque(rows, cap)
+    acc = jnp.asarray([5, 7, 11, 0], jnp.int32)
+    src = jnp.asarray([False, True, True, False])
+    heir = jnp.asarray([0, 0, 0, 0], jnp.int32)
+    out, new_acc, ovf = simulator._transplant(deq, acc, src, heir, jnp.int32(0))
+    assert dq.to_list(out, 0) == [(9, 0, 0, 0), (1, 1, 0, 0), (1, 2, 0, 0),
+                                  (2, 1, 0, 0)]
+    np.testing.assert_array_equal(np.asarray(out.size), [4, 0, 0, 0])
+    np.testing.assert_array_equal(np.asarray(new_acc), [23, 0, 0, 0])
+    assert int(ovf) == 0
+
+
+def test_transplant_overflow_accounting():
+    """Writes beyond the heir's capacity are dropped and counted, including
+    a later source finding no room after an earlier source filled it."""
+    cap = 4
+    rows = [[(9, 0, 0, 0), (9, 1, 0, 0)],          # heir: 2/4 full
+            [(1, 1, 0, 0), (1, 2, 0, 0), (1, 3, 0, 0)],  # brings 3, room 2
+            [(2, 1, 0, 0)]]                        # brings 1, room 0
+    deq = _mk_deque(rows, cap)
+    acc = jnp.zeros(3, jnp.int32)
+    src = jnp.asarray([False, True, True])
+    heir = jnp.asarray([0, 0, 0], jnp.int32)
+    out, _, ovf = simulator._transplant(deq, acc, src, heir, jnp.int32(0))
+    assert dq.to_list(out, 0) == [(9, 0, 0, 0), (9, 1, 0, 0), (1, 1, 0, 0),
+                                  (1, 2, 0, 0)]
+    np.testing.assert_array_equal(np.asarray(out.size), [4, 0, 0])
+    assert int(ovf) == 2  # one dropped from source 1, one from source 2
+
+
+def test_transplant_ring_wraparound():
+    """Appends respect the ring structure when the heir's window wraps."""
+    cap = 4
+    deq = _mk_deque([[(9, 0, 0, 0)], [(1, 1, 0, 0), (1, 2, 0, 0)]], cap)
+    # rotate the heir's ring so its bottom sits near the end
+    buf = np.asarray(deq.buf).copy()
+    buf[0] = np.roll(buf[0], 3, axis=0)
+    deq = dq.DequeState(jnp.asarray(buf), jnp.asarray([3, 0], jnp.int32),
+                        deq.size)
+    assert dq.to_list(deq, 0) == [(9, 0, 0, 0)]
+    src = jnp.asarray([False, True])
+    heir = jnp.asarray([0, 0], jnp.int32)
+    out, _, ovf = simulator._transplant(deq, jnp.zeros(2, jnp.int32), src,
+                                        heir, jnp.int32(0))
+    assert dq.to_list(out, 0) == [(9, 0, 0, 0), (1, 1, 0, 0), (1, 2, 0, 0)]
+    assert int(ovf) == 0
 
 
 def test_neighbor_beats_global_at_high_latency():

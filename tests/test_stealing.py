@@ -1,0 +1,100 @@
+"""Steal-conflict resolution: sorted segment ranking ≡ pairwise reference."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from hypothesis_compat import given, settings, st  # degrades to skips without hypothesis
+
+from repro.core import stealing
+
+FIELDS = ("victim", "rank", "got", "taken", "hops")
+
+
+def _random_instance(rng, W):
+    victim = rng.integers(-1, W, W).astype(np.int32)
+    victim = np.where(victim == np.arange(W), -1, victim)  # no self-steals
+    sizes = rng.integers(0, 8, W).astype(np.int32)
+    priority = (rng.integers(0, 5, W).astype(np.int32)
+                if rng.random() < 0.5 else None)
+    budget = int(rng.integers(1, stealing.GRANT_WIDTH + 1))
+    return victim, sizes, priority, budget
+
+
+def _assert_plans_equal(victim, sizes, budget, priority):
+    pri = None if priority is None else jnp.asarray(priority)
+    a = stealing.resolve_grants(jnp.asarray(victim), jnp.asarray(sizes),
+                                budget, pri)
+    b = stealing.resolve_grants_pairwise(jnp.asarray(victim),
+                                         jnp.asarray(sizes), budget, pri)
+    for f in FIELDS:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a, f)), np.asarray(getattr(b, f)),
+            err_msg=f"sorted vs pairwise mismatch in {f}")
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_resolve_grants_sorted_equals_pairwise_random(seed):
+    """Property: the O(W log W) sort-based resolution is bit-identical to
+    the O(W^2) pairwise reference over random victim/priority/size vectors
+    (seeded sweep — runs with or without hypothesis)."""
+    rng = np.random.default_rng(seed)
+    for _ in range(25):
+        W = int(rng.integers(1, 50))
+        victim, sizes, priority, budget = _random_instance(rng, W)
+        _assert_plans_equal(victim, sizes, budget, priority)
+
+
+@given(st.integers(0, 2**32 - 1), st.integers(1, 64))
+@settings(max_examples=50, deadline=None)
+def test_resolve_grants_sorted_equals_pairwise_hypothesis(seed, W):
+    victim, sizes, priority, budget = _random_instance(
+        np.random.default_rng(seed), W)
+    _assert_plans_equal(victim, sizes, budget, priority)
+
+
+def test_resolve_grants_service_order_and_budget():
+    # five thieves hit victim 0 (size 3, budget 4): ranks by worker id,
+    # grants to the first three only
+    W = 6
+    victim = jnp.asarray([-1, 0, 0, 0, 0, 0], jnp.int32)
+    sizes = jnp.asarray([3, 0, 0, 0, 0, 0], jnp.int32)
+    plan = stealing.resolve_grants(victim, sizes, 4)
+    np.testing.assert_array_equal(np.asarray(plan.rank), [0, 0, 1, 2, 3, 4])
+    np.testing.assert_array_equal(np.asarray(plan.got),
+                                  [False, True, True, True, False, False])
+    assert int(plan.taken[0]) == 3
+
+
+def test_resolve_grants_priority_overrides_id_order():
+    W = 4
+    victim = jnp.asarray([-1, 0, 0, 0], jnp.int32)
+    sizes = jnp.asarray([1, 0, 0, 0], jnp.int32)
+    priority = jnp.asarray([0, 9, 5, 1], jnp.int32)
+    plan = stealing.resolve_grants(victim, sizes, 4, priority)
+    # lowest priority value is served first
+    np.testing.assert_array_equal(np.asarray(plan.rank), [0, 2, 1, 0])
+    np.testing.assert_array_equal(np.asarray(plan.got),
+                                  [False, False, False, True])
+
+
+def test_segment_prefix_weighted_matches_pairwise():
+    rng = np.random.default_rng(7)
+    for _ in range(50):
+        W = int(rng.integers(1, 40))
+        key = rng.integers(0, max(W // 2, 1), W).astype(np.int32)
+        active = rng.random(W) < 0.5
+        weights = rng.integers(0, 9, W).astype(np.int32)
+        got = np.asarray(stealing.segment_prefix(
+            jnp.asarray(key), jnp.asarray(active), jnp.asarray(weights)))
+        same = (key[:, None] == key[None, :]) & active[:, None] & active[None, :]
+        earlier = same & (np.arange(W)[None, :] < np.arange(W)[:, None])
+        want = np.where(active,
+                        np.sum(np.where(earlier, weights[None, :], 0), axis=1),
+                        0)
+        np.testing.assert_array_equal(got, want)
+
+
+def test_grant_width_is_shared_with_kernel():
+    from repro.kernels import steal_compact
+    assert steal_compact.GMAX == stealing.GRANT_WIDTH
