@@ -26,6 +26,7 @@ Usage:
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 from repro.configs import paper_mesh
@@ -41,8 +42,6 @@ STRATS = {
 # Shared simulated horizon per W (the one-tick oracle pays ~0.5-5 ms/tick
 # on CPU; the cap keeps its measurement to ~a minute per config).
 TICK_CAPS = {100: 60_000, 640: 24_000, 2500: 6_000}
-# ADAPTIVE needs the radius-2 table (O(W^2) python init) — skip at 2500.
-SKIP = {(2500, "adaptive")}
 
 
 def _run(wl, mesh, strategy, step_mode, max_ticks, hop_ticks, capacity):
@@ -59,7 +58,7 @@ def _run(wl, mesh, strategy, step_mode, max_ticks, hop_ticks, capacity):
 
 
 def run(workers=(100, 640, 2500), strategies=("global", "neighbor", "adaptive"),
-        hop_ticks: int = 5, quick: bool = False):
+        hop_ticks: int = 5, quick: bool = False, json_path: str | None = None):
     wl = paper_mesh.CONFIG.fib_granular
     capacity = 2048
     results = {}
@@ -69,8 +68,6 @@ def run(workers=(100, 640, 2500), strategies=("global", "neighbor", "adaptive"),
         if quick:
             cap = min(cap, 4_000)
         for sname in strategies:
-            if (W, sname) in SKIP:
-                continue
             per = {}
             for mode in ("leap", "tick"):
                 r, wall, cwall = _run(wl, mesh, STRATS[sname], mode, cap,
@@ -91,6 +88,10 @@ def run(workers=(100, 640, 2500), strategies=("global", "neighbor", "adaptive"),
                  f"leap_tps={leap['tps']:.0f};tick_tps={tick['tps']:.0f};"
                  f"leap_wall={leap['wall']:.2f}s;tick_wall={tick['wall']:.2f}s;"
                  f"speedup={speedup:.2f}x;util={leap['util']:.2f}")
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump({f"W={W}/{s}": r for (W, s), r in results.items()},
+                      f, indent=2)
     return results
 
 
@@ -102,6 +103,7 @@ def main():
     ap.add_argument("--strategies", nargs="+", default=None,
                     choices=sorted(STRATS))
     ap.add_argument("--hop-ticks", type=int, default=5)
+    ap.add_argument("--json", default=None, help="write results JSON here")
     args = ap.parse_args()
     workers = tuple(args.workers) if args.workers else (
         (100,) if args.quick else (100, 640, 2500))
@@ -110,7 +112,7 @@ def main():
         else ("global", "neighbor", "adaptive"))
     print("name,us_per_call,derived")
     run(workers=workers, strategies=strategies, hop_ticks=args.hop_ticks,
-        quick=args.quick)
+        quick=args.quick, json_path=args.json)
 
 
 if __name__ == "__main__":

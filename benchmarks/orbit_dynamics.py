@@ -1,0 +1,110 @@
+"""Victim-selection strategies over a full orbital period of link dynamics.
+
+The paper's experiments assume a fixed τ; §2.1 argues the real constellation
+is time-varying (inter-plane τ oscillates with orbital phase, satellites
+power down in eclipse, seam links hand over). This benchmark quantifies what
+that dynamics costs each strategy: GLOBAL / NEIGHBOR / ADAPTIVE makespan on
+the `paper_mesh` orbit preset, crossing
+
+  * static-τ baseline (the schedule collapsed to its duration-weighted mean
+    hop latency — what the pre-linkstate simulator did) vs the full dynamic
+    `LinkStateSchedule`, and
+  * eclipse shutdowns off vs on (predictable failures + malleable pre-shed;
+    under the dynamic schedule the sleeping satellites' links also go dark,
+    so neighbors stop wasting probes on them).
+
+ADAPTIVE is the interesting subject: under a dynamic schedule it prefers the
+cheapest *live* neighbor, so it can surf the τ oscillation while NEIGHBOR
+pays the average and GLOBAL pays multi-hop path sums.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.orbit_dynamics            # full preset
+  PYTHONPATH=src python -m benchmarks.orbit_dynamics --quick    # CI smoke
+  PYTHONPATH=src python -m benchmarks.orbit_dynamics --json out.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+
+import numpy as np
+
+from repro.configs import paper_mesh
+from repro.core import constellation, simulator, stealing, tasks
+from .common import emit
+
+STRATS = {
+    "global": stealing.Strategy.GLOBAL,
+    "neighbor": stealing.Strategy.NEIGHBOR,
+    "adaptive": stealing.Strategy.ADAPTIVE,
+}
+
+
+def _workload(quick: bool) -> tasks.FibWorkload:
+    return (tasks.FibWorkload(n=24, cutoff=10, max_leaf_cost=8) if quick
+            else tasks.FibWorkload(n=30, cutoff=13, max_leaf_cost=48))
+
+
+def run(quick: bool = False, json_path: str | None = None):
+    ccfg = (paper_mesh.CONFIG.orbit_quick if quick
+            else paper_mesh.CONFIG.orbit)
+    wl = _workload(quick)
+    horizon = ccfg.orbit_ticks  # one full orbital period of link dynamics
+    rows = []
+    for eclipse in (False, True):
+        cc = ccfg if eclipse else dataclasses.replace(
+            ccfg, battery_limited_frac=0.0)
+        con = constellation.Constellation(cc)
+        sched = con.schedule(horizon_ticks=horizon)
+        ls = sched.linkstate
+        static_tau = max(int(round(ls.mean_tau(con.mesh, horizon))), 1)
+        pred_fail = np.where(sched.predictable, sched.fail_time,
+                             -1).astype(np.int32)
+        for dynamic in (False, True):
+            for sname, strat in STRATS.items():
+                cfg = simulator.SimConfig(
+                    strategy=strat, hop_ticks=static_tau, capacity=1024,
+                    max_ticks=max(20 * horizon, 200_000),
+                    preshed=eclipse, warn_ticks=cc.warn_ticks if eclipse else 0)
+                t0 = time.perf_counter()
+                r = simulator.simulate(
+                    wl, con.mesh, cfg, fail_time=pred_fail if eclipse else None,
+                    linkstate=ls if dynamic else None)
+                wall = time.perf_counter() - t0
+                row = dict(
+                    strategy=sname, dynamic=dynamic, eclipse=eclipse,
+                    ticks=r.ticks, events=r.events,
+                    exact=r.result == wl.expected_result(),
+                    utilization=round(r.utilization, 4),
+                    p_success=round(r.p_success, 4),
+                    steal_wait_ticks=r.steal_wait_ticks,
+                    bytes_hops=r.bytes_hops, static_tau=static_tau,
+                    epochs=ls.num_epochs, wall_s=round(wall, 3))
+                rows.append(row)
+                emit(f"orbit/{sname}/dyn={int(dynamic)}/ecl={int(eclipse)}",
+                     wall * 1e6,
+                     f"makespan={r.ticks};util={r.utilization:.2f};"
+                     f"p_success={r.p_success:.3f};exact={row['exact']};"
+                     f"tau_static={static_tau};epochs={ls.num_epochs}")
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(dict(config=dataclasses.asdict(ccfg), quick=quick,
+                           horizon=horizon, rows=rows), f, indent=2)
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: 5x5 torus, one short orbit")
+    ap.add_argument("--json", default=None, help="write results JSON here")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(quick=args.quick, json_path=args.json)
+
+
+if __name__ == "__main__":
+    main()

@@ -7,7 +7,7 @@ parameters are kept alongside for reference.
 """
 import dataclasses
 
-from repro.core import tasks
+from repro.core import constellation, tasks
 
 
 @dataclasses.dataclass(frozen=True)
@@ -35,6 +35,21 @@ class PaperMeshConfig:
     # this uncompressed shape affordable (bench_sim_throughput).
     fib_granular: tasks.FibWorkload = tasks.FibWorkload(n=48, cutoff=28,
                                                         max_leaf_cost=2048)
+    # Orbit presets for the time-varying link-state subsystem (§2.1): an
+    # 8x8 wraparound constellation whose inter-plane τ oscillates over one
+    # orbital period, with eclipse shutdowns and cross-seam handovers —
+    # drives benchmarks/orbit_dynamics.py and examples/constellation_sim.py.
+    orbit: constellation.ConstellationConfig = constellation.ConstellationConfig(
+        planes=8, sats_per_plane=8, orbit_ticks=4_000, tau_base=5,
+        interplane_amp=0.6, eclipse_fraction=0.35, battery_limited_frac=0.12,
+        warn_ticks=40, wraparound=True, epochs_per_orbit=32,
+        seam_outage_frac=0.1, seed=7)
+    # CI-smoke scale: one short orbit of a 5x5 torus
+    orbit_quick: constellation.ConstellationConfig = constellation.ConstellationConfig(
+        planes=5, sats_per_plane=5, orbit_ticks=600, tau_base=4,
+        interplane_amp=0.6, eclipse_fraction=0.35, battery_limited_frac=0.15,
+        warn_ticks=25, wraparound=True, epochs_per_orbit=12,
+        seam_outage_frac=0.1, seed=7)
 
 
 CONFIG = PaperMeshConfig()

@@ -8,11 +8,12 @@
 #   scheduler     — bulk-synchronous executors (vectorized + shard_map)
 #   latency       — analytical model of §3.3 (Eq. 1, Ineq. 2, Table 1)
 #   simulator     — tick-level high-latency mesh simulation + fault tolerance
+#   linkstate     — piecewise-constant time-varying link latency/availability
 #   constellation — LEO orbital model (planes, ISL variation, eclipses)
 #   balancer      — neighbor-only rebalancing of serving/training work items
 
-from . import (balancer, constellation, deque, latency, scheduler, simulator,
-               stealing, tasks, topology)
+from . import (balancer, constellation, deque, latency, linkstate, scheduler,
+               simulator, stealing, tasks, topology)
 
-__all__ = ["balancer", "constellation", "deque", "latency", "scheduler",
-           "simulator", "stealing", "tasks", "topology"]
+__all__ = ["balancer", "constellation", "deque", "latency", "linkstate",
+           "scheduler", "simulator", "stealing", "tasks", "topology"]

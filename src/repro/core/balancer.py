@@ -107,13 +107,18 @@ def insert_items(q: ShardQueue, recs, rvalid, rcost) -> tuple[ShardQueue, jax.Ar
 
 
 def steal_shift(q: ShardQueue, axis_name: str, shift: int, max_items: int,
-                trigger: float = 0.25) -> tuple[ShardQueue, dict]:
+                trigger: float = 0.25,
+                link_ok: jax.Array | None = None) -> tuple[ShardQueue, dict]:
     """One neighbor-only steal round along `axis_name` (direction `shift`).
 
     Each shard advertises its load to the +shift neighbor; a shard whose
     load is below `trigger`× the neighbor's load requests the surplus
     half-difference; the neighbor donates items covering that cost. Two
     `ppermute`s (request, donation) — single-hop, fixed payload.
+
+    `link_ok` — optional per-shard bool (one epoch of a link-state
+    schedule): a shard whose ISL is down neither requests nor donates this
+    round, the serving/training analogue of a handover/eclipse outage.
     """
     n = jax.lax.axis_size(axis_name)
     fwd = [(i, (i + shift) % n) for i in range(n)]
@@ -126,9 +131,13 @@ def steal_shift(q: ShardQueue, axis_name: str, shift: int, max_items: int,
     # my free slots (a full queue must not request; arrivals would drop).
     deficit = jnp.maximum((nbr_load - my_load) // 2, 0)
     want = jnp.where((my_load < trigger * nbr_load) & (my_free > 0), deficit, 0)
+    if link_ok is not None:
+        want = jnp.where(link_ok, want, 0)
     # tell the neighbor (travel +shift: back to the load's owner)
     want_from_me = jax.lax.ppermute(want, axis_name, bwd)
     free_of_requester = jax.lax.ppermute(my_free, axis_name, bwd)
+    if link_ok is not None:  # a dark donor keeps its items too
+        want_from_me = jnp.where(link_ok, want_from_me, 0)
 
     recs, rvalid, rcost, taken = select_donations(
         q, want_from_me, max_items, max_count=free_of_requester)
@@ -143,17 +152,20 @@ def steal_shift(q: ShardQueue, axis_name: str, shift: int, max_items: int,
 
 
 def rebalance(q: ShardQueue, axis_name: str, rounds: int = 2,
-              max_items: int = 8, trigger: float = 0.5) -> tuple[ShardQueue, dict]:
+              max_items: int = 8, trigger: float = 0.5,
+              link_ok: jax.Array | None = None) -> tuple[ShardQueue, dict]:
     """Iterated neighbor-only rebalancing: alternate ±1 shifts along the axis.
 
     `rounds` sweeps of two shifts each diffuse load like the paper's initial
     phase (work spreads one hop per round); on an already-steady system one
-    round is enough to absorb per-step drain imbalance.
+    round is enough to absorb per-step drain imbalance. `link_ok` gates
+    each shard's participation (see `steal_shift`).
     """
     stats = {"moved": jnp.int32(0), "dropped": jnp.int32(0)}
     for _ in range(rounds):
         for shift in (1, -1):
-            q, s = steal_shift(q, axis_name, shift, max_items, trigger)
+            q, s = steal_shift(q, axis_name, shift, max_items, trigger,
+                               link_ok)
             stats = {"moved": stats["moved"] + s["moved"],
                      "dropped": stats["dropped"] + s["dropped"]}
     stats["load"] = load_of(q)
@@ -191,10 +203,12 @@ def global_rebalance(q: ShardQueue, axis_name: str, max_items: int = 8
 # --------------------------------------------------------------------------- #
 @partial(jax.jit, static_argnames=("rounds", "max_items", "trigger"))
 def rebalance_reference(items, valid, cost, rounds: int = 2,
-                        max_items: int = 8, trigger: float = 0.5):
+                        max_items: int = 8, trigger: float = 0.5,
+                        link_ok=None):
     """Pure-jnp mirror of `rebalance` over a leading shard axis, for
     correctness tests (multiset conservation, load convergence) without a
-    device mesh. Shapes: items (S, slots, w), valid (S, slots), cost alike."""
+    device mesh. Shapes: items (S, slots, w), valid (S, slots), cost alike;
+    `link_ok` optionally (S,) bool as in `steal_shift`."""
     S = items.shape[0]
 
     def shift_round(carry, shift):
@@ -205,8 +219,12 @@ def rebalance_reference(items, valid, cost, rounds: int = 2,
         nbr_load = jnp.roll(loads, shift)
         deficit = jnp.maximum((nbr_load - loads) // 2, 0)
         want = jnp.where((loads < 0.5 * nbr_load) & (free > 0), deficit, 0)
+        if link_ok is not None:
+            want = jnp.where(link_ok, want, 0)
         want_from_me = jnp.roll(want, -shift)
         free_of_requester = jnp.roll(free, -shift)
+        if link_ok is not None:
+            want_from_me = jnp.where(link_ok, want_from_me, 0)
 
         def donate(i_items, i_valid, i_cost, w, fr):
             q = ShardQueue(i_items, i_valid, i_cost)

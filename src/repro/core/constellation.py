@@ -3,7 +3,7 @@
 Maps a physical constellation onto the abstract `MeshTopology`:
 
   * `planes` orbital planes × `sats_per_plane` satellites → rows × cols of
-    the 2D mesh (intra-plane links along columns, inter-plane along rows).
+    the 2D mesh (intra-plane links along rows, inter-plane along columns).
   * Intra-plane ISL latency is constant (ring of evenly spaced satellites).
   * Inter-plane ISL distance varies with orbital phase: adjacent planes
     converge near the poles and diverge at the equator, so the link latency
@@ -11,12 +11,23 @@ Maps a physical constellation onto the abstract `MeshTopology`:
     τ(t) = τ_base · (1 + amp·|sin(2π t/T + φ_plane)|).
   * Eclipse: a contiguous fraction of each orbit is in Earth's shadow;
     battery-limited satellites power down during eclipse — a *predictable*
-    shutdown (§5 malleability) with `warn_ticks` of lead time.
-  * Random failures: radiation/hardware faults at Poisson times.
+    shutdown (§5 malleability) with `warn_ticks` of lead time; from the
+    entry tick on their ISLs are marked down so neighbors stop probing them.
+  * Cross-seam handovers: with `wraparound=True` the planes close into a
+    torus; the seam links between the last and first plane (where relative
+    motion is highest) re-acquire periodically and are dark for a fraction
+    of each handover cycle.
+  * Random failures: radiation/hardware faults at Poisson times. These are
+    *unpredictable*, so they do NOT appear in the link-state schedule —
+    probes to a radiation-dead satellite fail at grant time instead.
 
-`schedule()` compiles all of this into the plain arrays the tick simulator
-consumes (`fail_time`, `speed`) plus per-epoch hop-latency scalars, keeping
-the simulator itself orbital-mechanics-free.
+`schedule()` compiles all of this into the plain arrays the simulator
+consumes: `fail_time` / `predictable` / `speed` for the failure machinery
+plus a full `linkstate.LinkStateSchedule` — per-epoch per-link latency,
+link up/down intervals, and per-epoch speeds — keeping the simulator
+itself orbital-mechanics-free. `mean_hop_ticks` (the orbit-averaged τ the
+pre-linkstate simulator collapsed everything to) is kept for the §3.3
+analytical model and static-baseline comparisons.
 """
 
 from __future__ import annotations
@@ -25,6 +36,7 @@ import dataclasses
 
 import numpy as np
 
+from . import linkstate as lstate
 from .topology import MeshTopology
 
 
@@ -39,8 +51,11 @@ class ConstellationConfig:
     battery_limited_frac: float = 0.1  # fraction of sats that sleep in eclipse
     warn_ticks: int = 50             # lead time before predictable shutdown
     failure_rate: float = 0.0        # random failures per worker per orbit
-    wraparound: bool = False         # ring planes (torus columns)
+    wraparound: bool = False         # ring planes (torus)
     seed: int = 0
+    # link-state schedule resolution / seam handovers
+    epochs_per_orbit: int = 32       # τ-oscillation sampling epochs per orbit
+    seam_outage_frac: float = 0.1    # fraction of a handover cycle seam is dark
 
 
 @dataclasses.dataclass(frozen=True)
@@ -50,6 +65,7 @@ class Schedule:
     predictable: np.ndarray        # (W,) bool — eclipse (True) vs radiation
     speed: np.ndarray              # (W,) straggler divisors
     mean_hop_ticks: float          # orbit-averaged τ for the analytical model
+    linkstate: lstate.LinkStateSchedule  # time-varying per-link latency/state
 
 
 class Constellation:
@@ -59,9 +75,10 @@ class Constellation:
                                       torus=cfg.wraparound)
 
     # ------------------------------------------------------------------ #
-    # Time-varying link latency (per-epoch scalars for the simulator)
+    # Time-varying link latency
     # ------------------------------------------------------------------ #
     def interplane_tau(self, t: int, plane: int) -> float:
+        """τ of the ISL between `plane` and `plane + 1` (mod planes) at t."""
         cfg = self.cfg
         phase = 2 * np.pi * (t / cfg.orbit_ticks) + np.pi * plane / cfg.planes
         return cfg.tau_base * (1.0 + cfg.interplane_amp * abs(np.sin(phase)))
@@ -76,6 +93,10 @@ class Constellation:
         # half the links are intra-plane (constant), half inter-plane
         return 0.5 * cfg.tau_base + 0.5 * inter
 
+    def handover_cycle(self) -> int:
+        """Ticks between successive cross-seam handovers: one in-plane slot."""
+        return max(self.cfg.orbit_ticks // self.cfg.sats_per_plane, 2)
+
     # ------------------------------------------------------------------ #
     # Outage / failure schedule
     # ------------------------------------------------------------------ #
@@ -88,7 +109,9 @@ class Constellation:
 
         # eclipse shutdowns: battery-limited satellites sleep when their
         # orbital slot enters shadow. Entry tick depends on the in-plane
-        # position (cols spread around the orbit).
+        # position (cols spread around the orbit). Every predictable
+        # shutdown keeps a full `warn_ticks` of lead time so the malleable
+        # pre-shed window never starts before tick 0.
         n_weak = int(round(cfg.battery_limited_frac * W))
         weak = rng.choice(W, size=n_weak, replace=False) if n_weak else []
         for w in weak:
@@ -97,6 +120,7 @@ class Constellation:
             entry = int(((1.0 - slot_phase) % 1.0) * cfg.orbit_ticks)
             if entry == 0:
                 entry = cfg.orbit_ticks
+            entry = max(entry, cfg.warn_ticks + 1)
             if entry < horizon_ticks:
                 fail[w] = entry
                 predictable[w] = True
@@ -112,9 +136,78 @@ class Constellation:
                     fail[w] = t
         # keep the root worker (ground-station adjacent) up
         fail[0] = -1
+        predictable[0] = False
 
-        speed = np.ones(W, np.int64)
-        return Schedule(fail_time=fail.astype(np.int32),
+        fail = fail.astype(np.int32)
+        speed = np.ones(W, np.int32)
+        link = self.linkstate_schedule(horizon_ticks, fail, predictable)
+        return Schedule(fail_time=fail,
                         predictable=predictable,
-                        speed=speed.astype(np.int32),
-                        mean_hop_ticks=self.mean_tau())
+                        speed=speed,
+                        mean_hop_ticks=self.mean_tau(),
+                        linkstate=link)
+
+    # ------------------------------------------------------------------ #
+    # Link-state schedule compilation
+    # ------------------------------------------------------------------ #
+    def linkstate_schedule(self, horizon_ticks: int, fail_time: np.ndarray,
+                           predictable: np.ndarray) -> lstate.LinkStateSchedule:
+        """Compile the orbit into a piecewise-constant `LinkStateSchedule`.
+
+        Epoch boundaries are the union of the uniform τ-oscillation sampling
+        grid (`epochs_per_orbit` per orbit), each predictable shutdown's
+        entry tick (its links go dark with it), and — with `wraparound` —
+        every seam handover on/off transition, so the piecewise-constant
+        arrays change exactly where the modeled state does.
+        """
+        cfg = self.cfg
+        mesh = self.mesh
+        W = mesh.num_workers
+        R, C = cfg.planes, cfg.sats_per_plane
+
+        bounds = {0}
+        step = max(int(round(cfg.orbit_ticks / max(cfg.epochs_per_orbit, 1))), 1)
+        bounds.update(range(0, horizon_ticks, step))
+        sleeps = predictable & (fail_time >= 0)
+        bounds.update(int(t) for t in fail_time[sleeps])
+        cycle = self.handover_cycle()
+        dark_len = 0
+        if cfg.wraparound and cfg.seam_outage_frac > 0:
+            dark_len = min(max(int(round(cfg.seam_outage_frac * cycle)), 1),
+                           cycle - 1)
+            for k in range(0, horizon_ticks, cycle):
+                bounds.update((k, k + dark_len))
+        starts = np.asarray(sorted(b for b in bounds if 0 <= b < horizon_ticks),
+                            np.int32)
+        E = len(starts)
+        rows = mesh.coords[:, 0]
+
+        # inter-plane τ per boundary b (between plane b and b+1 mod R),
+        # sampled at each epoch start — matches `interplane_tau`
+        phase = (2 * np.pi * starts[:, None] / cfg.orbit_ticks
+                 + np.pi * np.arange(R)[None, :] / R)           # (E, R)
+        tau_b = np.maximum(np.rint(cfg.tau_base * (
+            1.0 + cfg.interplane_amp * np.abs(np.sin(phase)))), 1).astype(np.int32)
+        link_tau = np.full((E, W, 4), max(cfg.tau_base, 1), np.int32)
+        link_tau[:, :, lstate.SOUTH] = tau_b[:, rows]
+        link_tau[:, :, lstate.NORTH] = tau_b[:, (rows - 1) % R]
+
+        # availability: a sleeping satellite's links are down from its entry
+        # tick on (both endpoints see the predictable outage)
+        up = np.ones((E, W, 4), bool)
+        asleep = (sleeps[None, :] & (fail_time[None, :] <= starts[:, None]))
+        up &= ~asleep[:, :, None]
+        nbr = mesh.neighbor_table
+        nbr_c = np.clip(nbr, 0, W - 1)
+        up &= ~(asleep[:, nbr_c] & (nbr >= 0)[None])
+        if dark_len:
+            dark = (starts % cycle) < dark_len                  # (E,)
+            seam_n = rows == 0
+            seam_s = rows == R - 1
+            up[:, :, lstate.NORTH] &= ~(dark[:, None] & seam_n[None, :])
+            up[:, :, lstate.SOUTH] &= ~(dark[:, None] & seam_s[None, :])
+
+        speed = np.ones((E, W), np.int32)
+        return lstate.LinkStateSchedule(
+            epoch_starts=starts, link_tau=link_tau, link_up=up,
+            speed=speed).validate(mesh)

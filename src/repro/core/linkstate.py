@@ -1,0 +1,249 @@
+"""Time-varying link-state schedules for the 2D-mesh simulator (paper §2.1).
+
+LEO inter-satellite links are not uniform: inter-plane ISL latency oscillates
+with orbital phase (adjacent planes converge near the poles), links drop out
+predictably (satellites powering down in eclipse, cross-seam handovers
+between counter-rotating planes), and individual satellites run degraded.
+`repro.core.constellation` knows the orbital mechanics; this module defines
+the *contract* between it and the simulator: a compiled, piecewise-constant
+`LinkStateSchedule` of plain arrays, so the simulator itself stays
+orbital-mechanics-free.
+
+Model
+-----
+Time is split into epochs at `epoch_starts` (int ticks, starting at 0);
+epoch `e` covers ``[epoch_starts[e], epoch_starts[e+1])`` and the last epoch
+extends forever. Within an epoch every quantity is constant:
+
+  * ``link_tau[e, w, d]`` — one-hop latency (ticks, >= 1) of worker `w`'s
+    link in mesh direction `d` (`topology.DIRECTIONS` order: N, S, W, E).
+    Links are undirected: the value must match the reverse entry on the
+    neighbor's side (checked by `validate`).
+  * ``link_up[e, w, d]`` — whether that link is usable. A down link removes
+    the neighbor from radius-1 victim selection (NEIGHBOR / ADAPTIVE): the
+    outage is *predictable*, so thieves do not waste probes on it. Multi-hop
+    flights (GLOBAL / LIFELINE / escalated ADAPTIVE) are assumed to be
+    routed around outages by the network layer and see only latency.
+  * ``speed[e, w]`` — straggler divisor per worker (1 = nominal), letting
+    degradation vary over the orbit (thermal throttling, battery saving).
+
+Message flights are priced by dimension-order routing (rows first in the
+source's column, then columns in the destination's row): the flight departs
+at tick `t` and its duration is the sum of per-link `link_tau` along that
+path in the epoch containing `t` — latency is locked at launch; an epoch
+change mid-flight does not retime messages already in transit. On a full
+torus the shorter ring arc (by hop count, ties to the non-wrapping side) is
+used per axis, matching the simulator's `_hop_dist` hop accounting.
+
+`device_tables` compiles a schedule into `LinkStateArrays` — jnp arrays plus
+per-epoch prefix sums over both mesh axes — so `flight_ticks` prices any
+flight with O(1) gathers and the per-tick path never materializes a (W, W)
+intermediate. The simulator's event-leaping stepper adds `next_change` as a
+horizon term so a leap never jumps across an epoch boundary, which keeps
+``step_mode="leap"`` bit-identical to the one-tick oracle under dynamic
+schedules (asserted in tests/test_simulator.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import topology as topo
+
+# Direction indices into topology.DIRECTIONS ((-1,0),(1,0),(0,-1),(0,1)).
+NORTH, SOUTH, WEST, EAST = range(topo.NUM_DIRECTIONS)
+OPPOSITE = (SOUTH, NORTH, EAST, WEST)
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkStateSchedule:
+    """Piecewise-constant link state, plain numpy (host-side)."""
+
+    epoch_starts: np.ndarray   # (E,) int32, epoch_starts[0] == 0, increasing
+    link_tau: np.ndarray       # (E, W, 4) int32 one-hop latency, >= 1
+    link_up: np.ndarray        # (E, W, 4) bool
+    speed: np.ndarray          # (E, W) int32 straggler divisors, >= 1
+
+    # ------------------------------------------------------------------ #
+    # Host-side queries
+    # ------------------------------------------------------------------ #
+    @property
+    def num_epochs(self) -> int:
+        return int(self.epoch_starts.shape[0])
+
+    def epoch_of(self, t: int) -> int:
+        return int(np.searchsorted(self.epoch_starts, t, side="right") - 1)
+
+    def tau_at(self, t: int) -> np.ndarray:
+        """(W, 4) link latencies active at tick `t`."""
+        return self.link_tau[self.epoch_of(t)]
+
+    def up_at(self, t: int) -> np.ndarray:
+        """(W, 4) link availability active at tick `t`."""
+        return self.link_up[self.epoch_of(t)]
+
+    def speed_at(self, t: int) -> np.ndarray:
+        return self.speed[self.epoch_of(t)]
+
+    def mean_tau(self, mesh: topo.MeshTopology, horizon_ticks: int) -> float:
+        """Duration-weighted mean latency of existing links over `horizon`.
+
+        The single scalar a static-τ baseline would collapse this schedule
+        to — used by benchmarks for the static-vs-dynamic comparison.
+        """
+        starts = self.epoch_starts.astype(np.int64)
+        ends = np.append(starts[1:], max(horizon_ticks, int(starts[-1]) + 1))
+        spans = np.maximum(ends - starts, 0).astype(np.float64)  # (E,)
+        exists = mesh.neighbor_table != topo.NO_NEIGHBOR         # (W, 4)
+        per_epoch = (self.link_tau * exists[None]).sum(axis=(1, 2)) / max(
+            exists.sum(), 1)
+        return float((per_epoch * spans).sum() / max(spans.sum(), 1.0))
+
+    # ------------------------------------------------------------------ #
+    # Validation / constructors
+    # ------------------------------------------------------------------ #
+    def validate(self, mesh: topo.MeshTopology) -> "LinkStateSchedule":
+        E = self.num_epochs
+        W = mesh.num_workers
+        if self.epoch_starts.shape != (E,) or E == 0:
+            raise ValueError("epoch_starts must be a non-empty 1D array")
+        if int(self.epoch_starts[0]) != 0:
+            raise ValueError("epoch_starts must begin at tick 0")
+        if E > 1 and not (np.diff(self.epoch_starts) > 0).all():
+            raise ValueError("epoch_starts must be strictly increasing")
+        if self.link_tau.shape != (E, W, topo.NUM_DIRECTIONS):
+            raise ValueError(f"link_tau must be (E, W, 4), got {self.link_tau.shape}")
+        if self.link_up.shape != (E, W, topo.NUM_DIRECTIONS):
+            raise ValueError(f"link_up must be (E, W, 4), got {self.link_up.shape}")
+        if self.speed.shape != (E, W):
+            raise ValueError(f"speed must be (E, W), got {self.speed.shape}")
+        if (self.link_tau < 1).any():
+            raise ValueError("link_tau entries must be >= 1 tick")
+        if (self.speed < 1).any():
+            raise ValueError("speed divisors must be >= 1")
+        # undirected links: each existing link must agree with its reverse
+        nbr = mesh.neighbor_table                                 # (W, 4)
+        nbr_c = np.clip(nbr, 0, W - 1)
+        for d in range(topo.NUM_DIRECTIONS):
+            has = nbr[:, d] != topo.NO_NEIGHBOR
+            rev_tau = self.link_tau[:, nbr_c[:, d], OPPOSITE[d]]
+            rev_up = self.link_up[:, nbr_c[:, d], OPPOSITE[d]]
+            if (has & (self.link_tau[:, :, d] != rev_tau)).any():
+                raise ValueError(f"asymmetric link_tau along direction {d}")
+            if (has & (self.link_up[:, :, d] != rev_up)).any():
+                raise ValueError(f"asymmetric link_up along direction {d}")
+        return self
+
+    @staticmethod
+    def static(mesh: topo.MeshTopology, tau: int,
+               speed: np.ndarray | None = None) -> "LinkStateSchedule":
+        """Single-epoch uniform schedule: τ everywhere, all links up.
+
+        `simulate(..., linkstate=static(mesh, τ))` is bit-identical to the
+        scalar ``hop_ticks=τ`` path (asserted in tests) — the degenerate
+        case the pre-linkstate simulator hard-coded.
+        """
+        W = mesh.num_workers
+        sp = (np.ones((1, W), np.int32) if speed is None
+              else np.asarray(speed, np.int32).reshape(1, W))
+        return LinkStateSchedule(
+            epoch_starts=np.zeros(1, np.int32),
+            link_tau=np.full((1, W, topo.NUM_DIRECTIONS), int(tau), np.int32),
+            link_up=np.ones((1, W, topo.NUM_DIRECTIONS), bool),
+            speed=sp,
+        ).validate(mesh)
+
+
+class LinkStateArrays(NamedTuple):
+    """Device-side view of a schedule, consumed inside `lax.while_loop`.
+
+    `cum_v[e, k, c]` is the prefix sum of southward link latencies of rows
+    `< k` in column `c` (row `R-1` holds the ring-wrap link), `cum_h` the
+    eastward analogue — dimension-order path costs become two gather-diffs.
+    """
+    epoch_starts: jax.Array   # (E,)
+    link_tau: jax.Array       # (E, W, 4)
+    link_up: jax.Array        # (E, W, 4)
+    speed: jax.Array          # (E, W)
+    cum_v: jax.Array          # (E, R+1, C)
+    cum_h: jax.Array          # (E, R, C+1)
+
+
+def device_tables(schedule: LinkStateSchedule,
+                  mesh: topo.MeshTopology) -> LinkStateArrays:
+    """Validate and compile a schedule for the simulator."""
+    if mesh.num_workers != mesh.rows * mesh.cols:
+        raise ValueError(
+            "link-state simulation requires a fully populated grid "
+            f"({mesh.rows}x{mesh.cols} vs {mesh.num_workers} workers)")
+    schedule.validate(mesh)
+    E = schedule.num_epochs
+    R, C = mesh.rows, mesh.cols
+    grid = np.arange(R * C).reshape(R, C)
+    tau_v = schedule.link_tau[:, grid, SOUTH]                     # (E, R, C)
+    tau_h = schedule.link_tau[:, grid, EAST]                      # (E, R, C)
+    cum_v = np.concatenate([np.zeros((E, 1, C), np.int32),
+                            np.cumsum(tau_v, axis=1, dtype=np.int32)], axis=1)
+    cum_h = np.concatenate([np.zeros((E, R, 1), np.int32),
+                            np.cumsum(tau_h, axis=2, dtype=np.int32)], axis=2)
+    return LinkStateArrays(
+        epoch_starts=jnp.asarray(schedule.epoch_starts, jnp.int32),
+        link_tau=jnp.asarray(schedule.link_tau, jnp.int32),
+        link_up=jnp.asarray(schedule.link_up),
+        speed=jnp.asarray(schedule.speed, jnp.int32),
+        cum_v=jnp.asarray(cum_v),
+        cum_h=jnp.asarray(cum_h),
+    )
+
+
+# --------------------------------------------------------------------------- #
+# Traced helpers (usable inside lax.while_loop; E is small, O(E) scans are
+# cheaper and more portable than searchsorted under old jax versions)
+# --------------------------------------------------------------------------- #
+def epoch_index(epoch_starts: jax.Array, t) -> jax.Array:
+    """Index of the epoch containing tick `t` (t >= epoch_starts[0] == 0)."""
+    return jnp.sum((epoch_starts <= t).astype(jnp.int32)) - 1
+
+
+def next_change(epoch_starts: jax.Array, t, never) -> jax.Array:
+    """First epoch boundary strictly after `t` (`never` if none left)."""
+    return jnp.min(jnp.where(epoch_starts > t, epoch_starts,
+                             jnp.int32(never)))
+
+
+def _axis_cost(cum_ax, lo, hi, lane, n: int, torus_full: bool):
+    """Path cost along one axis from index lo to hi in `lane`, picking the
+    shorter ring arc (by hops, ties to the direct side) on a full torus."""
+    direct = cum_ax[hi, lane] - cum_ax[lo, lane]
+    if not torus_full:
+        return direct
+    ring = cum_ax[n, lane]
+    d = hi - lo
+    return jnp.where(n - d < d, ring - direct, direct)
+
+
+def flight_ticks(tbl: LinkStateArrays, eidx, src, dst,
+                 rows: int, cols: int, torus_full: bool) -> jax.Array:
+    """Duration (ticks) of flights src[w] → dst[w] departing in epoch `eidx`.
+
+    Dimension-order routing: vertical hops in the source's column, then
+    horizontal hops in the destination's row, each hop priced at the active
+    epoch's `link_tau`. Reduces to `hops * tau` on a uniform schedule.
+    """
+    W = rows * cols
+    s = jnp.clip(src, 0, W - 1)
+    d = jnp.clip(dst, 0, W - 1)
+    rs, cs = s // cols, s % cols
+    rd, cd = d // cols, d % cols
+    cum_v = tbl.cum_v[eidx]                                     # (R+1, C)
+    cum_h = tbl.cum_h[eidx]                                     # (R, C+1)
+    vert = _axis_cost(cum_v, jnp.minimum(rs, rd), jnp.maximum(rs, rd),
+                      cs, rows, torus_full)
+    horz = _axis_cost(cum_h.T, jnp.minimum(cs, cd), jnp.maximum(cs, cd),
+                      rd, cols, torus_full)
+    return (vert + horz).astype(jnp.int32)

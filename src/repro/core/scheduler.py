@@ -172,15 +172,24 @@ def _round(state: WorkerState, key, tables, mesh_tables, cfg: SchedulerConfig):
     return new_state, any_live
 
 
-def _run_core(workload, mesh: topo.MeshTopology, cfg: SchedulerConfig, key0):
+def _run_core(workload, mesh: topo.MeshTopology, cfg: SchedulerConfig, key0,
+              link_up=None):
     assert cfg.max_grants_per_victim <= stealing.GRANT_WIDTH, (
         f"max_grants_per_victim={cfg.max_grants_per_victim} exceeds the "
         f"grant/export staging width GRANT_WIDTH={stealing.GRANT_WIDTH}: "
         "thieves ranked beyond the staging block would receive duplicate "
         "records while the victim loses the real tasks")
     tables = workload.tables()
+    neighbors = jnp.asarray(stealing.neighbor_list(mesh))
+    if link_up is not None:
+        # frozen link-state snapshot (e.g. linkstate.LinkStateSchedule.up_at):
+        # dead links drop out of the radius-1 victim set for the whole run —
+        # the uniform-latency executor's analogue of the simulator's
+        # per-epoch masking
+        neighbors = jnp.where(link_up & (neighbors >= 0), neighbors,
+                              topo.NO_NEIGHBOR)
     mesh_tables = {
-        "neighbors": jnp.asarray(stealing.neighbor_list(mesh)),
+        "neighbors": neighbors,
         "radius2": jnp.asarray(stealing.radius2_list(mesh)),
         "lifelines": jnp.asarray(stealing.lifeline_list(mesh.num_workers)),
     }
@@ -205,8 +214,8 @@ _run_jit = partial(jax.jit, static_argnames=("workload", "mesh", "cfg"))(_run_co
 
 
 @partial(jax.jit, static_argnames=("workload", "mesh", "cfg"))
-def _run_batch_jit(workload, mesh, cfg, keys):
-    return jax.vmap(lambda k: _run_core(workload, mesh, cfg, k))(keys)
+def _run_batch_jit(workload, mesh, cfg, keys, link_up):
+    return jax.vmap(lambda k: _run_core(workload, mesh, cfg, k, link_up))(keys)
 
 
 def _finalize_run(state, rounds) -> RunResult:
@@ -227,17 +236,23 @@ def _finalize_run(state, rounds) -> RunResult:
 
 
 def run_vectorized(workload, mesh: topo.MeshTopology,
-                   cfg: SchedulerConfig | None = None) -> RunResult:
-    """Execute `workload` on `mesh` and return aggregate statistics."""
+                   cfg: SchedulerConfig | None = None,
+                   link_up=None) -> RunResult:
+    """Execute `workload` on `mesh` and return aggregate statistics.
+
+    `link_up` — optional (W, 4) bool link-availability snapshot (a single
+    epoch of a `linkstate.LinkStateSchedule`); down links are removed from
+    radius-1 victim selection for the whole run."""
     cfg = cfg or SchedulerConfig()
     key0 = jax.random.PRNGKey(cfg.seed)
-    state, rounds = _run_jit(workload, mesh, cfg, key0)
+    lu = None if link_up is None else jnp.asarray(link_up)
+    state, rounds = _run_jit(workload, mesh, cfg, key0, lu)
     return _finalize_run(jax.device_get(state), rounds)
 
 
 def run_vectorized_batch(workload, mesh: topo.MeshTopology,
                          cfg: SchedulerConfig | None = None,
-                         seeds=(0,)) -> list[RunResult]:
+                         seeds=(0,), link_up=None) -> list[RunResult]:
     """One executor run per seed in a single compiled, vmapped call.
 
     `cfg.seed` is ignored; returns one `RunResult` per seed, identical to
@@ -246,7 +261,9 @@ def run_vectorized_batch(workload, mesh: topo.MeshTopology,
     cfg = cfg or SchedulerConfig()
     seeds = list(seeds)
     keys = jnp.stack([jax.random.PRNGKey(int(s)) for s in seeds])
-    states, rounds = jax.device_get(_run_batch_jit(workload, mesh, cfg, keys))
+    lu = None if link_up is None else jnp.asarray(link_up)
+    states, rounds = jax.device_get(_run_batch_jit(workload, mesh, cfg, keys,
+                                                   lu))
     return [
         _finalize_run(jax.tree.map(lambda x: x[i], states), rounds[i])
         for i in range(len(seeds))

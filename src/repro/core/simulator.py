@@ -75,6 +75,13 @@ paper lists in §2.1/§5, each as an orthogonal, testable mechanism:
     deque and accumulator to live neighbors before sleeping. Exactly-once.
   * **stragglers** — per-worker `speed` divisors (a speed-s worker advances
     work only every s-th tick), modelling degraded satellites.
+  * **time-varying link state** — pass a `linkstate.LinkStateSchedule` to
+    `simulate`: per-epoch per-link τ (inter-plane oscillation), link up/down
+    intervals (eclipse outages, cross-seam handovers) masking radius-1
+    victim sets, and per-epoch straggler speeds. Flights are priced by
+    dimension-order path sums at the departure epoch; `_next_event` gains a
+    next-link-state-change horizon so leaps never cross an epoch boundary,
+    preserving leap ≡ tick bit-exactness under dynamic schedules.
 
 Congestion accounting: every steal message contributes payload_bytes × hops
 to `bytes_hops`, the quantity behind the paper's §4.2 remark that multi-hop
@@ -96,6 +103,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import deque as dq
+from . import linkstate as lstate
 from . import stealing, tasks
 from . import topology as topo
 
@@ -222,17 +230,31 @@ def _hop_dist(mesh: topo.MeshTopology, coords: jax.Array, victim: jax.Array):
     return (dr + dc).astype(jnp.int32)
 
 
-def _select(cfg: SimConfig, tbl, key, is_thief, fails, W):
+def _select(cfg: SimConfig, tbl, key, is_thief, fails, W, link=None):
+    """Victim selection; `link = (up_row, tau_row)` masks radius-1 victim
+    sets with the active epoch's link state (GLOBAL / LIFELINE are multi-hop
+    and see only latency, not outages — see linkstate module docstring)."""
     s = cfg.strategy
     if s == stealing.Strategy.GLOBAL:
         return stealing.choose_global(key, W, is_thief)
-    if s == stealing.Strategy.NEIGHBOR:
-        return stealing.choose_neighbor(key, tbl["neighbors"], is_thief)
     if s == stealing.Strategy.LIFELINE:
         return stealing.choose_lifeline(key, tbl["lifelines"], fails, W, is_thief)
+    if link is None:
+        if s == stealing.Strategy.NEIGHBOR:
+            return stealing.choose_neighbor(key, tbl["neighbors"], is_thief)
+        if s == stealing.Strategy.ADAPTIVE:
+            return stealing.choose_adaptive(key, tbl["neighbors"], tbl["radius2"],
+                                            fails, is_thief, cfg.escalate_after)
+        raise ValueError(s)
+    up_row, tau_row = link
+    nbrs = jnp.where(up_row & (tbl["neighbors"] >= 0), tbl["neighbors"],
+                     topo.NO_NEIGHBOR)
+    if s == stealing.Strategy.NEIGHBOR:
+        return stealing.choose_neighbor(key, nbrs, is_thief)
     if s == stealing.Strategy.ADAPTIVE:
-        return stealing.choose_adaptive(key, tbl["neighbors"], tbl["radius2"],
-                                        fails, is_thief, cfg.escalate_after)
+        return stealing.choose_adaptive_linkaware(key, nbrs, tbl["radius2"],
+                                                  tau_row, fails, is_thief,
+                                                  cfg.escalate_after)
     raise ValueError(s)
 
 
@@ -292,7 +314,32 @@ def _transplant(deque_, acc, src_mask, heir, overflow):
     return dq.DequeState(buf, bot, size), new_acc, overflow
 
 
-def _next_event(state: SimState, t, speed, fail_time, cfg: SimConfig, W: int):
+def _epoch_view(ls, t):
+    """(epoch index, per-worker speed row) of the epoch containing tick t."""
+    eidx = lstate.epoch_index(ls.epoch_starts, t)
+    return eidx, ls.speed[eidx]
+
+
+def _can_attempt(cfg: SimConfig, tbl, ls, eidx, fails, W: int):
+    """Per-worker: would `_select` produce a victim for an idle thief now?
+
+    Radius-1 strategies lose victims when every adjacent link is down
+    (eclipse / handover outage); multi-hop strategies always have one for
+    W > 1. Must match `_select` exactly — the leap stepper skips idle
+    workers for which this is False.
+    """
+    if ls is None or cfg.strategy in (stealing.Strategy.GLOBAL,
+                                      stealing.Strategy.LIFELINE):
+        return jnp.broadcast_to(jnp.bool_(W > 1), (W,))
+    nbr_live = (ls.link_up[eidx] & (tbl["neighbors"] >= 0)).any(axis=1)
+    if cfg.strategy == stealing.Strategy.NEIGHBOR:
+        return nbr_live
+    # ADAPTIVE: escalated thieves fall back to the (unmasked) radius-2 set
+    return nbr_live | (jnp.bool_(W > 1) & (fails >= cfg.escalate_after))
+
+
+def _next_event(state: SimState, t, speed, fail_time, cfg: SimConfig, W: int,
+                tbl, ls):
     """First tick >= t at which any worker does more than a bulk decrement.
 
     Conservative (may return a tick with no visible state change — that
@@ -301,19 +348,24 @@ def _next_event(state: SimState, t, speed, fail_time, cfg: SimConfig, W: int):
     work/timer decrements plus busy/steal_wait accumulation.
     """
     alive = state.alive
+    if ls is None:
+        eidx, sp = None, speed
+    else:
+        eidx, sp = _epoch_view(ls, t)
     # first straggler-active tick >= t per worker
-    t0 = t + ((speed - t % speed) % speed)
+    t0 = t + ((sp - t % sp) % sp)
     run = (state.phase == PHASE_RUN) & alive
     # burning workers: event when work hits 0 on their work-th active tick
-    burn_ev = t0 + state.work * speed
-    # work-exhausted workers expand (deque nonempty) or start a steal
-    # (always possible for W > 1 under every strategy) at their next active
+    burn_ev = t0 + state.work * sp
+    # work-exhausted workers expand (deque nonempty) or start a steal (if a
+    # victim is reachable under the current link state) at their next active
     # tick — unless retired by a pre-shed warning (they idle until death).
     if cfg.preshed:
         retired = (fail_time >= 0) & (t >= fail_time - cfg.warn_ticks)
     else:
         retired = jnp.zeros((W,), bool)
-    idle_acts = (state.deque.size > 0) | (jnp.bool_(W > 1) & ~retired)
+    can_try = _can_attempt(cfg, tbl, ls, eidx, state.fails, W)
+    idle_acts = (state.deque.size > 0) | (can_try & ~retired)
     run_ev = jnp.where(state.work > 0, burn_ev,
                        jnp.where(idle_acts, t0, _NEVER))
     ev = jnp.where(run, run_ev, _NEVER)
@@ -332,12 +384,17 @@ def _next_event(state: SimState, t, speed, fail_time, cfg: SimConfig, W: int):
     if cfg.ckpt_interval > 0:
         ck = cfg.ckpt_interval
         ne = jnp.minimum(ne, t + ((ck - t % ck) % ck))
+    # next link-state change: leaps must never jump across an epoch boundary
+    # (τ, link availability, and speed divisors all switch there)
+    if ls is not None:
+        ne = jnp.minimum(ne, lstate.next_change(ls.epoch_starts, t, _NEVER))
     return ne
 
 
 def _sim_core(workload, mesh: topo.MeshTopology, cfg: SimConfig, key0,
-              fail_time, speed):
+              fail_time, speed, ls=None):
     W = mesh.num_workers
+    torus_full = mesh.torus and (W == mesh.rows * mesh.cols)
     tbl = _mesh_tables(mesh, cfg.strategy)
     tables = workload.tables()
     S = cfg.supervision_slots
@@ -366,6 +423,11 @@ def _sim_core(workload, mesh: topo.MeshTopology, cfg: SimConfig, key0,
         state, snap, t = carry
         key = jax.random.fold_in(key0, t)
         alive = state.alive
+        if ls is None:
+            eidx, sp, link = None, speed, None
+        else:
+            eidx, sp = _epoch_view(ls, t)
+            link = (ls.link_up[eidx], ls.link_tau[eidx])
 
         # ------------- scheduled failures / shutdowns --------------------- #
         dying_now = alive & (fail_time == t)
@@ -475,7 +537,7 @@ def _sim_core(workload, mesh: topo.MeshTopology, cfg: SimConfig, key0,
             ckpt_count=state.ckpt_count + take_ckpt.astype(jnp.int32))
 
         # ------------- phase RUN: work / expand / start steal -------------- #
-        active_tick = alive & (t % speed == 0)  # stragglers advance slowly
+        active_tick = alive & (t % sp == 0)  # stragglers advance slowly
         running = (state.phase == PHASE_RUN) & active_tick
         burning = running & (state.work > 0)
         work = state.work - burning.astype(jnp.int32)
@@ -496,13 +558,20 @@ def _sim_core(workload, mesh: topo.MeshTopology, cfg: SimConfig, key0,
             # retired workers (warned of shutdown) must not pull work back in
             retired = (fail_time >= 0) & (t >= fail_time - cfg.warn_ticks)
             idle = idle & ~retired
-        victim_new = _select(cfg, tbl, key, idle, state.fails, W)
+        victim_new = _select(cfg, tbl, key, idle, state.fails, W, link)
         has_victim = victim_new >= 0
         vhops = jnp.where(has_victim,
                           _hop_dist(mesh, tbl["coords"], victim_new), 0)
+        if ls is None:
+            req_ticks = vhops * cfg.hop_ticks
+        else:
+            # flight latency sampled from the departure epoch's link state
+            req_ticks = jnp.where(has_victim, lstate.flight_ticks(
+                ls, eidx, jnp.arange(W), victim_new,
+                mesh.rows, mesh.cols, torus_full), 0)
         start_req = idle & has_victim & alive
         phase = jnp.where(start_req, PHASE_REQ, state.phase)
-        timer = jnp.where(start_req, vhops * cfg.hop_ticks, state.timer)
+        timer = jnp.where(start_req, req_ticks, state.timer)
         victim = jnp.where(start_req, victim_new, state.victim)
         attempts = state.attempts + start_req.astype(jnp.int32)
         hop_units = jnp.sum(jnp.where(start_req, vhops, 0))
@@ -541,7 +610,15 @@ def _sim_core(workload, mesh: topo.MeshTopology, cfg: SimConfig, key0,
         phase = jnp.where(resp_start, PHASE_RESP, phase)
         back_hops = jnp.where(resp_start,
                               _hop_dist(mesh, tbl["coords"], victim), 0)
-        timer = jnp.where(resp_start, back_hops * cfg.hop_ticks, timer)
+        if ls is None:
+            back_ticks = back_hops * cfg.hop_ticks
+        else:
+            # reply priced on the victim→thief path at the *arrival* epoch
+            # (which may differ from the request's departure epoch)
+            back_ticks = jnp.where(resp_start, lstate.flight_ticks(
+                ls, eidx, victim, jnp.arange(W),
+                mesh.rows, mesh.cols, torus_full), 0)
+        timer = jnp.where(resp_start, back_ticks, timer)
         hop_units = hop_units + jnp.sum(jnp.where(resp_start, back_hops, 0))
         loot = jnp.where(resp_start[:, None], stolen, state.loot)
         got_flight = jnp.where(resp_start, got, state.got)
@@ -580,20 +657,23 @@ def _sim_core(workload, mesh: topo.MeshTopology, cfg: SimConfig, key0,
         after the final burn tick — land exactly there (not on the next
         event tick, which would run a phantom extra tick) and clear live.
         """
-        ne = _next_event(state, t, speed, fail_time, cfg, W)
+        ne = _next_event(state, t, speed, fail_time, cfg, W, tbl, ls)
+        # within [t, ne) the epoch is fixed (ne never exceeds the next
+        # link-state change), so one speed row governs the whole window
+        sp = speed if ls is None else _epoch_view(ls, t)[1]
         delta = jnp.clip(jnp.minimum(ne, cfg.max_ticks) - t, 0, None)
         delta = jnp.where(live, delta, 0)
-        t0 = t + ((speed - t % speed) % speed)  # first active tick >= t
+        t0 = t + ((sp - t % sp) % sp)  # first active tick >= t
         burning = (state.phase == PHASE_RUN) & state.alive & (state.work > 0)
         # burners: one work unit per straggler-active tick in the window
-        n_in = lambda d: ((t + d + speed - 1) // speed - (t + speed - 1) // speed)
+        n_in = lambda d: ((t + d + sp - 1) // sp - (t + sp - 1) // sp)
         nact = jnp.where(burning, jnp.minimum(n_in(delta), state.work), 0)
         drained = (jnp.sum(state.deque.size) + jnp.sum(state.work - nact)
                    + jnp.sum(state.got.astype(jnp.int32))) == 0
         # tick right after the last burn of the burners that finish in-window
         exit_t = jnp.max(jnp.where(
             burning & (nact == state.work),
-            t0 + (state.work - 1) * speed + 1, 0))
+            t0 + (state.work - 1) * sp + 1, 0))
         delta = jnp.where(live & drained,
                           jnp.minimum(delta, jnp.maximum(exit_t - t, 0)),
                           delta)
@@ -629,9 +709,9 @@ _sim_jit = partial(jax.jit, static_argnames=("workload", "mesh", "cfg"))(_sim_co
 
 
 @partial(jax.jit, static_argnames=("workload", "mesh", "cfg"))
-def _sim_batch_jit(workload, mesh, cfg, keys, fail_time, speed):
+def _sim_batch_jit(workload, mesh, cfg, keys, fail_time, speed, ls):
     return jax.vmap(
-        lambda k, ft, sp: _sim_core(workload, mesh, cfg, k, ft, sp)
+        lambda k, ft, sp: _sim_core(workload, mesh, cfg, k, ft, sp, ls)
     )(keys, fail_time, speed)
 
 
@@ -674,16 +754,31 @@ def _fail_speed_arrays(W, fail_time, speed):
     return ft, sp
 
 
+def _linkstate_tables(linkstate, mesh, speed):
+    if linkstate is None:
+        return None
+    if speed is not None:
+        raise ValueError(
+            "pass straggler speeds through the LinkStateSchedule's per-epoch "
+            "`speed` field, not the static `speed` argument, when simulating "
+            "under a link-state schedule")
+    return lstate.device_tables(linkstate, mesh)
+
+
 def simulate(workload, mesh: topo.MeshTopology, cfg: SimConfig | None = None,
              fail_time: np.ndarray | None = None,
-             speed: np.ndarray | None = None) -> SimResult:
+             speed: np.ndarray | None = None,
+             linkstate: "lstate.LinkStateSchedule | None" = None) -> SimResult:
     """Run the tick simulator. `fail_time[w]` = death tick (-1: immortal);
-    `speed[w]` = straggler divisor (1 = nominal)."""
+    `speed[w]` = straggler divisor (1 = nominal). With `linkstate`, hop
+    latency / link availability / speeds follow the piecewise-constant
+    schedule instead of the scalar `cfg.hop_ticks` (which is then unused)."""
     cfg = cfg or SimConfig()
     _check_cfg(cfg)
+    ls = _linkstate_tables(linkstate, mesh, speed)
     ft, sp = _fail_speed_arrays(mesh.num_workers, fail_time, speed)
     state, ticks, iters = _sim_jit(workload, mesh, cfg,
-                                   jax.random.PRNGKey(cfg.seed), ft, sp)
+                                   jax.random.PRNGKey(cfg.seed), ft, sp, ls)
     return _finalize(jax.device_get(state), ticks, iters, mesh, cfg)
 
 
@@ -691,16 +786,20 @@ def simulate_batch(workload, mesh: topo.MeshTopology,
                    cfg: SimConfig | None = None,
                    seeds=(0,),
                    fail_time: np.ndarray | None = None,
-                   speed: np.ndarray | None = None) -> list[SimResult]:
+                   speed: np.ndarray | None = None,
+                   linkstate: "lstate.LinkStateSchedule | None" = None
+                   ) -> list[SimResult]:
     """Run one simulation per seed in a single compiled, vmapped call.
 
     All seeds share `cfg` (whose own `seed` field is ignored), the failure
-    schedule, and the straggler speeds; the batch advances until the
-    slowest seed terminates. Returns one `SimResult` per seed, identical
-    to `simulate(..., cfg._replace-ish(seed=s))` run serially.
+    schedule, the straggler speeds, and the link-state schedule; the batch
+    advances until the slowest seed terminates. Returns one `SimResult` per
+    seed, identical to `simulate(..., cfg._replace-ish(seed=s))` run
+    serially.
     """
     cfg = cfg or SimConfig()
     _check_cfg(cfg)
+    ls = _linkstate_tables(linkstate, mesh, speed)
     W = mesh.num_workers
     seeds = list(seeds)
     keys = jnp.stack([jax.random.PRNGKey(int(s)) for s in seeds])
@@ -708,7 +807,8 @@ def simulate_batch(workload, mesh: topo.MeshTopology,
     B = len(seeds)
     fts = jnp.broadcast_to(ft[None], (B, W))
     sps = jnp.broadcast_to(sp[None], (B, W))
-    states, ticks, iters = _sim_batch_jit(workload, mesh, cfg, keys, fts, sps)
+    states, ticks, iters = _sim_batch_jit(workload, mesh, cfg, keys, fts, sps,
+                                          ls)
     states, ticks, iters = jax.device_get((states, ticks, iters))
     return [
         _finalize(jax.tree.map(lambda x: x[i], states), ticks[i], iters[i],

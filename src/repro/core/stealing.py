@@ -69,14 +69,36 @@ def neighbor_list(mesh: topo.MeshTopology) -> np.ndarray:
 
 
 def radius2_list(mesh: topo.MeshTopology) -> np.ndarray:
-    """(W, 12) ids of workers within <=2 hops (excluding self), padded with -1."""
+    """(W, 12) ids of workers within <=2 hops (excluding self), padded with -1.
+
+    Coords-based and fully vectorized: enumerates the 12 Manhattan offsets of
+    radius <= 2 instead of scanning the (W, W) hop matrix row by row, so
+    building the ADAPTIVE victim table no longer blocks W >= 4k sweeps.
+    Entries are ascending worker ids, deduplicated (small tori alias several
+    offsets onto the same worker) — identical to the hop-matrix scan.
+    """
     W = mesh.num_workers
-    h = mesh.hop_matrix
-    out = np.full((W, 12), topo.NO_NEIGHBOR, dtype=np.int32)
-    for w in range(W):
-        cand = np.where((h[w] > 0) & (h[w] <= 2))[0]
-        out[w, : len(cand)] = cand[:12]
-    return out
+    R, C = mesh.rows, mesh.cols
+    offs = np.asarray([(dr, dc)
+                       for dr in range(-2, 3) for dc in range(-2, 3)
+                       if 0 < abs(dr) + abs(dc) <= 2], np.int64)   # (12, 2)
+    r = mesh.coords[:, 0:1].astype(np.int64) + offs[None, :, 0]    # (W, 12)
+    c = mesh.coords[:, 1:2].astype(np.int64) + offs[None, :, 1]
+    if mesh.torus and W == R * C:  # the hop metric wraps only on exact tori
+        r %= R
+        c %= C
+        ok = np.ones_like(r, bool)
+    else:
+        ok = (r >= 0) & (r < R) & (c >= 0) & (c < C)
+    cand = np.where(ok, r * C + c, W)
+    cand = np.where(cand >= W, W, cand)              # ragged last row
+    cand = np.where(cand == np.arange(W)[:, None], W, cand)  # wraps onto self
+    cand.sort(axis=1)
+    dup = np.zeros_like(cand, bool)
+    dup[:, 1:] = cand[:, 1:] == cand[:, :-1]
+    cand[dup] = W
+    cand.sort(axis=1)
+    return np.where(cand == W, topo.NO_NEIGHBOR, cand).astype(np.int32)
 
 
 def lifeline_list(num_workers: int, degree: int = 0) -> np.ndarray:
@@ -147,6 +169,26 @@ def choose_adaptive(key, neighbor_table: jax.Array, radius2_table: jax.Array,
     (paper §6: 'gradually considering more distant victims')."""
     k1, k2 = jax.random.split(key)
     near = _pick_from_list(k1, neighbor_table, is_thief)
+    far = _pick_from_list(k2, radius2_table, is_thief)
+    return jnp.where(is_thief & (fails >= escalate_after), far, near)
+
+
+def choose_adaptive_linkaware(key, neighbor_table: jax.Array,
+                              radius2_table: jax.Array, link_tau: jax.Array,
+                              fails: jax.Array, is_thief: jax.Array,
+                              escalate_after: int = 4) -> jax.Array:
+    """ADAPTIVE under a time-varying link state: prefer the *cheapest* live
+    neighbor (uniform among the current-τ argmin set, so a uniform schedule
+    reduces exactly to `choose_adaptive`), escalating to radius-2 after
+    `escalate_after` consecutive failures. `neighbor_table` must already
+    have dead links masked to NO_NEIGHBOR; `link_tau` is the (W, 4) row of
+    the active epoch."""
+    k1, k2 = jax.random.split(key)
+    valid = neighbor_table != topo.NO_NEIGHBOR
+    cost = jnp.where(valid, link_tau, jnp.iinfo(jnp.int32).max)
+    cheapest = valid & (cost == jnp.min(cost, axis=1, keepdims=True))
+    near_table = jnp.where(cheapest, neighbor_table, topo.NO_NEIGHBOR)
+    near = _pick_from_list(k1, near_table, is_thief)
     far = _pick_from_list(k2, radius2_table, is_thief)
     return jnp.where(is_thief & (fails >= escalate_after), far, near)
 

@@ -31,6 +31,30 @@ def test_conservation(S, slots, data):
     assert before == after
 
 
+def test_link_ok_gates_participation():
+    """Shards with a dark ISL neither request nor donate: an all-dark mask
+    freezes the queues, a half-dark mask still conserves the multiset."""
+    S, slots = 6, 8
+    costs = np.zeros((S, slots), np.int32)
+    costs[0] = 10  # everything on shard 0 → strong pull to rebalance
+    valid = costs > 0
+    items, v, c = _mk(S, slots, costs, valid)
+    it, va, co, dropped = balancer.rebalance_reference(
+        items, v, c, rounds=3, link_ok=jnp.zeros((S,), bool))
+    np.testing.assert_array_equal(np.asarray(va), valid)
+    np.testing.assert_array_equal(np.asarray(it), np.asarray(items))
+    assert int(dropped) == 0
+    link_ok = jnp.asarray(np.arange(S) % 2 == 0)
+    it, va, co, dropped = balancer.rebalance_reference(
+        items, v, c, rounds=3, link_ok=link_ok)
+    before = sorted(map(tuple, np.asarray(items)[valid]))
+    after = sorted(map(tuple, np.asarray(it)[np.asarray(va)]))
+    assert int(dropped) == 0 and before == after
+    # the unmasked run does move items off the loaded shard
+    it2, va2, _, _ = balancer.rebalance_reference(items, v, c, rounds=3)
+    assert np.asarray(va2)[1:].sum() > 0
+
+
 def test_root_loaded_diffusion():
     """All work on shard 0 (paper initial phase) spreads within O(S) rounds."""
     S, slots = 8, 16

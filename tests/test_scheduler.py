@@ -86,6 +86,27 @@ def test_work_is_distributed():
     assert (r.per_worker_busy > 0).all()
 
 
+def test_link_up_snapshot_masks_neighbor_victims():
+    """A frozen link-state snapshot removes dead links from radius-1 victim
+    selection: with every link down, neighbor-only stealing never succeeds
+    (worker 0 grinds through the tree alone) yet stays exact; an all-up
+    snapshot reproduces the unmasked run bit-for-bit."""
+    cfg = scheduler.SchedulerConfig(strategy=stealing.Strategy.NEIGHBOR,
+                                    capacity=1024, max_rounds=200_000)
+    W = MESH.num_workers
+    base = scheduler.run_vectorized(FIB, MESH, cfg)
+    all_up = scheduler.run_vectorized(FIB, MESH, cfg,
+                                      link_up=np.ones((W, 4), bool))
+    for f in ("result", "rounds", "nodes", "attempts", "successes"):
+        assert getattr(all_up, f) == getattr(base, f), f
+    dark = scheduler.run_vectorized(FIB, MESH, cfg,
+                                    link_up=np.zeros((W, 4), bool))
+    assert dark.result == FIB.expected_result()
+    assert dark.successes == 0
+    assert base.successes > 0
+    assert (dark.per_worker_busy[1:] == 0).all()
+
+
 # --------------------------------------------------------------------------- #
 # resolve_grants properties
 # --------------------------------------------------------------------------- #

@@ -8,6 +8,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core import constellation, linkstate
 from repro.core import deque as dq
 from repro.core import simulator, stealing, tasks, topology
 
@@ -233,6 +234,133 @@ def test_leap_equals_tick_with_steal_kernel():
     for k, r in res.items():
         for f in EQ_FIELDS:
             assert getattr(r, f) == getattr(ref, f), (k, f)
+
+
+# --------------------------------------------------------------------------- #
+# Time-varying link state (linkstate subsystem)
+# --------------------------------------------------------------------------- #
+def _dynamic_schedule():
+    """Non-trivial schedule on EQ_MESH: oscillating inter-row τ, a link-down
+    epoch around worker 4, per-epoch straggler speeds — plus an eclipse
+    (predictable death of worker 4 at the outage epoch, pre-shed warned)."""
+    W = EQ_MESH.num_workers
+    starts = np.asarray([0, 37, 60, 95, 150, 300], np.int32)
+    E = len(starts)
+    tau = np.ones((E, W, 4), np.int32)
+    up = np.ones((E, W, 4), bool)
+    speed = np.ones((E, W), np.int32)
+    nbr = EQ_MESH.neighbor_table
+    for e in range(E):
+        tau[e, :, linkstate.NORTH] = tau[e, :, linkstate.SOUTH] = 2 + (e % 3)
+        tau[e, :, linkstate.WEST] = tau[e, :, linkstate.EAST] = 3
+    for d in range(4):  # epoch 2: worker 4 enters eclipse, its links go dark
+        if nbr[4, d] >= 0:
+            up[2, 4, d] = False
+            up[2, nbr[4, d], linkstate.OPPOSITE[d]] = False
+    speed[3, [1, 5]] = 3
+    ls = linkstate.LinkStateSchedule(starts, tau, up, speed).validate(EQ_MESH)
+    ft = -np.ones(W, np.int32)
+    ft[4] = 60
+    return ls, ft
+
+
+@pytest.mark.parametrize("strategy", [stealing.Strategy.NEIGHBOR,
+                                      stealing.Strategy.GLOBAL,
+                                      stealing.Strategy.ADAPTIVE])
+def test_leap_equals_tick_dynamic_linkstate(strategy):
+    """Acceptance: the event-leaping stepper stays bit-identical to the
+    one-tick oracle under a non-trivial time-varying schedule (oscillating
+    τ + a link-down epoch + an eclipse shutdown + speed epochs)."""
+    ls, ft = _dynamic_schedule()
+    results = {}
+    for mode in ("tick", "leap"):
+        cfg = simulator.SimConfig(strategy=strategy, capacity=128,
+                                  max_ticks=200_000, step_mode=mode,
+                                  preshed=True, warn_ticks=8)
+        results[mode] = simulator.simulate(EQ_FIB, EQ_MESH, cfg,
+                                           fail_time=ft, linkstate=ls)
+    a, b = results["tick"], results["leap"]
+    for f in EQ_FIELDS:
+        assert getattr(a, f) == getattr(b, f), (
+            f"{f}: tick={getattr(a, f)} leap={getattr(b, f)}")
+    assert (a.per_worker_busy == b.per_worker_busy).all()
+    assert b.events <= b.ticks + 1
+
+
+@pytest.mark.parametrize("strategy", [stealing.Strategy.NEIGHBOR,
+                                      stealing.Strategy.GLOBAL,
+                                      stealing.Strategy.ADAPTIVE])
+def test_static_linkstate_equals_scalar_hop_ticks(strategy):
+    """The degenerate single-epoch uniform schedule reproduces the scalar
+    `hop_ticks` path bit-for-bit (ADAPTIVE included: with uniform τ the
+    cheapest-live-neighbor pick reduces to the uniform neighbor pick)."""
+    ls = linkstate.LinkStateSchedule.static(EQ_MESH, 3)
+    cfg = simulator.SimConfig(strategy=strategy, hop_ticks=3, capacity=128,
+                              max_ticks=200_000)
+    a = simulator.simulate(EQ_FIB, EQ_MESH, cfg)
+    b = simulator.simulate(EQ_FIB, EQ_MESH, cfg, linkstate=ls)
+    for f in EQ_FIELDS:
+        assert getattr(a, f) == getattr(b, f), f
+    assert (a.per_worker_busy == b.per_worker_busy).all()
+
+
+def test_constellation_schedule_exact_with_preshed():
+    """End-to-end: a constellation-emitted dynamic schedule (oscillation,
+    eclipse dark links, seam handovers) with malleable pre-shed loses no
+    work, and leap stays equal to tick."""
+    ccfg = constellation.ConstellationConfig(
+        planes=3, sats_per_plane=3, orbit_ticks=400, tau_base=3,
+        battery_limited_frac=0.3, warn_ticks=20, wraparound=True,
+        epochs_per_orbit=8, seam_outage_frac=0.15, seed=5)
+    con = constellation.Constellation(ccfg)
+    sched = con.schedule(horizon_ticks=800)
+    pred_fail = np.where(sched.predictable, sched.fail_time, -1).astype(np.int32)
+    assert (pred_fail >= 0).any()
+    results = {}
+    for mode in ("tick", "leap"):
+        cfg = simulator.SimConfig(strategy=stealing.Strategy.ADAPTIVE,
+                                  capacity=128, max_ticks=200_000,
+                                  step_mode=mode, preshed=True,
+                                  warn_ticks=ccfg.warn_ticks)
+        results[mode] = simulator.simulate(EQ_FIB, con.mesh, cfg,
+                                           fail_time=pred_fail,
+                                           linkstate=sched.linkstate)
+    a, b = results["tick"], results["leap"]
+    assert a.result == EQ_FIB.expected_result()
+    for f in EQ_FIELDS:
+        assert getattr(a, f) == getattr(b, f), f
+
+
+def test_linkstate_speed_epochs_replace_speed_arg():
+    """Straggler divisors ride in the schedule's per-epoch `speed`; passing
+    both the static `speed` argument and a schedule is rejected."""
+    W = EQ_MESH.num_workers
+    sp = np.ones(W, np.int32)
+    sp[[2, 5]] = 4
+    ls = linkstate.LinkStateSchedule.static(EQ_MESH, 3, speed=sp)
+    cfg = simulator.SimConfig(strategy=stealing.Strategy.NEIGHBOR,
+                              hop_ticks=3, capacity=128, max_ticks=200_000)
+    a = simulator.simulate(EQ_FIB, EQ_MESH, cfg, speed=sp)
+    b = simulator.simulate(EQ_FIB, EQ_MESH, cfg, linkstate=ls)
+    for f in EQ_FIELDS:
+        assert getattr(a, f) == getattr(b, f), f
+    with pytest.raises(ValueError):
+        simulator.simulate(EQ_FIB, EQ_MESH, cfg, speed=sp, linkstate=ls)
+
+
+def test_simulate_batch_matches_serial_with_linkstate():
+    ls, ft = _dynamic_schedule()
+    seeds = [0, 3]
+    cfg = simulator.SimConfig(strategy=stealing.Strategy.NEIGHBOR,
+                              capacity=128, max_ticks=200_000)
+    batch = simulator.simulate_batch(EQ_FIB, EQ_MESH, cfg, seeds=seeds,
+                                     fail_time=ft, linkstate=ls)
+    for s, rb in zip(seeds, batch):
+        rs = simulator.simulate(EQ_FIB, EQ_MESH,
+                                dataclasses.replace(cfg, seed=s),
+                                fail_time=ft, linkstate=ls)
+        for f in EQ_FIELDS:
+            assert getattr(rb, f) == getattr(rs, f), (s, f)
 
 
 def test_simulate_batch_matches_serial():

@@ -6,9 +6,64 @@ import pytest
 
 from hypothesis_compat import given, settings, st  # degrades to skips without hypothesis
 
-from repro.core import stealing
+from repro.core import stealing, topology
 
 FIELDS = ("victim", "rank", "got", "taken", "hops")
+
+
+# --------------------------------------------------------------------------- #
+# radius2_list: vectorized offset enumeration ≡ hop-matrix scan
+# --------------------------------------------------------------------------- #
+def _radius2_reference(mesh):
+    """The pre-vectorization implementation: row-by-row hop-matrix scan."""
+    W = mesh.num_workers
+    h = mesh.hop_matrix
+    out = np.full((W, 12), topology.NO_NEIGHBOR, dtype=np.int32)
+    for w in range(W):
+        cand = np.where((h[w] > 0) & (h[w] <= 2))[0]
+        out[w, : len(cand)] = cand[:12]
+    return out
+
+
+@pytest.mark.parametrize("mesh", [
+    topology.MeshTopology.square(16),
+    topology.MeshTopology.square(10),              # ragged last row
+    topology.MeshTopology.grid(4, 5, torus=True),  # full torus
+    topology.MeshTopology.grid(2, 3, torus=True),  # tiny torus: offset aliasing
+    topology.MeshTopology.grid(3, 3, torus=True),
+    topology.MeshTopology.grid(1, 6),
+    topology.MeshTopology.square(1),
+], ids=lambda m: f"{m.rows}x{m.cols}{'t' if m.torus else ''}w{m.num_workers}")
+def test_radius2_vectorized_matches_hop_matrix_scan(mesh):
+    np.testing.assert_array_equal(stealing.radius2_list(mesh),
+                                  _radius2_reference(mesh))
+
+
+def test_choose_adaptive_linkaware_prefers_cheapest_live():
+    """With distinct link costs the near pick is the τ-argmin live neighbor;
+    dead links are excluded; all-dead rows return NO_NEIGHBOR."""
+    import jax
+    mesh = topology.MeshTopology.square(9)
+    nbrs = jnp.asarray(stealing.neighbor_list(mesh))
+    W = mesh.num_workers
+    tau = jnp.asarray(np.arange(4)[None, :] + 2 + np.zeros((W, 1)),
+                      jnp.int32)  # direction d costs 2+d, unique per row
+    up = jnp.asarray(np.ones((W, 4), bool))
+    masked = jnp.where(up & (nbrs >= 0), nbrs, topology.NO_NEIGHBOR)
+    is_thief = jnp.ones((W,), bool)
+    fails = jnp.zeros((W,), jnp.int32)
+    r2 = jnp.asarray(stealing.radius2_list(mesh))
+    v = stealing.choose_adaptive_linkaware(jax.random.PRNGKey(0), masked, r2,
+                                           tau, fails, is_thief)
+    # the cheapest existing direction per worker is the lowest direction index
+    first_dir = np.argmax(np.asarray(nbrs) >= 0, axis=1)
+    np.testing.assert_array_equal(
+        np.asarray(v), np.asarray(nbrs)[np.arange(W), first_dir])
+    # all links dead -> no victim (the simulator's leap relies on this)
+    dead = jnp.full((W, 4), topology.NO_NEIGHBOR, jnp.int32)
+    v2 = stealing.choose_adaptive_linkaware(jax.random.PRNGKey(0), dead, r2,
+                                            tau, fails, is_thief)
+    assert (np.asarray(v2) == topology.NO_NEIGHBOR).all()
 
 
 def _random_instance(rng, W):
