@@ -1,22 +1,29 @@
 """Simulator throughput: event-leaping stepper vs the one-tick oracle.
 
 Measures wall-clock and ticks-simulated-per-second for GLOBAL / NEIGHBOR /
-ADAPTIVE at W ∈ {100, 640, 2500} on the `paper_mesh` granularity-faithful
-workload (`fib_granular`: leaf cost >> steal RTT, the paper's regime).
-Both steppers are timed on the SAME simulated horizon (a per-W tick cap
-keeps the one-tick baseline affordable; leap-mode full runs finish far
-beyond it), so `speedup` is a like-for-like wall-clock ratio.
+ADAPTIVE at W ∈ {100, 640, 2500} × τ ∈ {1, 5} on the `paper_mesh`
+granularity-faithful workload (`fib_granular`: leaf cost >> steal RTT, the
+paper's regime). Both steppers are timed on the SAME simulated horizon (a
+per-W tick cap keeps the one-tick baseline affordable; leap-mode full runs
+finish far beyond it), so `speedup` is a like-for-like wall-clock ratio.
 
-What to expect (CPU, W=100, hop_ticks=5):
+What to expect (CPU, W=100):
 
   * GLOBAL — utilization ~0.99, thieves spend their idle time in multi-hop
     flights: dead ticks dominate and the leap factor (ticks/events) is
     ~8x, hence >= 5x wall-clock speedup.
   * NEIGHBOR — the famine-churn regime the paper studies: distant idle
-    workers re-probe empty neighbors every 2τ, so nearly every tick
-    carries an event and leap ≈ 1x. The win here is the O(W log W) grant
-    resolution: W=2500 never materializes a (W, W) intermediate in the
-    per-tick path (the seed's pairwise matrices would be 25 MB/tick).
+    workers re-probe empty neighbors every ~2τ. Per-tick these retries
+    capped the leap factor at ~1; the famine fast path (probe cycles
+    provably failing until the next deque event are replayed in fused
+    batches — simulator module docstring) lifts it to ~7x at τ=5 and
+    ~14x at τ=1 (wall-clock ~3x / ~15x). The O(W log W) grant resolution
+    still carries W=2500: no (W, W) intermediate in the per-tick path
+    (the seed's pairwise matrices would be 25 MB/tick).
+
+Writes a consolidated JSON (strategy × W × τ → leap factor, wall-clock,
+ticks/s, utilization) with `--json BENCH_sim.json`; CI uploads it so leap
+regressions are visible across commits.
 
 Usage:
   PYTHONPATH=src python -m benchmarks.bench_sim_throughput            # sweep
@@ -58,7 +65,7 @@ def _run(wl, mesh, strategy, step_mode, max_ticks, hop_ticks, capacity):
 
 
 def run(workers=(100, 640, 2500), strategies=("global", "neighbor", "adaptive"),
-        hop_ticks: int = 5, quick: bool = False, json_path: str | None = None):
+        taus=(5,), quick: bool = False, json_path: str | None = None):
     wl = paper_mesh.CONFIG.fib_granular
     capacity = 2048
     results = {}
@@ -68,30 +75,31 @@ def run(workers=(100, 640, 2500), strategies=("global", "neighbor", "adaptive"),
         if quick:
             cap = min(cap, 4_000)
         for sname in strategies:
-            per = {}
-            for mode in ("leap", "tick"):
-                r, wall, cwall = _run(wl, mesh, STRATS[sname], mode, cap,
-                                      hop_ticks, capacity)
-                per[mode] = dict(ticks=r.ticks, events=r.events, wall=wall,
-                                 compile_wall=cwall,
-                                 tps=r.ticks / max(wall, 1e-9),
-                                 util=r.utilization)
-            leap, tick = per["leap"], per["tick"]
-            assert leap["ticks"] == tick["ticks"], "steppers diverged"
-            speedup = tick["wall"] / max(leap["wall"], 1e-9)
-            leap_factor = leap["ticks"] / max(leap["events"], 1)
-            results[(W, sname)] = dict(per=per, speedup=speedup,
-                                       leap_factor=leap_factor)
-            emit(f"bench_sim/{sname}/W={W}", leap["wall"] * 1e6,
-                 f"ticks={leap['ticks']};events={leap['events']};"
-                 f"leap_factor={leap_factor:.1f}x;"
-                 f"leap_tps={leap['tps']:.0f};tick_tps={tick['tps']:.0f};"
-                 f"leap_wall={leap['wall']:.2f}s;tick_wall={tick['wall']:.2f}s;"
-                 f"speedup={speedup:.2f}x;util={leap['util']:.2f}")
+            for tau in taus:
+                per = {}
+                for mode in ("leap", "tick"):
+                    r, wall, cwall = _run(wl, mesh, STRATS[sname], mode, cap,
+                                          tau, capacity)
+                    per[mode] = dict(ticks=r.ticks, events=r.events, wall=wall,
+                                     compile_wall=cwall,
+                                     tps=r.ticks / max(wall, 1e-9),
+                                     util=r.utilization)
+                leap, tick = per["leap"], per["tick"]
+                assert leap["ticks"] == tick["ticks"], "steppers diverged"
+                speedup = tick["wall"] / max(leap["wall"], 1e-9)
+                leap_factor = leap["ticks"] / max(leap["events"], 1)
+                results[(W, sname, tau)] = dict(per=per, speedup=speedup,
+                                                leap_factor=leap_factor)
+                emit(f"bench_sim/{sname}/W={W}/tau={tau}", leap["wall"] * 1e6,
+                     f"ticks={leap['ticks']};events={leap['events']};"
+                     f"leap_factor={leap_factor:.1f}x;"
+                     f"leap_tps={leap['tps']:.0f};tick_tps={tick['tps']:.0f};"
+                     f"leap_wall={leap['wall']:.2f}s;tick_wall={tick['wall']:.2f}s;"
+                     f"speedup={speedup:.2f}x;util={leap['util']:.2f}")
     if json_path:
         with open(json_path, "w") as f:
-            json.dump({f"W={W}/{s}": r for (W, s), r in results.items()},
-                      f, indent=2)
+            json.dump({f"strategy={s}/W={W}/tau={tau}": r
+                       for (W, s, tau), r in results.items()}, f, indent=2)
     return results
 
 
@@ -102,16 +110,20 @@ def main():
     ap.add_argument("--workers", type=int, nargs="+", default=None)
     ap.add_argument("--strategies", nargs="+", default=None,
                     choices=sorted(STRATS))
-    ap.add_argument("--hop-ticks", type=int, default=5)
-    ap.add_argument("--json", default=None, help="write results JSON here")
+    ap.add_argument("--taus", type=int, nargs="+", default=None,
+                    help="hop_ticks values to sweep (default: 1 5)")
+    ap.add_argument("--json", default=None,
+                    help="write consolidated results JSON here "
+                         "(e.g. BENCH_sim.json)")
     args = ap.parse_args()
     workers = tuple(args.workers) if args.workers else (
         (100,) if args.quick else (100, 640, 2500))
     strategies = tuple(args.strategies) if args.strategies else (
         ("global", "neighbor") if args.quick
         else ("global", "neighbor", "adaptive"))
+    taus = tuple(args.taus) if args.taus else (1, 5)
     print("name,us_per_call,derived")
-    run(workers=workers, strategies=strategies, hop_ticks=args.hop_ticks,
+    run(workers=workers, strategies=strategies, taus=taus,
         quick=args.quick, json_path=args.json)
 
 

@@ -18,6 +18,10 @@ def main() -> None:
                     help="paper-scale workloads (minutes-hours)")
     ap.add_argument("--only", default="",
                     help="comma list: table1,fig3,fig4,mesh,sim,moe,roofline")
+    ap.add_argument("--bench-json", default="BENCH_sim.json",
+                    help="consolidated simulator-bench JSON written by the "
+                         "'sim' study (leap factor + wall-clock per "
+                         "strategy x W x tau); empty string disables")
     args = ap.parse_args()
     small = not args.full
     only = set(args.only.split(",")) if args.only else None
@@ -49,7 +53,8 @@ def main() -> None:
         from . import bench_sim_throughput
         bench_sim_throughput.run(workers=(100,) if small else (100, 640, 2500),
                                  strategies=("global", "neighbor"),
-                                 quick=small)
+                                 taus=(1, 5), quick=small,
+                                 json_path=args.bench_json or None)
 
     if want("moe"):
         from . import moe_overflow

@@ -211,9 +211,27 @@ def epoch_index(epoch_starts: jax.Array, t) -> jax.Array:
 
 
 def next_change(epoch_starts: jax.Array, t, never) -> jax.Array:
-    """First epoch boundary strictly after `t` (`never` if none left)."""
+    """First epoch boundary strictly after `t` (`never` if none left).
+
+    Both the simulator's generic event horizon and its famine-window
+    horizon clip against this: τ, link liveness, and straggler speeds all
+    switch at epoch boundaries, so neither a leap nor a batched
+    probe-cycle window may ever cross one.
+    """
     return jnp.min(jnp.where(epoch_starts > t, epoch_starts,
                              jnp.int32(never)))
+
+
+def min_link_tau(tbl: LinkStateArrays, eidx) -> jax.Array:
+    """Cheapest one-hop latency anywhere in epoch `eidx`.
+
+    Lower-bounds every probe cycle's duration (a failed 1-hop attempt costs
+    at least 2·τ_min − 1 ticks), which the famine fast path uses to bound
+    how many failures — and hence ADAPTIVE escalations — can occur inside a
+    window. Includes table entries of non-existent links (still >= 1 by
+    validation), which can only make the bound smaller, i.e. conservative.
+    """
+    return jnp.min(tbl.link_tau[eidx])
 
 
 def _axis_cost(cum_ax, lo, hi, lane, n: int, torus_full: bool):

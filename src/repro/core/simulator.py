@@ -38,13 +38,48 @@ steal phase transitions, failures, checkpoints), not the number of ticks:
 with `hop_ticks` ≥ 1 or leaf costs > 1 the dead ticks collapse and
 constellation-scale sweeps (W ≥ 640) become tractable.
 
+Famine-window fast path (probe-cycle leaping)
+---------------------------------------------
+The leap above is throttled in the *famine-churn* regime (NEIGHBOR at
+small W): idle workers re-probe empty neighbors every ~2τ (§3.1's
+immediate retry), so nearly every tick carries a probe event and the leap
+factor degenerates to ~1. But victim emptiness is deterministic between
+true events — the lifeline-graph insight — so those retries carry no
+information. `_famine_horizon` computes the first tick at which any deque
+size can change: the next expansion of a task-holding worker, the next
+request arrival at a currently-nonempty victim, the next granted-loot
+delivery, the next probe opportunity of any thief whose drawable victim
+set could reach a nonempty deque (`stealing.probe_may_succeed`, including
+thieves currently mid-flight and ADAPTIVE escalation reachable within the
+window), the flight transition of any mid-flight worker whose own deque
+was refilled behind its back (supervision re-push / transplant — it will
+pop right after delivering), and the recovery / checkpoint / epoch
+horizons. Within that
+window deque sizes are provably frozen, so by induction every steal
+attempt fails deterministically; `famine_ff` then replays up to
+``famine_batch`` such ticks in ONE fused `lax.scan` per loop iteration —
+only the probe phase machine, burn-downs, and stats, no deque ops, no
+grant sort, no recovery machinery. Victim draws are gathered from
+`stealing.batched_victim_draws`, which replays the exact per-tick
+``fold_in(key0, t)`` sequence, so the result stays bit-identical.
+Measured effect (bench_sim_throughput, NEIGHBOR W=100): leap factor ~1× →
+~7× at τ=5 and ~14× at τ=1. Note the leap factor depends on the
+famine-churn vs backlog regime, not just granularity: GLOBAL's thieves
+idle in long multi-hop flights (plain leaping already wins), while
+NEIGHBOR's saturate every tick with retries (the famine path is what
+collapses them).
+
 Equivalence guarantee: because the event tick runs the unmodified one-tick
-code and the leap skips only ticks in which that code provably reduces to
-the bulk decrement, ``step_mode="leap"`` produces `SimResult`s identical to
+code, the leap skips only ticks in which that code provably reduces to
+the bulk decrement, and the famine batch replays only ticks whose steal
+attempts provably fail (with the identical key schedule),
+``step_mode="leap"`` produces `SimResult`s identical to
 ``step_mode="tick"`` (the seed one-tick stepper, kept as the test oracle) —
 same `result`, `ticks`, `nodes`, `attempts`, `successes`, and per-worker
 `busy`/`steal_wait`. The test suite asserts this over a matrix of
-strategy × recovery × {pre-shed, straggler} configs.
+strategy × recovery × {pre-shed, straggler} configs, plus dedicated
+famine-regime configs (small W, τ ∈ {1, 5}, mid-famine epoch flip and
+failure) and a property sweep over `famine_batch` sizes.
 
 Steal-conflict resolution uses sort-based segment ranking
 (`stealing.segment_prefix`) and the victim-side export runs through
@@ -140,6 +175,11 @@ class SimConfig:
     # execution: "leap" = event-leaping stepper (fast, default);
     # "tick" = the seed one-tick-per-iteration stepper (equivalence oracle)
     step_mode: str = "leap"
+    # famine fast path (leap mode only): max ticks of deterministically
+    # failing probe cycles collapsed into ONE loop iteration by a pruned
+    # batched replay (0 disables; bit-identical either way — the batch size
+    # only trades loop iterations against per-iteration work)
+    famine_batch: int = 64
     # victim-side grant export via the Pallas steal_compact kernel;
     # None = auto (compiled kernel on TPU, plain jnp gather elsewhere)
     use_steal_kernel: bool | None = None
@@ -175,7 +215,11 @@ class SimState(NamedTuple):
     hops_lo: jax.Array      # () int32: Σ msg hops, low 30-bit lane (exact)
     hops_hi: jax.Array      # () int32: Σ msg hops, carry lane
     ckpt_count: jax.Array   # () int32 checkpoints taken
-    overflow: jax.Array     # () int32
+    overflow: jax.Array     # (W,) int32 dropped-task count per worker: counts
+                            # every push that found a full deque — expansion
+                            # children, thief-side loot imports, transplant
+                            # writes (charged to the heir), supervision
+                            # re-pushes — so no loss is ever silent
 
 
 class SimResult(NamedTuple):
@@ -195,6 +239,9 @@ class SimResult(NamedTuple):
     # loop iterations executed (== ticks in "tick" mode; == event ticks in
     # "leap" mode — the leap factor is ticks / events)
     events: int = 0
+    # (W,) breakdown of `overflow`: dropped tasks charged to the worker whose
+    # full deque rejected the push (thief-side loot imports included)
+    per_worker_overflow: np.ndarray | None = None
 
 
 def _mesh_tables(mesh: topo.MeshTopology, strategy: stealing.Strategy):
@@ -215,19 +262,9 @@ def _mesh_tables(mesh: topo.MeshTopology, strategy: stealing.Strategy):
     return tbl
 
 
-def _hop_dist(mesh: topo.MeshTopology, coords: jax.Array, victim: jax.Array):
-    """Per-worker Manhattan hop count to `victim[w]` (torus-aware).
-
-    Matches `mesh.hop_matrix[w, victim[w]]` without materializing the
-    (W, W) matrix; O(W) gathers from the (W, 2) coordinate table.
-    """
-    v = jnp.clip(victim, 0, mesh.num_workers - 1)
-    dr = jnp.abs(coords[:, 0] - coords[v, 0])
-    dc = jnp.abs(coords[:, 1] - coords[v, 1])
-    if mesh.torus and mesh.num_workers == mesh.rows * mesh.cols:
-        dr = jnp.minimum(dr, mesh.rows - dr)
-        dc = jnp.minimum(dc, mesh.cols - dc)
-    return (dr + dc).astype(jnp.int32)
+# Per-worker hop distances are priced from coordinates (topology.hop_dist);
+# no dense pairwise table ever enters the per-tick path.
+_hop_dist = topo.hop_dist
 
 
 def _select(cfg: SimConfig, tbl, key, is_thief, fails, W, link=None):
@@ -290,11 +327,13 @@ def _transplant(deque_, acc, src_mask, heir, overflow):
     heir_base = size[heir] + offset                        # insertion cursor per source
     dst_slot = (bot[heir][:, None] + heir_base[:, None] + ranks) % cap
     live = src_mask[:, None] & (ranks < src_counts[:, None])
-    # drop writes that would overflow the heir
+    # drop writes that would overflow the heir; charge drops to the heir
+    # whose capacity rejected them (per-worker breakdown in SimResult)
     room = cap - size[heir] - offset
     fits = ranks < room[:, None]
     write = live & fits
-    overflow = overflow + jnp.sum(live & ~fits)
+    dropped = jnp.sum(live & ~fits, axis=1).astype(jnp.int32)
+    overflow = overflow.at[heir].add(jnp.where(src_mask, dropped, 0))
     # Scatter with duplicate (row, slot) pairs is order-undefined in XLA:
     # inactive rows must NOT read-modify-write the same destinations (a
     # no-op write may clobber a real one). Route every inactive element to
@@ -338,6 +377,29 @@ def _can_attempt(cfg: SimConfig, tbl, ls, eidx, fails, W: int):
     return nbr_live | (jnp.bool_(W > 1) & (fails >= cfg.escalate_after))
 
 
+def _scheduled_horizons(ne, t, alive, fail_time, cfg: SimConfig, ls):
+    """Clip `ne` at every scheduled global event: deaths (and pre-shed
+    warnings) of still-alive workers, periodic checkpoints, and link-state
+    epoch boundaries. Shared by `_next_event` and `_famine_horizon` so the
+    two horizons can never drift apart on these correctness-critical terms.
+    """
+    ne = jnp.minimum(ne, jnp.min(
+        jnp.where(alive & (fail_time >= t), fail_time, _NEVER)))
+    if cfg.preshed:
+        warn_at = fail_time - cfg.warn_ticks
+        ne = jnp.minimum(ne, jnp.min(
+            jnp.where(alive & (fail_time >= 0) & (warn_at >= t),
+                      warn_at, _NEVER)))
+    if cfg.ckpt_interval > 0:
+        ck = cfg.ckpt_interval
+        ne = jnp.minimum(ne, t + ((ck - t % ck) % ck))
+    # next link-state change: a leap or famine window must never jump across
+    # an epoch boundary (τ, link availability, and speed all switch there)
+    if ls is not None:
+        ne = jnp.minimum(ne, lstate.next_change(ls.epoch_starts, t, _NEVER))
+    return ne
+
+
 def _next_event(state: SimState, t, speed, fail_time, cfg: SimConfig, W: int,
                 tbl, ls):
     """First tick >= t at which any worker does more than a bulk decrement.
@@ -372,29 +434,91 @@ def _next_event(state: SimState, t, speed, fail_time, cfg: SimConfig, W: int,
     # in-flight steal messages arrive when the timer reaches 0
     flight = (state.phase != PHASE_RUN) & alive
     ev = jnp.where(flight, t + jnp.maximum(state.timer - 1, 0), ev)
-    ne = jnp.min(ev)
-    # scheduled deaths (and pre-shed warnings) of still-alive workers
-    ne = jnp.minimum(ne, jnp.min(
-        jnp.where(alive & (fail_time >= t), fail_time, _NEVER)))
+    return _scheduled_horizons(jnp.min(ev), t, alive, fail_time, cfg, ls)
+
+
+def _famine_horizon(state: SimState, t, speed, fail_time, cfg: SimConfig,
+                    W: int, mesh: topo.MeshTopology, tbl, ls):
+    """First tick >= t at which any deque size can change (or a recovery /
+    checkpoint / epoch event fires) — the famine-window horizon.
+
+    Within ``[t, horizon)`` every deque size is provably frozen: no worker
+    with a nonempty deque reaches an expansion tick, no steal request
+    arrives at a currently-nonempty victim, no granted loot is delivered,
+    and no thief whose drawable victim set could reach a nonempty deque
+    (`stealing.probe_may_succeed`) starts a probe. By induction over the
+    window, emptiness of every probed victim persists, so every steal
+    attempt in the window fails deterministically and the whole stretch
+    reduces to burn-downs, flight-timer decrements, and failing probe
+    cycles — exactly what the famine batch replays. Unlike `_next_event`,
+    probe starts / arrivals / deliveries of those provably-failing cycles
+    are NOT events here.
+    """
+    alive = state.alive
+    if ls is None:
+        eidx, sp = None, speed
+        nbr_tab = tbl["neighbors"]
+        # a probe cycle always costs >= 1 tick, even at hop_ticks=0
+        min_cycle = max(2 * cfg.hop_ticks - 1, 1)
+    else:
+        eidx, sp = _epoch_view(ls, t)
+        nbr_tab = jnp.where(ls.link_up[eidx] & (tbl["neighbors"] >= 0),
+                            tbl["neighbors"], topo.NO_NEIGHBOR)
+        min_cycle = jnp.maximum(2 * lstate.min_link_tau(ls, eidx) - 1, 1)
+    nonempty = state.deque.size > 0
+    t0 = t + ((sp - t % sp) % sp)
+    run = (state.phase == PHASE_RUN) & alive
+    burn_ev = t0 + state.work * sp
     if cfg.preshed:
-        warn_at = fail_time - cfg.warn_ticks
-        ne = jnp.minimum(ne, jnp.min(
-            jnp.where(alive & (fail_time >= 0) & (warn_at >= t),
-                      warn_at, _NEVER)))
-    if cfg.ckpt_interval > 0:
-        ck = cfg.ckpt_interval
-        ne = jnp.minimum(ne, t + ((ck - t % ck) % ck))
-    # next link-state change: leaps must never jump across an epoch boundary
-    # (τ, link availability, and speed divisors all switch there)
-    if ls is not None:
-        ne = jnp.minimum(ne, lstate.next_change(ls.epoch_starts, t, _NEVER))
-    return ne
+        retired = (fail_time >= 0) & (t >= fail_time - cfg.warn_ticks)
+    else:
+        retired = jnp.zeros((W,), bool)
+    risky = stealing.probe_may_succeed(
+        cfg.strategy, nonempty, state.fails, nbr_tab, tbl.get("radius2"),
+        escalate_after=cfg.escalate_after, window=cfg.famine_batch,
+        min_cycle=min_cycle, num_workers=W)
+    # holders expand when their burn ends; risky thieves (a drawable victim
+    # may be nonempty) end the window at their next probe opportunity
+    acts = nonempty | (risky & ~retired)
+    run_ev = jnp.where(state.work > 0, burn_ev, t0)
+    ev = jnp.where(run & acts, run_ev, _NEVER)
+    # in-flight: a request arriving at a nonempty victim may be granted; a
+    # response carrying granted loot delivers into a deque; and a flier
+    # whose OWN deque is nonempty (a supervision re-push or transplant
+    # landed on it mid-flight) will pop/expand right after its delivery —
+    # the batched replay has no expansion path, so the window must end at
+    # its flight transition
+    v = jnp.clip(state.victim, 0, W - 1)
+    flight_risky = (jnp.where(state.phase == PHASE_REQ, nonempty[v], state.got)
+                    | nonempty)
+    flight = (state.phase != PHASE_RUN) & alive
+    flight_ev = jnp.where(flight_risky, t + jnp.maximum(state.timer - 1, 0),
+                          _NEVER)
+    # a RISKY worker currently mid-flight fails its present attempt, but its
+    # NEXT draw comes from the full victim set and could hit a nonempty
+    # deque — the window must end before that probe starts. REQ workers
+    # deliver at arrival + (response flight − 1); RESP at timer expiry; the
+    # probe follows at their first straggler-active tick after delivery.
+    if ls is None:
+        back = topo.hop_dist(mesh, tbl["coords"], v) * cfg.hop_ticks
+    else:
+        back = lstate.flight_ticks(ls, eidx, state.victim, jnp.arange(W),
+                                   mesh.rows, mesh.cols, mesh.torus_full())
+    arrive = t + jnp.maximum(state.timer - 1, 0)
+    deliver = jnp.where(state.phase == PHASE_REQ,
+                        arrive + jnp.maximum(back - 1, 0), arrive)
+    d1 = deliver + 1
+    next_probe = d1 + ((sp - d1 % sp) % sp)
+    flight_ev = jnp.minimum(flight_ev, jnp.where(risky & ~retired,
+                                                 next_probe, _NEVER))
+    ev = jnp.where(flight, flight_ev, ev)
+    return _scheduled_horizons(jnp.min(ev), t, alive, fail_time, cfg, ls)
 
 
 def _sim_core(workload, mesh: topo.MeshTopology, cfg: SimConfig, key0,
               fail_time, speed, ls=None):
     W = mesh.num_workers
-    torus_full = mesh.torus and (W == mesh.rows * mesh.cols)
+    torus_full = mesh.torus_full()
     tbl = _mesh_tables(mesh, cfg.strategy)
     tables = workload.tables()
     S = cfg.supervision_slots
@@ -417,7 +541,7 @@ def _sim_core(workload, mesh: topo.MeshTopology, cfg: SimConfig, key0,
         sup_thief=jnp.full((W, S), -1, jnp.int32), sup_n=z,
         attempts=z, successes=z, nodes=z, busy=z, steal_wait=z,
         hops_lo=jnp.int32(0), hops_hi=jnp.int32(0),
-        ckpt_count=jnp.int32(0), overflow=jnp.int32(0))
+        ckpt_count=jnp.int32(0), overflow=z)
 
     def tick_fn(carry):
         state, snap, t = carry
@@ -443,7 +567,9 @@ def _sim_core(workload, mesh: topo.MeshTopology, cfg: SimConfig, key0,
             deque_, acc, overflow = _transplant(deque_, acc, warned, heir, overflow)
             # death-tick flush: bank in-flight loot into own deque, then move all
             flush = dying_now
-            deque_, _ = dq.push_top(deque_, state.loot, flush & state.got)
+            want_bank = flush & state.got
+            deque_, banked = dq.push_top(deque_, state.loot, want_bank)
+            overflow = overflow + (want_bank & ~banked).astype(jnp.int32)
             deque_, acc, overflow = _transplant(deque_, acc, flush, heir, overflow)
             state = state._replace(got=jnp.where(flush, False, state.got))
 
@@ -465,9 +591,10 @@ def _sim_core(workload, mesh: topo.MeshTopology, cfg: SimConfig, key0,
             # long-dead workers — transplant everything on ANY dead worker
             dead = (~alive) & rb
             # bank the dead worker's in-flight loot into its own deque first
-            deq, _ = dq.push_top(merged.deque, merged.loot, dead & merged.got)
-            deq, acc, ovf = _transplant(deq, merged.acc, dead, heir,
-                                        merged.overflow)
+            want_bank = dead & merged.got
+            deq, banked = dq.push_top(merged.deque, merged.loot, want_bank)
+            ovf = merged.overflow + (want_bank & ~banked).astype(jnp.int32)
+            deq, acc, ovf = _transplant(deq, merged.acc, dead, heir, ovf)
             return merged._replace(
                 deque=deq, acc=acc, overflow=ovf, alive=alive,
                 # only the DEAD workers' in-flight state is voided
@@ -490,7 +617,7 @@ def _sim_core(workload, mesh: topo.MeshTopology, cfg: SimConfig, key0,
             n_re = jnp.sum(pushing, axis=1).astype(jnp.int32)
             cap = dq.capacity(deq)
             n_push = jnp.minimum(n_re, cap - deq.size)
-            ovf = state.overflow + jnp.sum(n_re - n_push)
+            ovf = state.overflow + (n_re - n_push)
             # one batched scatter; dead lanes route to a padding row (see
             # _transplant on XLA duplicate-scatter ordering)
             j = jnp.arange(S)[None, :]
@@ -550,7 +677,7 @@ def _sim_core(workload, mesh: topo.MeshTopology, cfg: SimConfig, key0,
         work = work + jnp.maximum(ex["cost"] - 1, 0) * popped.astype(jnp.int32)
         nodes = state.nodes + ex["nodes"]
         busy = state.busy + (burning | popped).astype(jnp.int32)
-        overflow = state.overflow + jnp.sum(over)
+        overflow = state.overflow + over.astype(jnp.int32)
 
         # idle workers become thieves: request departs now, arrives in h·τ
         idle = running & (~burning) & (~popped) & (deque_.size == 0)
@@ -632,7 +759,12 @@ def _sim_core(workload, mesh: topo.MeshTopology, cfg: SimConfig, key0,
         in_resp = (phase == PHASE_RESP) & alive
         timer = jnp.where(in_resp, jnp.maximum(timer - 1, 0), timer)
         delivered = in_resp & (timer == 0)
-        deque_, _ = dq.push_top(deque_, loot, delivered & got_flight)
+        # thief-side import: a loot delivery landing on a full deque (filled
+        # by a transplant/re-push while the steal was in flight) is a REAL
+        # task loss — count it, don't swallow it
+        want_import = delivered & got_flight
+        deque_, imported = dq.push_top(deque_, loot, want_import)
+        overflow = overflow + (want_import & ~imported).astype(jnp.int32)
         successes = state.successes + (delivered & got_flight).astype(jnp.int32)
         fails = jnp.where(delivered & got_flight, 0,
                           state.fails + (delivered & ~got_flight).astype(jnp.int32))
@@ -649,15 +781,15 @@ def _sim_core(workload, mesh: topo.MeshTopology, cfg: SimConfig, key0,
                 + jnp.sum((got_flight & ~delivered).astype(jnp.int32))) > 0
         return new_state, snap, t + 1, live
 
-    def leap(state: SimState, t, live):
-        """Fused fast-forward over the dead ticks in [t, next_event).
+    def leap(state: SimState, t, live, ne):
+        """Fused fast-forward over the dead ticks in [t, ne) — `ne` is the
+        caller-supplied `_next_event` horizon for the current state.
 
         Returns (state, t, live). If the window's bulk burn consumes the
         LAST pending work, the one-tick stepper would have exited right
         after the final burn tick — land exactly there (not on the next
         event tick, which would run a phantom extra tick) and clear live.
         """
-        ne = _next_event(state, t, speed, fail_time, cfg, W, tbl, ls)
         # within [t, ne) the epoch is fixed (ne never exceeds the next
         # link-state change), so one speed row governs the whole window
         sp = speed if ls is None else _epoch_view(ls, t)[1]
@@ -687,6 +819,138 @@ def _sim_core(workload, mesh: topo.MeshTopology, cfg: SimConfig, key0,
             work=state.work - nact,
             busy=state.busy + nact), t + delta, live & ~drained
 
+    FB = cfg.famine_batch
+    famine_on = (cfg.step_mode == "leap" and FB > 0
+                 and cfg.strategy is not stealing.Strategy.LIFELINE)
+
+    def famine_ff(state: SimState, t, live, ne_all):
+        """Collapse up to FB ticks of deterministically failing probe cycles
+        into this loop iteration (the famine-churn fast path).
+
+        `_famine_horizon` certifies that every deque size is frozen over the
+        window, so the batched replay below needs no deque ops, no grant
+        resolution, and no recovery machinery — only the probe phase
+        machine, burn-downs, and stats. Victim draws are gathered from
+        `stealing.batched_victim_draws`, which replays the exact
+        ``fold_in(key0, t)``-keyed per-tick sequence, keeping the result
+        bit-identical to the one-tick oracle. Returns (state, t, live, ne)
+        with `ne` the `_next_event` horizon of the returned state, so the
+        trailing leap never recomputes it.
+        """
+        ne_risky = _famine_horizon(state, t, speed, fail_time, cfg, W, mesh,
+                                   tbl, ls)
+        hi = jnp.minimum(ne_risky, cfg.max_ticks)
+        delta = jnp.clip(hi - t, 0, FB)
+        # profitable only when probe-cycle events (counted by _next_event but
+        # not by the famine horizon) actually occur inside the batch range;
+        # otherwise the plain leap jumps the stretch for free
+        pred = live & (delta > 0) & (ne_all < jnp.minimum(hi, t + FB))
+
+        def fast(state, t, live):
+            if ls is None:
+                eidx0, sp0 = None, speed
+                nbr_tab, tau_row = tbl["neighbors"], None
+            else:
+                eidx0, sp0 = _epoch_view(ls, t)
+                nbr_tab = jnp.where(ls.link_up[eidx0] & (tbl["neighbors"] >= 0),
+                                    tbl["neighbors"], topo.NO_NEIGHBOR)
+                tau_row = ls.link_tau[eidx0]
+            near, far = stealing.batched_victim_draws(
+                cfg.strategy, key0, t, FB, nbr_tab, tbl.get("radius2"),
+                num_workers=W, link_tau_row=tau_row)
+            empty0 = state.deque.size == 0
+            alive0 = state.alive
+            got0 = state.got
+            frozen_supply = (jnp.sum(state.deque.size)
+                             + jnp.sum(got0.astype(jnp.int32)))
+            warr = jnp.arange(W)
+
+            def step(carry, xs):
+                (phase, timer, victim, fails, work, loot, attempts, busy,
+                 steal_wait, hops_lo, hops_hi, t_c, live_c) = carry
+                j, near_j, far_j = xs
+                act = live_c & (j < delta)
+                tj = t + j
+                # ---- phase RUN: burn / start a (failing) probe ---------- #
+                active_tick = alive0 & (tj % sp0 == 0)
+                running = (phase == PHASE_RUN) & active_tick
+                burning = running & (work > 0) & act
+                work = work - burning.astype(jnp.int32)
+                busy = busy + burning.astype(jnp.int32)
+                idle = running & ~burning & empty0 & act
+                if cfg.preshed:
+                    retired = (fail_time >= 0) & (tj >= fail_time - cfg.warn_ticks)
+                    idle = idle & ~retired
+                if cfg.strategy is stealing.Strategy.ADAPTIVE:
+                    chosen = jnp.where(fails >= cfg.escalate_after,
+                                       far_j, near_j)
+                else:
+                    chosen = near_j
+                victim_new = jnp.where(idle, chosen, topo.NO_NEIGHBOR)
+                start_req = idle & (victim_new >= 0)
+                vhops = jnp.where(start_req,
+                                  _hop_dist(mesh, tbl["coords"], victim_new), 0)
+                if ls is None:
+                    req_ticks = vhops * cfg.hop_ticks
+                else:
+                    req_ticks = jnp.where(start_req, lstate.flight_ticks(
+                        ls, eidx0, warr, victim_new,
+                        mesh.rows, mesh.cols, torus_full), 0)
+                phase = jnp.where(start_req, PHASE_REQ, phase)
+                timer = jnp.where(start_req, req_ticks, timer)
+                victim = jnp.where(start_req, victim_new, victim)
+                attempts = attempts + start_req.astype(jnp.int32)
+                hop_units = jnp.sum(jnp.where(start_req, vhops, 0))
+                # ---- phase REQ: flight / arrival (grant always fails) --- #
+                in_req = (phase == PHASE_REQ) & alive0 & act
+                timer = jnp.where(in_req, jnp.maximum(timer - 1, 0), timer)
+                resp_start = in_req & (timer == 0)
+                back_hops = jnp.where(resp_start,
+                                      _hop_dist(mesh, tbl["coords"], victim), 0)
+                if ls is None:
+                    back_ticks = back_hops * cfg.hop_ticks
+                else:
+                    back_ticks = jnp.where(resp_start, lstate.flight_ticks(
+                        ls, eidx0, victim, warr,
+                        mesh.rows, mesh.cols, torus_full), 0)
+                phase = jnp.where(resp_start, PHASE_RESP, phase)
+                timer = jnp.where(resp_start, back_ticks, timer)
+                hop_units = hop_units + jnp.sum(jnp.where(resp_start,
+                                                          back_hops, 0))
+                loot = jnp.where(resp_start[:, None], 0, loot)
+                lo = hops_lo + hop_units.astype(jnp.int32)
+                hops_hi = hops_hi + (lo >> _HOP_LANE_BITS)
+                hops_lo = lo & _HOP_LANE_MASK
+                # ---- phase RESP: flight / delivery (empty-handed) ------- #
+                in_resp = (phase == PHASE_RESP) & alive0 & act
+                timer = jnp.where(in_resp, jnp.maximum(timer - 1, 0), timer)
+                delivered = in_resp & (timer == 0)
+                fails = fails + (delivered & ~got0).astype(jnp.int32)
+                phase = jnp.where(delivered, PHASE_RUN, phase)
+                steal_wait = steal_wait + (in_req | in_resp).astype(jnp.int32)
+                live_c = jnp.where(act,
+                                   (jnp.sum(work) + frozen_supply) > 0, live_c)
+                t_c = t_c + act.astype(jnp.int32)
+                return (phase, timer, victim, fails, work, loot, attempts,
+                        busy, steal_wait, hops_lo, hops_hi, t_c, live_c), None
+
+            carry0 = (state.phase, state.timer, state.victim, state.fails,
+                      state.work, state.loot, state.attempts, state.busy,
+                      state.steal_wait, state.hops_lo, state.hops_hi, t, live)
+            xs = (jnp.arange(FB), near, far if far is not None else near)
+            (phase, timer, victim, fails, work, loot, attempts, busy,
+             steal_wait, hops_lo, hops_hi, t_out, live_out), _ = jax.lax.scan(
+                 step, carry0, xs)
+            new_state = state._replace(
+                phase=phase, timer=timer, victim=victim, fails=fails,
+                work=work, loot=loot, attempts=attempts, busy=busy,
+                steal_wait=steal_wait, hops_lo=hops_lo, hops_hi=hops_hi)
+            return new_state, t_out, live_out, _next_event(
+                new_state, t_out, speed, fail_time, cfg, W, tbl, ls)
+
+        return jax.lax.cond(pred, fast, lambda s, tt, lv: (s, tt, lv, ne_all),
+                            state, t, live)
+
     def cond(carry):
         state, snap, t, live, iters = carry
         return live & (t < cfg.max_ticks)
@@ -695,7 +959,10 @@ def _sim_core(workload, mesh: topo.MeshTopology, cfg: SimConfig, key0,
         state, snap, t, _, iters = carry
         state, snap, t, live = tick_fn((state, snap, t))
         if cfg.step_mode == "leap":
-            state, t, live = leap(state, t, live)
+            ne = _next_event(state, t, speed, fail_time, cfg, W, tbl, ls)
+            if famine_on:
+                state, t, live, ne = famine_ff(state, t, live, ne)
+            state, t, live = leap(state, t, live, ne)
         return state, snap, t, live, iters + 1
 
     # non-TC modes don't carry the (W, C, T) snapshot copy through the loop
@@ -720,6 +987,8 @@ def _check_cfg(cfg: SimConfig):
         raise ValueError(f"step_mode must be 'leap' or 'tick', got {cfg.step_mode!r}")
     if cfg.max_ticks >= int(_NEVER):
         raise ValueError(f"max_ticks must stay below {int(_NEVER)}")
+    if cfg.famine_batch < 0:
+        raise ValueError("famine_batch must be >= 0 (0 disables the fast path)")
 
 
 def _ckpt_state_bytes(mesh: topo.MeshTopology, cfg: SimConfig) -> int:
@@ -740,10 +1009,11 @@ def _finalize(state, ticks, iters, mesh: topo.MeshTopology,
         steal_wait_ticks=int(np.asarray(state.steal_wait, np.int64).sum()),
         bytes_hops=float(hop_units * STEAL_MSG_BYTES),
         ckpt_bytes=float(int(state.ckpt_count) * _ckpt_state_bytes(mesh, cfg)),
-        overflow=int(state.overflow),
+        overflow=int(np.asarray(state.overflow, np.int64).sum()),
         utilization=busy / max(t * max(alive_n, 1), 1),
         per_worker_busy=np.asarray(state.busy),
-        events=int(iters))
+        events=int(iters),
+        per_worker_overflow=np.asarray(state.overflow))
 
 
 def _fail_speed_arrays(W, fail_time, speed):

@@ -173,6 +173,19 @@ def choose_adaptive(key, neighbor_table: jax.Array, radius2_table: jax.Array,
     return jnp.where(is_thief & (fails >= escalate_after), far, near)
 
 
+def cheapest_live_table(neighbor_table: jax.Array,
+                        link_tau: jax.Array) -> jax.Array:
+    """Mask `neighbor_table` down to the τ-argmin set of each worker's live
+    neighbors (NO_NEIGHBOR elsewhere). Single source of truth for the
+    link-aware ADAPTIVE near pick — shared by `choose_adaptive_linkaware`
+    and `batched_victim_draws` so the famine fast path's replay can never
+    drift from the per-tick preference rule."""
+    valid = neighbor_table != topo.NO_NEIGHBOR
+    cost = jnp.where(valid, link_tau, jnp.iinfo(jnp.int32).max)
+    cheapest = valid & (cost == jnp.min(cost, axis=1, keepdims=True))
+    return jnp.where(cheapest, neighbor_table, topo.NO_NEIGHBOR)
+
+
 def choose_adaptive_linkaware(key, neighbor_table: jax.Array,
                               radius2_table: jax.Array, link_tau: jax.Array,
                               fails: jax.Array, is_thief: jax.Array,
@@ -184,11 +197,8 @@ def choose_adaptive_linkaware(key, neighbor_table: jax.Array,
     have dead links masked to NO_NEIGHBOR; `link_tau` is the (W, 4) row of
     the active epoch."""
     k1, k2 = jax.random.split(key)
-    valid = neighbor_table != topo.NO_NEIGHBOR
-    cost = jnp.where(valid, link_tau, jnp.iinfo(jnp.int32).max)
-    cheapest = valid & (cost == jnp.min(cost, axis=1, keepdims=True))
-    near_table = jnp.where(cheapest, neighbor_table, topo.NO_NEIGHBOR)
-    near = _pick_from_list(k1, near_table, is_thief)
+    near = _pick_from_list(k1, cheapest_live_table(neighbor_table, link_tau),
+                           is_thief)
     far = _pick_from_list(k2, radius2_table, is_thief)
     return jnp.where(is_thief & (fails >= escalate_after), far, near)
 
@@ -301,10 +311,118 @@ def resolve_grants_pairwise(victim: jax.Array, sizes: jax.Array,
                      hops=jnp.zeros((W,), jnp.int32))
 
 
-def attach_hops(plan: StealPlan, hop_matrix: jax.Array) -> StealPlan:
-    """Fill in thief→victim hop distances (for the latency simulator)."""
+# --------------------------------------------------------------------------- #
+# Famine fast path support (simulator's probe-cycle leaping)
+# --------------------------------------------------------------------------- #
+def _any_nonempty(table: jax.Array, nonempty: jax.Array) -> jax.Array:
+    """Per-worker: does any valid (!= NO_NEIGHBOR) entry of `table` index a
+    worker with a nonempty deque?"""
+    W = nonempty.shape[0]
+    valid = table != topo.NO_NEIGHBOR
+    hit = nonempty[jnp.clip(table, 0, W - 1)] & valid
+    return hit.any(axis=1)
+
+
+def probe_may_succeed(strategy: Strategy, nonempty: jax.Array,
+                      fails: jax.Array, neighbor_table: jax.Array,
+                      radius2_table: jax.Array | None, *,
+                      escalate_after: int, window: int, min_cycle,
+                      num_workers: int) -> jax.Array:
+    """Deterministic per-worker emptiness/reachability predicate.
+
+    Returns, per worker, whether a steal probe *drawn within the next
+    `window` ticks* could land on a victim whose deque is nonempty right
+    now. Where this is False — and deque sizes are provably frozen over the
+    window, which the simulator's famine horizon guarantees — every probe
+    the worker issues in the window must fail, so whole probe cycles can be
+    advanced analytically instead of simulated tick by tick (the
+    lifeline-graph insight: victim emptiness is deterministic between
+    events).
+
+    `neighbor_table` must already have dead links masked to NO_NEIGHBOR
+    when running under a link-state schedule. For ADAPTIVE the radius-2 set
+    only matters if the worker can escalate inside the window: each failed
+    attempt costs at least `min_cycle` ticks (2·τ_min − 1), so a worker
+    needing k more failures to escalate cannot draw a radius-2 victim
+    before (k − 1)·min_cycle ticks have passed. LIFELINE falls back to
+    global-random victims, so it is always treated as able to succeed
+    (the simulator keeps it on the slow path).
+    """
+    if strategy == Strategy.GLOBAL:
+        return jnp.broadcast_to(nonempty.any() & (num_workers > 1),
+                                (num_workers,))
+    if strategy == Strategy.LIFELINE:
+        return jnp.ones((num_workers,), bool)
+    near = _any_nonempty(neighbor_table, nonempty)
+    if strategy == Strategy.NEIGHBOR:
+        return near
+    if strategy == Strategy.ADAPTIVE:
+        to_go = escalate_after - fails
+        may_escalate = (to_go - 1) * min_cycle < window
+        return near | (_any_nonempty(radius2_table, nonempty) & may_escalate)
+    raise ValueError(strategy)
+
+
+def batched_victim_draws(strategy: Strategy, key0: jax.Array, t0, count: int,
+                         neighbor_table: jax.Array,
+                         radius2_table: jax.Array | None, *,
+                         num_workers: int, link_tau_row: jax.Array | None = None):
+    """Replay `count` consecutive ticks' victim draws in one fused batch.
+
+    Returns ``(near, far)`` of shape (count, W): row j holds the victims
+    the per-tick selection would draw at tick ``t0 + j`` for an
+    all-thieves mask. Randomness stays ``fold_in(key0, t)``-keyed — the
+    same key schedule the simulator's one-tick path uses — so gathering
+    row ``t − t0`` reproduces that tick's draw bit-for-bit. `far` is None
+    except for ADAPTIVE, whose caller selects per worker between the near
+    and escalated draw by its fail count at probe time. Under a link-state
+    schedule pass the masked `neighbor_table` and, for ADAPTIVE, the active
+    epoch's `link_tau_row` (cheapest-live-neighbor preference).
+    """
+    W = num_workers
+    all_thieves = jnp.ones((W,), bool)
+    ticks = t0 + jnp.arange(count)
+    keys = jax.vmap(lambda t: jax.random.fold_in(key0, t))(ticks)
+    if strategy == Strategy.GLOBAL:
+        near = jax.vmap(lambda k: choose_global(k, W, all_thieves))(keys)
+        return near, None
+    if strategy == Strategy.NEIGHBOR:
+        near = jax.vmap(
+            lambda k: choose_neighbor(k, neighbor_table, all_thieves))(keys)
+        return near, None
+    if strategy == Strategy.ADAPTIVE:
+        near_tab = (neighbor_table if link_tau_row is None
+                    else cheapest_live_table(neighbor_table, link_tau_row))
+
+        def draw(k):
+            k1, k2 = jax.random.split(k)
+            return (_pick_from_list(k1, near_tab, all_thieves),
+                    _pick_from_list(k2, radius2_table, all_thieves))
+        near, far = jax.vmap(draw)(keys)
+        return near, far
+    raise ValueError(f"no batched draws for {strategy}")
+
+
+def attach_hops(plan: StealPlan, mesh) -> StealPlan:
+    """Fill in thief→victim hop distances (for the latency simulator).
+
+    `mesh` is a `topology.MeshTopology`; distances are priced from the
+    (W, 2) coordinate table via `topology.hop_dist`, so no dense (W, W)
+    pairwise array is ever materialized (it used to be — the last consumer
+    of that matrix outside tests). Passing the dense distance matrix itself
+    is deprecated and kept only so tests can cross-check against the
+    `topology` oracle.
+    """
     W = plan.victim.shape[0]
-    v = jnp.clip(plan.victim, 0, W - 1)
-    hops = jnp.where(plan.victim >= 0,
-                     hop_matrix[jnp.arange(W), v].astype(jnp.int32), 0)
-    return plan._replace(hops=hops)
+    if isinstance(mesh, topo.MeshTopology):
+        hops = topo.hop_dist(mesh, jnp.asarray(mesh.coords), plan.victim)
+    else:
+        import warnings
+
+        warnings.warn(
+            "attach_hops(plan, <dense distance matrix>) is deprecated; pass "
+            "the MeshTopology instead (hops are priced from coordinates)",
+            DeprecationWarning, stacklevel=2)
+        v = jnp.clip(plan.victim, 0, W - 1)
+        hops = jnp.asarray(mesh)[jnp.arange(W), v].astype(jnp.int32)
+    return plan._replace(hops=jnp.where(plan.victim >= 0, hops, 0))

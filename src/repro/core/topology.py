@@ -158,6 +158,10 @@ class MeshTopology:
             return 0.0
         return float(h.sum() / (n * (n - 1)))
 
+    def torus_full(self) -> bool:
+        """Whether the hop metric wraps (exact torus: every grid slot filled)."""
+        return self.torus and self.num_workers == self.rows * self.cols
+
     # ------------------------------------------------------------------ #
     # JAX-side views
     # ------------------------------------------------------------------ #
@@ -177,6 +181,24 @@ class MeshTopology:
             if nb != NO_NEIGHBOR:
                 pairs.append((w, nb))
         return pairs
+
+
+def hop_dist(mesh: MeshTopology, coords, victim):
+    """Per-worker Manhattan hop count to ``victim[w]`` (torus-aware).
+
+    `coords` is the (W, 2) device-side coordinate table; entries of `victim`
+    are clipped, so NO_NEIGHBOR lanes return a garbage-but-in-range distance
+    the caller is expected to mask. Equivalent to gathering from the dense
+    pairwise distance table without ever materializing it — O(W) gathers, so
+    W >= 4k meshes never embed multi-MB constants in the compiled graph.
+    """
+    v = jnp.clip(victim, 0, mesh.num_workers - 1)
+    dr = jnp.abs(coords[:, 0] - coords[v, 0])
+    dc = jnp.abs(coords[:, 1] - coords[v, 1])
+    if mesh.torus_full():
+        dr = jnp.minimum(dr, mesh.rows - dr)
+        dc = jnp.minimum(dc, mesh.cols - dc)
+    return (dr + dc).astype(jnp.int32)
 
 
 def theoretical_mean_hops(n: int) -> float:

@@ -153,3 +153,128 @@ def test_segment_prefix_weighted_matches_pairwise():
 def test_grant_width_is_shared_with_kernel():
     from repro.kernels import steal_compact
     assert steal_compact.GMAX == stealing.GRANT_WIDTH
+
+
+# --------------------------------------------------------------------------- #
+# Famine fast-path helpers: emptiness predicate + batched draw replay
+# --------------------------------------------------------------------------- #
+def test_probe_may_succeed_per_strategy():
+    import jax
+    mesh = topology.MeshTopology.square(9)
+    W = mesh.num_workers
+    nbrs = jnp.asarray(stealing.neighbor_list(mesh))
+    r2 = jnp.asarray(stealing.radius2_list(mesh))
+    nonempty = jnp.zeros((W,), bool).at[8].set(True)  # only corner (2,2)
+    fails = jnp.zeros((W,), jnp.int32)
+    kw = dict(escalate_after=4, window=64, min_cycle=9, num_workers=W)
+    # NEIGHBOR: only the mesh neighbors of worker 8 (5 and 7) may succeed
+    near = stealing.probe_may_succeed(stealing.Strategy.NEIGHBOR, nonempty,
+                                      fails, nbrs, None, **kw)
+    np.testing.assert_array_equal(
+        np.asarray(near), np.isin(np.arange(W), [5, 7]))
+    # GLOBAL: anyone may draw the nonempty worker
+    glob = stealing.probe_may_succeed(stealing.Strategy.GLOBAL, nonempty,
+                                      fails, nbrs, None, **kw)
+    assert np.asarray(glob).all()
+    # ADAPTIVE, fresh thieves in a 64-tick window with 9-tick cycles: can
+    # accumulate 4 failures, so the radius-2 set counts too
+    ad = stealing.probe_may_succeed(stealing.Strategy.ADAPTIVE, nonempty,
+                                    fails, nbrs, r2, **kw)
+    np.testing.assert_array_equal(
+        np.asarray(ad), np.isin(np.arange(W), [2, 4, 5, 6, 7]))
+    # ...but a window too short for (escalate_after - fails) failures keeps
+    # radius-2 out of reach: only the direct neighbors remain
+    ad_short = stealing.probe_may_succeed(
+        stealing.Strategy.ADAPTIVE, nonempty, fails, nbrs, r2,
+        escalate_after=4, window=20, min_cycle=9, num_workers=W)
+    np.testing.assert_array_equal(np.asarray(ad_short), np.asarray(near))
+    # empty mesh: nobody can succeed (the all-famine endgame)
+    none = stealing.probe_may_succeed(stealing.Strategy.GLOBAL,
+                                      jnp.zeros((W,), bool), fails, nbrs,
+                                      None, **kw)
+    assert not np.asarray(none).any()
+
+
+@pytest.mark.parametrize("strategy", [stealing.Strategy.NEIGHBOR,
+                                      stealing.Strategy.GLOBAL,
+                                      stealing.Strategy.ADAPTIVE])
+def test_batched_victim_draws_replay_per_tick_choices(strategy):
+    """Row j of the batched tables must reproduce the per-tick choose_*
+    draw at tick t0+j bit-for-bit (same fold_in key schedule) for every
+    fail count a worker might have at probe time."""
+    import jax
+    mesh = topology.MeshTopology.square(9)
+    W = mesh.num_workers
+    nbrs = jnp.asarray(stealing.neighbor_list(mesh))
+    r2 = jnp.asarray(stealing.radius2_list(mesh))
+    key0 = jax.random.PRNGKey(7)
+    t0, count, esc = 123, 6, 4
+    near, far = stealing.batched_victim_draws(strategy, key0, t0, count,
+                                              nbrs, r2, num_workers=W)
+    all_thieves = jnp.ones((W,), bool)
+    for j in range(count):
+        key = jax.random.fold_in(key0, t0 + j)
+        for fv in (0, esc + 1):
+            fails = jnp.full((W,), fv, jnp.int32)
+            if strategy is stealing.Strategy.NEIGHBOR:
+                want = stealing.choose_neighbor(key, nbrs, all_thieves)
+                got = near[j]
+            elif strategy is stealing.Strategy.GLOBAL:
+                want = stealing.choose_global(key, W, all_thieves)
+                got = near[j]
+            else:
+                want = stealing.choose_adaptive(key, nbrs, r2, fails,
+                                                all_thieves, esc)
+                got = jnp.where(fails >= esc, far[j], near[j])
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_batched_victim_draws_linkaware_adaptive():
+    """With a link_tau row, the near draw replays the cheapest-live-neighbor
+    preference of choose_adaptive_linkaware."""
+    import jax
+    mesh = topology.MeshTopology.square(9)
+    W = mesh.num_workers
+    nbrs = jnp.asarray(stealing.neighbor_list(mesh))
+    r2 = jnp.asarray(stealing.radius2_list(mesh))
+    tau = jnp.asarray(np.arange(4)[None, :] + 2 + np.zeros((W, 1)), jnp.int32)
+    key0 = jax.random.PRNGKey(11)
+    near, far = stealing.batched_victim_draws(
+        stealing.Strategy.ADAPTIVE, key0, 50, 4, nbrs, r2,
+        num_workers=W, link_tau_row=tau)
+    all_thieves = jnp.ones((W,), bool)
+    for j in range(4):
+        key = jax.random.fold_in(key0, 50 + j)
+        for fv in (0, 9):
+            fails = jnp.full((W,), fv, jnp.int32)
+            want = stealing.choose_adaptive_linkaware(key, nbrs, r2, tau,
+                                                      fails, all_thieves, 4)
+            got = jnp.where(fails >= 4, far[j], near[j])
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# --------------------------------------------------------------------------- #
+# attach_hops: coords-based pricing ≡ dense hop_matrix oracle
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("mesh", [
+    topology.MeshTopology.square(16),
+    topology.MeshTopology.square(10),              # ragged last row
+    topology.MeshTopology.grid(4, 5, torus=True),  # full torus (wrapping metric)
+    topology.MeshTopology.grid(1, 6),
+], ids=lambda m: f"{m.rows}x{m.cols}{'t' if m.torus else ''}w{m.num_workers}")
+def test_attach_hops_matches_dense_matrix_oracle(mesh):
+    rng = np.random.default_rng(3)
+    W = mesh.num_workers
+    victim = rng.integers(-1, W, W).astype(np.int32)
+    victim = np.where(victim == np.arange(W), -1, victim)
+    sizes = rng.integers(0, 4, W).astype(np.int32)
+    plan = stealing.resolve_grants(jnp.asarray(victim), jnp.asarray(sizes))
+    got = np.asarray(stealing.attach_hops(plan, mesh).hops)
+    h = mesh.hop_matrix  # dense oracle, test-only
+    want = np.where(victim >= 0,
+                    h[np.arange(W), np.clip(victim, 0, W - 1)], 0)
+    np.testing.assert_array_equal(got, want)
+    # legacy dense-matrix argument still works but warns
+    with pytest.warns(DeprecationWarning):
+        legacy = stealing.attach_hops(plan, jnp.asarray(h))
+    np.testing.assert_array_equal(np.asarray(legacy.hops), want)

@@ -69,6 +69,27 @@ def test_torus_wraps():
     assert m.hops(0, 3) == 1  # wrap along the row
 
 
+@pytest.mark.parametrize("mesh", [
+    topo.MeshTopology.square(16),
+    topo.MeshTopology.square(10),              # ragged last row
+    topo.MeshTopology.grid(4, 5, torus=True),  # exact torus
+    topo.MeshTopology.grid(2, 3, torus=True),
+    topo.MeshTopology.square(1),
+], ids=lambda m: f"{m.rows}x{m.cols}{'t' if m.torus else ''}w{m.num_workers}")
+def test_hop_dist_matches_hop_matrix(mesh):
+    """The coords-based O(W) pricing used by the simulator/stealing hot
+    paths equals a gather from the dense hop_matrix (test-only oracle)."""
+    import jax.numpy as jnp
+    rng = np.random.default_rng(0)
+    W = mesh.num_workers
+    coords = jnp.asarray(mesh.coords)
+    for _ in range(4):
+        victim = rng.integers(0, W, W).astype(np.int32)
+        got = np.asarray(topo.hop_dist(mesh, coords, jnp.asarray(victim)))
+        want = mesh.hop_matrix[np.arange(W), victim]
+        np.testing.assert_array_equal(got, want)
+
+
 def test_ppermute_pairs_valid():
     m = topo.MeshTopology.grid(3, 3)
     for d in range(4):
