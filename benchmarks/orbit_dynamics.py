@@ -8,10 +8,12 @@ the `paper_mesh` orbit preset, crossing
 
   * static-τ baseline (the schedule collapsed to its duration-weighted mean
     hop latency — what the pre-linkstate simulator did) vs the full dynamic
-    `LinkStateSchedule`, and
-  * eclipse shutdowns off vs on (predictable failures + malleable pre-shed;
-    under the dynamic schedule the sleeping satellites' links also go dark,
-    so neighbors stop wasting probes on them).
+    `LinkStateSchedule` (which now prices seam-outage flights along real
+    route-around detours), and
+  * eclipse shutdowns off vs on (predictable failures + malleable pre-shed
+    + mid-horizon wake-ups: satellites whose shadow ends inside the horizon
+    rejoin the victim set, and under the dynamic schedule their links go
+    dark at entry and come back up at the wake epoch).
 
 ADAPTIVE is the interesting subject: under a dynamic schedule it prefers the
 cheapest *live* neighbor, so it can surf the τ oscillation while NEIGHBOR
@@ -63,6 +65,7 @@ def run(quick: bool = False, json_path: str | None = None):
         static_tau = max(int(round(ls.mean_tau(con.mesh, horizon))), 1)
         pred_fail = np.where(sched.predictable, sched.fail_time,
                              -1).astype(np.int32)
+        n_woken = int((sched.wake_time >= 0).sum())
         for dynamic in (False, True):
             for sname, strat in STRATS.items():
                 cfg = simulator.SimConfig(
@@ -72,7 +75,8 @@ def run(quick: bool = False, json_path: str | None = None):
                 t0 = time.perf_counter()
                 r = simulator.simulate(
                     wl, con.mesh, cfg, fail_time=pred_fail if eclipse else None,
-                    linkstate=ls if dynamic else None)
+                    linkstate=ls if dynamic else None,
+                    wake_time=sched.wake_time if eclipse else None)
                 wall = time.perf_counter() - t0
                 row = dict(
                     strategy=sname, dynamic=dynamic, eclipse=eclipse,
@@ -82,13 +86,15 @@ def run(quick: bool = False, json_path: str | None = None):
                     p_success=round(r.p_success, 4),
                     steal_wait_ticks=r.steal_wait_ticks,
                     bytes_hops=r.bytes_hops, static_tau=static_tau,
-                    epochs=ls.num_epochs, wall_s=round(wall, 3))
+                    epochs=ls.num_epochs, woken=n_woken if eclipse else 0,
+                    wall_s=round(wall, 3))
                 rows.append(row)
                 emit(f"orbit/{sname}/dyn={int(dynamic)}/ecl={int(eclipse)}",
                      wall * 1e6,
                      f"makespan={r.ticks};util={r.utilization:.2f};"
                      f"p_success={r.p_success:.3f};exact={row['exact']};"
-                     f"tau_static={static_tau};epochs={ls.num_epochs}")
+                     f"tau_static={static_tau};epochs={ls.num_epochs};"
+                     f"woken={n_woken if eclipse else 0}")
     if json_path:
         with open(json_path, "w") as f:
             json.dump(dict(config=dataclasses.asdict(ccfg), quick=quick,

@@ -5,8 +5,11 @@
     into a piecewise-constant `LinkStateSchedule` and compared per strategy
     against the collapsed static-τ baseline;
   * eclipse shutdowns with warning → malleable pre-shed (exact), sleeping
-    satellites' links going dark so neighbors stop probing them;
-  * cross-seam handover outages (wraparound planes);
+    satellites' links going dark so neighbors stop probing them — and
+    eclipse *exits*: satellites wake mid-horizon, links restored, rejoining
+    the victim set (elastic grow);
+  * cross-seam handover outages (wraparound planes), with flights priced
+    along real route-around detours while the seam is dark;
   * a radiation failure → task-level checkpointing rollback (exact);
   * degraded satellites (stragglers).
 
@@ -21,9 +24,10 @@ import numpy as np
 from repro.core import constellation, simulator, stealing, tasks
 
 
-def run_case(name, cfg, mesh, wl, fail=None, speed=None, linkstate=None):
+def run_case(name, cfg, mesh, wl, fail=None, speed=None, linkstate=None,
+             wake=None):
     r = simulator.simulate(wl, mesh, cfg, fail_time=fail, speed=speed,
-                           linkstate=linkstate)
+                           linkstate=linkstate, wake_time=wake)
     ok = "EXACT" if r.result == wl.expected_result() else "LOST WORK"
     print(f"  {name:46s} makespan={r.ticks:7d} util={r.utilization:.2f} "
           f"p_succ={r.p_success:.2f} [{ok}]")
@@ -76,6 +80,13 @@ def main():
                                  preshed=True, warn_ticks=ccfg.warn_ticks,
                                  **base),
              mesh, wl, fail=pred_fail, linkstate=ls)
+
+    n_woken = int((sched.wake_time >= 0).sum())
+    run_case(f"  + eclipse exits: {n_woken} sats wake mid-horizon",
+             simulator.SimConfig(strategy=stealing.Strategy.NEIGHBOR,
+                                 preshed=True, warn_ticks=ccfg.warn_ticks,
+                                 **base),
+             mesh, wl, fail=pred_fail, linkstate=ls, wake=sched.wake_time)
 
     rad_fail = np.where(~sched.predictable, sched.fail_time, -1).astype(np.int32)
     run_case("radiation failures + task-level ckpt (TC)",

@@ -13,6 +13,10 @@ Maps a physical constellation onto the abstract `MeshTopology`:
     battery-limited satellites power down during eclipse — a *predictable*
     shutdown (§5 malleability) with `warn_ticks` of lead time; from the
     entry tick on their ISLs are marked down so neighbors stop probing them.
+    Eclipse *exits* are just as predictable: the satellite wakes when its
+    slot leaves the shadow (`wake_time = entry + eclipse_fraction · orbit`),
+    its links come back up at the wake epoch, and the simulator's elastic
+    grow path re-arms it as a fresh victim mid-horizon.
   * Cross-seam handovers: with `wraparound=True` the planes close into a
     torus; the seam links between the last and first plane (where relative
     motion is highest) re-acquire periodically and are dark for a fraction
@@ -66,6 +70,10 @@ class Schedule:
     speed: np.ndarray              # (W,) straggler divisors
     mean_hop_ticks: float          # orbit-averaged τ for the analytical model
     linkstate: lstate.LinkStateSchedule  # time-varying per-link latency/state
+    # (W,) eclipse-exit tick (-1 = no mid-horizon rejoin): set only for
+    # predictable (eclipse) shutdowns whose shadow ends inside the horizon;
+    # radiation deaths stay permanent
+    wake_time: np.ndarray = None
 
 
 class Constellation:
@@ -105,13 +113,18 @@ class Constellation:
         rng = np.random.default_rng(cfg.seed)
         W = self.mesh.num_workers
         fail = -np.ones(W, np.int64)
+        wake = -np.ones(W, np.int64)
         predictable = np.zeros(W, bool)
 
         # eclipse shutdowns: battery-limited satellites sleep when their
         # orbital slot enters shadow. Entry tick depends on the in-plane
         # position (cols spread around the orbit). Every predictable
         # shutdown keeps a full `warn_ticks` of lead time so the malleable
-        # pre-shed window never starts before tick 0.
+        # pre-shed window never starts before tick 0. The shadow ends
+        # `eclipse_fraction` of an orbit later: exits inside the horizon
+        # become wake-ups (the satellite rejoins the victim set and its
+        # links come back up at the wake epoch).
+        eclipse_len = max(int(round(cfg.eclipse_fraction * cfg.orbit_ticks)), 1)
         n_weak = int(round(cfg.battery_limited_frac * W))
         weak = rng.choice(W, size=n_weak, replace=False) if n_weak else []
         for w in weak:
@@ -124,6 +137,9 @@ class Constellation:
             if entry < horizon_ticks:
                 fail[w] = entry
                 predictable[w] = True
+                exit_t = entry + eclipse_len
+                if exit_t < horizon_ticks:
+                    wake[w] = exit_t
 
         # radiation / hardware faults: Poisson per orbit
         if cfg.failure_rate > 0:
@@ -136,40 +152,49 @@ class Constellation:
                     fail[w] = t
         # keep the root worker (ground-station adjacent) up
         fail[0] = -1
+        wake[0] = -1
         predictable[0] = False
 
         fail = fail.astype(np.int32)
+        wake = wake.astype(np.int32)
         speed = np.ones(W, np.int32)
-        link = self.linkstate_schedule(horizon_ticks, fail, predictable)
+        link = self.linkstate_schedule(horizon_ticks, fail, predictable, wake)
         return Schedule(fail_time=fail,
                         predictable=predictable,
                         speed=speed,
                         mean_hop_ticks=self.mean_tau(),
-                        linkstate=link)
+                        linkstate=link,
+                        wake_time=wake)
 
     # ------------------------------------------------------------------ #
     # Link-state schedule compilation
     # ------------------------------------------------------------------ #
     def linkstate_schedule(self, horizon_ticks: int, fail_time: np.ndarray,
-                           predictable: np.ndarray) -> lstate.LinkStateSchedule:
+                           predictable: np.ndarray,
+                           wake_time: np.ndarray | None = None
+                           ) -> lstate.LinkStateSchedule:
         """Compile the orbit into a piecewise-constant `LinkStateSchedule`.
 
         Epoch boundaries are the union of the uniform τ-oscillation sampling
         grid (`epochs_per_orbit` per orbit), each predictable shutdown's
-        entry tick (its links go dark with it), and — with `wraparound` —
-        every seam handover on/off transition, so the piecewise-constant
-        arrays change exactly where the modeled state does.
+        entry tick (its links go dark with it) and wake tick (its links
+        come back up with it), and — with `wraparound` — every seam
+        handover on/off transition, so the piecewise-constant arrays change
+        exactly where the modeled state does.
         """
         cfg = self.cfg
         mesh = self.mesh
         W = mesh.num_workers
         R, C = cfg.planes, cfg.sats_per_plane
+        if wake_time is None:
+            wake_time = -np.ones(W, np.int64)
 
         bounds = {0}
         step = max(int(round(cfg.orbit_ticks / max(cfg.epochs_per_orbit, 1))), 1)
         bounds.update(range(0, horizon_ticks, step))
         sleeps = predictable & (fail_time >= 0)
         bounds.update(int(t) for t in fail_time[sleeps])
+        bounds.update(int(t) for t in wake_time[sleeps & (wake_time >= 0)])
         cycle = self.handover_cycle()
         dark_len = 0
         if cfg.wraparound and cfg.seam_outage_frac > 0:
@@ -193,9 +218,12 @@ class Constellation:
         link_tau[:, :, lstate.NORTH] = tau_b[:, (rows - 1) % R]
 
         # availability: a sleeping satellite's links are down from its entry
-        # tick on (both endpoints see the predictable outage)
+        # tick until its wake tick — eclipse exits bring them back up (both
+        # endpoints see the predictable outage either way)
         up = np.ones((E, W, 4), bool)
         asleep = (sleeps[None, :] & (fail_time[None, :] <= starts[:, None]))
+        awake = (wake_time[None, :] >= 0) & (starts[:, None] >= wake_time[None, :])
+        asleep &= ~awake
         up &= ~asleep[:, :, None]
         nbr = mesh.neighbor_table
         nbr_c = np.clip(nbr, 0, W - 1)

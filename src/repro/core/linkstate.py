@@ -42,6 +42,28 @@ intermediate. The simulator's event-leaping stepper adds `next_change` as a
 horizon term so a leap never jumps across an epoch boundary, which keeps
 ``step_mode="leap"`` bit-identical to the one-tick oracle under dynamic
 schedules (asserted in tests/test_simulator.py).
+
+Route-around (detour pricing during outages)
+--------------------------------------------
+Dimension-order pricing assumes its path is live. Epochs in which any
+existing link is DOWN (seam handovers, eclipse darkness) instead price
+flights from a per-epoch all-pairs shortest-path table over *live* links
+only, built once at `device_tables` time by `live_path_costs` (vectorized
+repeated min-plus relaxation over the 4-neighbor mesh — asserted against
+the dense Floyd–Warshall oracle `topology.detour_matrix`). Epochs with the
+same (τ, up) link state share one table, and all-up epochs build none at
+all — they keep the exact dimension-order prefix-sum costs, so a static or
+outage-free schedule is priced bit-identically to before. Per-epoch
+connected-component ids (`comp`) expose reachability without any (W, W)
+work at simulation time: a flight to a different component never departs
+(the thief's routing layer knows the victim is unreachable), and the
+simulator masks unreachable victims out of escalated (radius-2) selection
+and out of the famine-window emptiness predicate. Pairs with no live route
+are pinned at `UNREACHABLE` in the tables; `flight_ticks` itself falls
+back to the dimension-order cost for such pairs (callers gate departures
+on `same_component`, so the fallback is only ever consumed by a reply
+whose path was severed by an epoch flip mid-request — the thief waits out
+the nominal RTT as a timeout while the grant is denied).
 """
 
 from __future__ import annotations
@@ -58,6 +80,10 @@ from . import topology as topo
 # Direction indices into topology.DIRECTIONS ((-1,0),(1,0),(0,-1),(0,1)).
 NORTH, SOUTH, WEST, EAST = range(topo.NUM_DIRECTIONS)
 OPPOSITE = (SOUTH, NORTH, EAST, WEST)
+
+# Cost sentinel for worker pairs with no live route (shared with the dense
+# topology.detour_matrix oracle).
+UNREACHABLE = topo.UNREACHABLE
 
 
 @dataclasses.dataclass(frozen=True)
@@ -165,6 +191,17 @@ class LinkStateArrays(NamedTuple):
     `cum_v[e, k, c]` is the prefix sum of southward link latencies of rows
     `< k` in column `c` (row `R-1` holds the ring-wrap link), `cum_h` the
     eastward analogue — dimension-order path costs become two gather-diffs.
+
+    `detour` holds one (W, W) live-link shortest-path table per *distinct
+    outage link state* (epochs with identical (τ, up) arrays share a row;
+    `None` when no epoch has a dead link — the static/all-up case costs
+    nothing). `detour_idx[e]` maps an epoch to its table row (-1 = all
+    links up: dimension-order pricing applies). `comp[e, w]` is worker w's
+    live-link connected-component id in epoch e (the lowest reachable
+    worker id; all zeros for all-up epochs) — the O(W)-gather reachability
+    primitive behind departure gating and victim-set masking. All tables
+    are compiled once per schedule; flights gather from them without ever
+    materializing a (W, W) intermediate per tick.
     """
     epoch_starts: jax.Array   # (E,)
     link_tau: jax.Array       # (E, W, 4)
@@ -172,6 +209,39 @@ class LinkStateArrays(NamedTuple):
     speed: jax.Array          # (E, W)
     cum_v: jax.Array          # (E, R+1, C)
     cum_h: jax.Array          # (E, R, C+1)
+    detour: jax.Array | None  # (K, W, W) or None when no outage epochs
+    detour_idx: jax.Array     # (E,) row into `detour`, -1 = all-up epoch
+    comp: jax.Array           # (E, W) connected-component ids (live links)
+
+
+def live_path_costs(mesh: topo.MeshTopology, tau_row: np.ndarray,
+                    up_row: np.ndarray) -> np.ndarray:
+    """(W, W) all-pairs shortest-path costs over live links, host-side.
+
+    Vectorized repeated min-plus relaxation over the 4-neighbor mesh: each
+    sweep relaxes every live edge at once (four (W, W) gathers), converging
+    in at most diameter-of-the-live-graph sweeps — no Python loop over
+    workers, no O(W^3) Floyd–Warshall (that stays in `topology.detour_matrix`
+    as the test oracle). Unreachable pairs are pinned at `UNREACHABLE`.
+    """
+    W = mesh.num_workers
+    inf = np.int64(1) << 40
+    nbr = mesh.neighbor_table
+    nbr_c = np.clip(nbr, 0, W - 1)
+    live = (nbr != topo.NO_NEIGHBOR) & np.asarray(up_row, bool)
+    tau = np.asarray(tau_row, np.int64)
+    d = np.full((W, W), inf, np.int64)
+    np.fill_diagonal(d, 0)
+    for _ in range(W):  # converges in <= longest live shortest path sweeps
+        nd = d
+        for k in range(topo.NUM_DIRECTIONS):
+            cand = np.where(live[:, k, None], tau[:, k, None] + d[nbr_c[:, k]],
+                            inf)
+            nd = np.minimum(nd, cand)
+        if (nd == d).all():
+            break
+        d = nd
+    return np.minimum(d, UNREACHABLE).astype(np.int32)
 
 
 def device_tables(schedule: LinkStateSchedule,
@@ -183,6 +253,7 @@ def device_tables(schedule: LinkStateSchedule,
             f"({mesh.rows}x{mesh.cols} vs {mesh.num_workers} workers)")
     schedule.validate(mesh)
     E = schedule.num_epochs
+    W = mesh.num_workers
     R, C = mesh.rows, mesh.cols
     grid = np.arange(R * C).reshape(R, C)
     tau_v = schedule.link_tau[:, grid, SOUTH]                     # (E, R, C)
@@ -191,6 +262,34 @@ def device_tables(schedule: LinkStateSchedule,
                             np.cumsum(tau_v, axis=1, dtype=np.int32)], axis=1)
     cum_h = np.concatenate([np.zeros((E, R, 1), np.int32),
                             np.cumsum(tau_h, axis=2, dtype=np.int32)], axis=2)
+
+    # route-around tables: one shortest-path table per distinct outage link
+    # state (dead EXISTING link somewhere); all-up epochs keep dimension-
+    # order pricing and build nothing.
+    exists = mesh.neighbor_table != topo.NO_NEIGHBOR              # (W, 4)
+    has_outage = (exists[None] & ~schedule.link_up).any(axis=(1, 2))  # (E,)
+    detour_idx = np.full(E, -1, np.int32)
+    comp = np.zeros((E, W), np.int32)
+    mats: list[np.ndarray] = []
+    comps: list[np.ndarray] = []
+    classes: dict[bytes, int] = {}
+    for e in range(E):
+        if not has_outage[e]:
+            continue
+        key = (schedule.link_tau[e].tobytes()
+               + schedule.link_up[e].tobytes())
+        k = classes.get(key)
+        if k is None:
+            k = len(mats)
+            classes[key] = k
+            d = live_path_costs(mesh, schedule.link_tau[e],
+                                schedule.link_up[e])
+            mats.append(d)
+            # component id = lowest reachable worker id (self included)
+            comps.append(np.argmax(d < UNREACHABLE, axis=1).astype(np.int32))
+        detour_idx[e] = k
+        comp[e] = comps[k]
+    detour = jnp.asarray(np.stack(mats)) if mats else None
     return LinkStateArrays(
         epoch_starts=jnp.asarray(schedule.epoch_starts, jnp.int32),
         link_tau=jnp.asarray(schedule.link_tau, jnp.int32),
@@ -198,6 +297,9 @@ def device_tables(schedule: LinkStateSchedule,
         speed=jnp.asarray(schedule.speed, jnp.int32),
         cum_v=jnp.asarray(cum_v),
         cum_h=jnp.asarray(cum_h),
+        detour=detour,
+        detour_idx=jnp.asarray(detour_idx),
+        comp=jnp.asarray(comp),
     )
 
 
@@ -249,9 +351,15 @@ def flight_ticks(tbl: LinkStateArrays, eidx, src, dst,
                  rows: int, cols: int, torus_full: bool) -> jax.Array:
     """Duration (ticks) of flights src[w] → dst[w] departing in epoch `eidx`.
 
-    Dimension-order routing: vertical hops in the source's column, then
-    horizontal hops in the destination's row, each hop priced at the active
-    epoch's `link_tau`. Reduces to `hops * tau` on a uniform schedule.
+    All-up epochs use dimension-order routing: vertical hops in the
+    source's column, then horizontal hops in the destination's row, each
+    hop priced at the active epoch's `link_tau` (reduces to `hops * tau`
+    on a uniform schedule). Epochs with a dead link gather from that
+    epoch's live-link shortest-path table instead, so flights are priced
+    along real detours. Pairs the table marks unreachable fall back to the
+    dimension-order cost — callers must gate flight *departures* on
+    `same_component`, so the fallback is only consumed as the nominal-RTT
+    timeout of a reply whose path was severed by an epoch flip mid-request.
     """
     W = rows * cols
     s = jnp.clip(src, 0, W - 1)
@@ -264,4 +372,26 @@ def flight_ticks(tbl: LinkStateArrays, eidx, src, dst,
                       cs, rows, torus_full)
     horz = _axis_cost(cum_h.T, jnp.minimum(cs, cd), jnp.maximum(cs, cd),
                       rd, cols, torus_full)
-    return (vert + horz).astype(jnp.int32)
+    base = (vert + horz).astype(jnp.int32)
+    if tbl.detour is None:
+        return base
+    k = tbl.detour_idx[eidx]
+    det = tbl.detour[jnp.maximum(k, 0), s, d]                   # (W,) gather
+    det = jnp.where(det < UNREACHABLE, det, base)
+    return jnp.where(k >= 0, det, base)
+
+
+def same_component(tbl: LinkStateArrays, eidx, a, b) -> jax.Array:
+    """Per-worker: is there a live route between a[w] and b[w] in `eidx`?
+
+    Component ids are per-epoch constants, so this is two O(1) gathers —
+    the predicate behind "fully-partitioned workers are unreachable":
+    the simulator refuses to launch a steal flight across components (and
+    denies a grant whose reply path was severed mid-request).
+    """
+    if tbl.detour is None:
+        return jnp.broadcast_to(
+            jnp.bool_(True), jnp.broadcast_shapes(jnp.shape(a), jnp.shape(b)))
+    c = tbl.comp[eidx]
+    W = c.shape[0]
+    return c[jnp.clip(a, 0, W - 1)] == c[jnp.clip(b, 0, W - 1)]

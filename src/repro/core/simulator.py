@@ -117,6 +117,22 @@ paper lists in §2.1/§5, each as an orthogonal, testable mechanism:
     dimension-order path sums at the departure epoch; `_next_event` gains a
     next-link-state-change horizon so leaps never cross an epoch boundary,
     preserving leap ≡ tick bit-exactness under dynamic schedules.
+  * **route-around** — in epochs where a link is down, flights are priced
+    along the epoch's live-link shortest-path detours (precompiled
+    `linkstate` tables) instead of pretending the dimension-order path is
+    still up. Fully-partitioned victims become *unreachable*: the thief
+    never launches the flight (no attempt is counted — its routing layer
+    already knows), escalated ADAPTIVE draws exclude other components, and
+    a grant whose reply path was severed by an epoch flip mid-request is
+    denied while the thief waits out the nominal RTT as a timeout — so no
+    loot is ever launched into a partition and exactness is preserved.
+  * **wake-ups** (elastic grow) — pass `wake_time`: a dead worker rejoins
+    at its wake tick with a fresh, empty state (deque re-armed, fail count
+    and supervision ledger cleared), modelling eclipse *exits*. The woken
+    worker resumes stealing and is immediately stealable itself; pre-shed
+    retirement ends at the wake tick. `_next_event` and the famine window
+    gain next-wake horizon terms, so leap ≡ tick bit-exactness survives
+    mid-horizon rejoins (asserted in the conformance matrix tests).
 
 Congestion accounting: every steal message contributes payload_bytes × hops
 to `bytes_hops`, the quantity behind the paper's §4.2 remark that multi-hop
@@ -220,6 +236,9 @@ class SimState(NamedTuple):
                             # children, thief-side loot imports, transplant
                             # writes (charged to the heir), supervision
                             # re-pushes — so no loss is ever silent
+    stolen_from: jax.Array  # (W,) int32 tasks granted out of each worker's
+                            # deque bottom (victim-side view of successful
+                            # steals, counted at grant time)
 
 
 class SimResult(NamedTuple):
@@ -242,6 +261,10 @@ class SimResult(NamedTuple):
     # (W,) breakdown of `overflow`: dropped tasks charged to the worker whose
     # full deque rejected the push (thief-side loot imports included)
     per_worker_overflow: np.ndarray | None = None
+    # (W,) tasks granted out of each worker's deque bottom (victim-side
+    # steal count) — lets tests pin *who* was stolen from, e.g. that a
+    # woken worker rejoined the victim set after an eclipse exit
+    per_worker_stolen: np.ndarray | None = None
 
 
 def _mesh_tables(mesh: topo.MeshTopology, strategy: stealing.Strategy):
@@ -267,10 +290,29 @@ def _mesh_tables(mesh: topo.MeshTopology, strategy: stealing.Strategy):
 _hop_dist = topo.hop_dist
 
 
+def _masked_radius2(tbl, ls, eidx):
+    """ADAPTIVE's escalated victim set under the active epoch's link state:
+    radius-2 entries in a different live-link component are unreachable —
+    the escalated draw must not waste picks on them (and the famine
+    predicate may not treat them as reachable supply). A (W, 12) gather
+    from the per-epoch component row; the unmasked table when the schedule
+    has no outage epochs (trace-time: `ls.detour is None`)."""
+    r2 = tbl.get("radius2")
+    if r2 is None or ls is None or ls.detour is None:
+        return r2
+    c = ls.comp[eidx]
+    W = c.shape[0]
+    ok = (r2 >= 0) & (c[jnp.clip(r2, 0, W - 1)] == c[:, None])
+    return jnp.where(ok, r2, topo.NO_NEIGHBOR)
+
+
 def _select(cfg: SimConfig, tbl, key, is_thief, fails, W, link=None):
-    """Victim selection; `link = (up_row, tau_row)` masks radius-1 victim
-    sets with the active epoch's link state (GLOBAL / LIFELINE are multi-hop
-    and see only latency, not outages — see linkstate module docstring)."""
+    """Victim selection; `link = (up_row, tau_row, r2_masked)` masks
+    radius-1 victim sets with the active epoch's link state and restricts
+    ADAPTIVE's escalated set to reachable (same live-link component)
+    victims. GLOBAL / LIFELINE draw over all workers; the caller gates
+    their flight *departures* on reachability instead (an unreachable draw
+    never launches — see linkstate module docstring)."""
     s = cfg.strategy
     if s == stealing.Strategy.GLOBAL:
         return stealing.choose_global(key, W, is_thief)
@@ -283,13 +325,13 @@ def _select(cfg: SimConfig, tbl, key, is_thief, fails, W, link=None):
             return stealing.choose_adaptive(key, tbl["neighbors"], tbl["radius2"],
                                             fails, is_thief, cfg.escalate_after)
         raise ValueError(s)
-    up_row, tau_row = link
+    up_row, tau_row, r2m = link
     nbrs = jnp.where(up_row & (tbl["neighbors"] >= 0), tbl["neighbors"],
                      topo.NO_NEIGHBOR)
     if s == stealing.Strategy.NEIGHBOR:
         return stealing.choose_neighbor(key, nbrs, is_thief)
     if s == stealing.Strategy.ADAPTIVE:
-        return stealing.choose_adaptive_linkaware(key, nbrs, tbl["radius2"],
+        return stealing.choose_adaptive_linkaware(key, nbrs, r2m,
                                                   tau_row, fails, is_thief,
                                                   cfg.escalate_after)
     raise ValueError(s)
@@ -360,31 +402,73 @@ def _epoch_view(ls, t):
 
 
 def _can_attempt(cfg: SimConfig, tbl, ls, eidx, fails, W: int):
-    """Per-worker: would `_select` produce a victim for an idle thief now?
+    """Per-worker: could an idle thief launch a steal flight right now?
 
     Radius-1 strategies lose victims when every adjacent link is down
-    (eclipse / handover outage); multi-hop strategies always have one for
-    W > 1. Must match `_select` exactly — the leap stepper skips idle
-    workers for which this is False.
+    (eclipse / handover outage); multi-hop strategies lose them only when
+    no *reachable* other worker exists (live-link partition — their draws
+    toward other components never depart). Must never be False when
+    `_select` + the departure gate could produce a flight — the leap
+    stepper skips idle workers for which this is False.
     """
-    if ls is None or cfg.strategy in (stealing.Strategy.GLOBAL,
-                                      stealing.Strategy.LIFELINE):
+    if cfg.strategy in (stealing.Strategy.GLOBAL, stealing.Strategy.LIFELINE):
+        if ls is None or ls.detour is None:
+            return jnp.broadcast_to(jnp.bool_(W > 1), (W,))
+        c = ls.comp[eidx]
+        comp_size = jnp.zeros((W,), jnp.int32).at[c].add(1)
+        return comp_size[c] > 1
+    if ls is None:
         return jnp.broadcast_to(jnp.bool_(W > 1), (W,))
     nbr_live = (ls.link_up[eidx] & (tbl["neighbors"] >= 0)).any(axis=1)
     if cfg.strategy == stealing.Strategy.NEIGHBOR:
         return nbr_live
-    # ADAPTIVE: escalated thieves fall back to the (unmasked) radius-2 set
-    return nbr_live | (jnp.bool_(W > 1) & (fails >= cfg.escalate_after))
+    # ADAPTIVE: escalated thieves fall back to the reachability-masked
+    # radius-2 set (all entries masked away ⇒ no escalated victim either)
+    r2m = _masked_radius2(tbl, ls, eidx)
+    r2_any = (r2m != topo.NO_NEIGHBOR).any(axis=1)
+    return nbr_live | (r2_any & (fails >= cfg.escalate_after))
 
 
-def _scheduled_horizons(ne, t, alive, fail_time, cfg: SimConfig, ls):
+def _epoch_link_tables(tbl, ls, eidx):
+    """Per-epoch victim-set tables under the active link state: the
+    link_up-masked neighbor table, the reachability-masked radius-2 table,
+    and the component row (None when the schedule has no outage epochs).
+    Shared by `_famine_horizon` and the famine replay — their agreement is
+    load-bearing for leap ≡ tick bit-identity, so there is exactly one
+    spelling of these masks."""
+    nbr_tab = jnp.where(ls.link_up[eidx] & (tbl["neighbors"] >= 0),
+                        tbl["neighbors"], topo.NO_NEIGHBOR)
+    r2_tab = _masked_radius2(tbl, ls, eidx)
+    comp_row = None if ls.detour is None else ls.comp[eidx]
+    return nbr_tab, r2_tab, comp_row
+
+
+def _retired_mask(cfg: SimConfig, fail_time, wake_time, t, W: int):
+    """Pre-shed retirement: a warned worker idles from `fail - warn_ticks`
+    until its (predictable) death and must not pull work back in. The
+    retirement ends at the wake tick — a worker that rejoined after an
+    eclipse exit is a full citizen again, not a zombie of its old warning.
+    Shared by the tick path, both horizons, and the famine replay so the
+    predicate can never drift between them."""
+    if not cfg.preshed:
+        return jnp.zeros((W,), bool)
+    r = (fail_time >= 0) & (t >= fail_time - cfg.warn_ticks)
+    return r & ~((wake_time >= 0) & (t >= wake_time))
+
+
+def _scheduled_horizons(ne, t, alive, fail_time, wake_time, cfg: SimConfig,
+                        ls):
     """Clip `ne` at every scheduled global event: deaths (and pre-shed
-    warnings) of still-alive workers, periodic checkpoints, and link-state
-    epoch boundaries. Shared by `_next_event` and `_famine_horizon` so the
-    two horizons can never drift apart on these correctness-critical terms.
+    warnings) of still-alive workers, wake-ups of dead ones, periodic
+    checkpoints, and link-state epoch boundaries. Shared by `_next_event`
+    and `_famine_horizon` so the two horizons can never drift apart on
+    these correctness-critical terms.
     """
     ne = jnp.minimum(ne, jnp.min(
         jnp.where(alive & (fail_time >= t), fail_time, _NEVER)))
+    # eclipse exits: a dead worker with a pending wake rejoins mid-horizon
+    ne = jnp.minimum(ne, jnp.min(
+        jnp.where(~alive & (wake_time >= t), wake_time, _NEVER)))
     if cfg.preshed:
         warn_at = fail_time - cfg.warn_ticks
         ne = jnp.minimum(ne, jnp.min(
@@ -400,8 +484,8 @@ def _scheduled_horizons(ne, t, alive, fail_time, cfg: SimConfig, ls):
     return ne
 
 
-def _next_event(state: SimState, t, speed, fail_time, cfg: SimConfig, W: int,
-                tbl, ls):
+def _next_event(state: SimState, t, speed, fail_time, wake_time,
+                cfg: SimConfig, W: int, tbl, ls):
     """First tick >= t at which any worker does more than a bulk decrement.
 
     Conservative (may return a tick with no visible state change — that
@@ -422,10 +506,7 @@ def _next_event(state: SimState, t, speed, fail_time, cfg: SimConfig, W: int,
     # work-exhausted workers expand (deque nonempty) or start a steal (if a
     # victim is reachable under the current link state) at their next active
     # tick — unless retired by a pre-shed warning (they idle until death).
-    if cfg.preshed:
-        retired = (fail_time >= 0) & (t >= fail_time - cfg.warn_ticks)
-    else:
-        retired = jnp.zeros((W,), bool)
+    retired = _retired_mask(cfg, fail_time, wake_time, t, W)
     can_try = _can_attempt(cfg, tbl, ls, eidx, state.fails, W)
     idle_acts = (state.deque.size > 0) | (can_try & ~retired)
     run_ev = jnp.where(state.work > 0, burn_ev,
@@ -434,11 +515,12 @@ def _next_event(state: SimState, t, speed, fail_time, cfg: SimConfig, W: int,
     # in-flight steal messages arrive when the timer reaches 0
     flight = (state.phase != PHASE_RUN) & alive
     ev = jnp.where(flight, t + jnp.maximum(state.timer - 1, 0), ev)
-    return _scheduled_horizons(jnp.min(ev), t, alive, fail_time, cfg, ls)
+    return _scheduled_horizons(jnp.min(ev), t, alive, fail_time, wake_time,
+                               cfg, ls)
 
 
-def _famine_horizon(state: SimState, t, speed, fail_time, cfg: SimConfig,
-                    W: int, mesh: topo.MeshTopology, tbl, ls):
+def _famine_horizon(state: SimState, t, speed, fail_time, wake_time,
+                    cfg: SimConfig, W: int, mesh: topo.MeshTopology, tbl, ls):
     """First tick >= t at which any deque size can change (or a recovery /
     checkpoint / epoch event fires) — the famine-window horizon.
 
@@ -458,25 +540,22 @@ def _famine_horizon(state: SimState, t, speed, fail_time, cfg: SimConfig,
     if ls is None:
         eidx, sp = None, speed
         nbr_tab = tbl["neighbors"]
+        r2_tab, comp_row = tbl.get("radius2"), None
         # a probe cycle always costs >= 1 tick, even at hop_ticks=0
         min_cycle = max(2 * cfg.hop_ticks - 1, 1)
     else:
         eidx, sp = _epoch_view(ls, t)
-        nbr_tab = jnp.where(ls.link_up[eidx] & (tbl["neighbors"] >= 0),
-                            tbl["neighbors"], topo.NO_NEIGHBOR)
+        nbr_tab, r2_tab, comp_row = _epoch_link_tables(tbl, ls, eidx)
         min_cycle = jnp.maximum(2 * lstate.min_link_tau(ls, eidx) - 1, 1)
     nonempty = state.deque.size > 0
     t0 = t + ((sp - t % sp) % sp)
     run = (state.phase == PHASE_RUN) & alive
     burn_ev = t0 + state.work * sp
-    if cfg.preshed:
-        retired = (fail_time >= 0) & (t >= fail_time - cfg.warn_ticks)
-    else:
-        retired = jnp.zeros((W,), bool)
+    retired = _retired_mask(cfg, fail_time, wake_time, t, W)
     risky = stealing.probe_may_succeed(
-        cfg.strategy, nonempty, state.fails, nbr_tab, tbl.get("radius2"),
+        cfg.strategy, nonempty, state.fails, nbr_tab, r2_tab,
         escalate_after=cfg.escalate_after, window=cfg.famine_batch,
-        min_cycle=min_cycle, num_workers=W)
+        min_cycle=min_cycle, num_workers=W, comp_row=comp_row)
     # holders expand when their burn ends; risky thieves (a drawable victim
     # may be nonempty) end the window at their next probe opportunity
     acts = nonempty | (risky & ~retired)
@@ -512,11 +591,12 @@ def _famine_horizon(state: SimState, t, speed, fail_time, cfg: SimConfig,
     flight_ev = jnp.minimum(flight_ev, jnp.where(risky & ~retired,
                                                  next_probe, _NEVER))
     ev = jnp.where(flight, flight_ev, ev)
-    return _scheduled_horizons(jnp.min(ev), t, alive, fail_time, cfg, ls)
+    return _scheduled_horizons(jnp.min(ev), t, alive, fail_time, wake_time,
+                               cfg, ls)
 
 
 def _sim_core(workload, mesh: topo.MeshTopology, cfg: SimConfig, key0,
-              fail_time, speed, ls=None):
+              fail_time, wake_time, speed, ls=None):
     W = mesh.num_workers
     torus_full = mesh.torus_full()
     tbl = _mesh_tables(mesh, cfg.strategy)
@@ -541,7 +621,7 @@ def _sim_core(workload, mesh: topo.MeshTopology, cfg: SimConfig, key0,
         sup_thief=jnp.full((W, S), -1, jnp.int32), sup_n=z,
         attempts=z, successes=z, nodes=z, busy=z, steal_wait=z,
         hops_lo=jnp.int32(0), hops_hi=jnp.int32(0),
-        ckpt_count=jnp.int32(0), overflow=z)
+        ckpt_count=jnp.int32(0), overflow=z, stolen_from=z)
 
     def tick_fn(carry):
         state, snap, t = carry
@@ -551,7 +631,8 @@ def _sim_core(workload, mesh: topo.MeshTopology, cfg: SimConfig, key0,
             eidx, sp, link = None, speed, None
         else:
             eidx, sp = _epoch_view(ls, t)
-            link = (ls.link_up[eidx], ls.link_tau[eidx])
+            link = (ls.link_up[eidx], ls.link_tau[eidx],
+                    _masked_radius2(tbl, ls, eidx))
 
         # ------------- scheduled failures / shutdowns --------------------- #
         dying_now = alive & (fail_time == t)
@@ -655,6 +736,25 @@ def _sim_core(workload, mesh: topo.MeshTopology, cfg: SimConfig, key0,
                                    got=jnp.where(dying_now, False, state.got))
         alive = state.alive
 
+        # ------------- eclipse exits: wake-ups (elastic grow) ------------- #
+        # A dead worker whose wake tick arrives rejoins as a fresh citizen:
+        # empty deque (transplanted/lost at death — every recovery path
+        # leaves dead deques empty), zero fail count, cleared supervision
+        # ledger, no in-flight state. It resumes stealing this very tick
+        # and is immediately stealable once it holds work.
+        waking = (~alive) & (wake_time == t)
+        alive = alive | waking
+        state = state._replace(
+            alive=alive,
+            phase=jnp.where(waking, PHASE_RUN, state.phase),
+            timer=jnp.where(waking, 0, state.timer),
+            victim=jnp.where(waking, -1, state.victim),
+            work=jnp.where(waking, 0, state.work),
+            fails=jnp.where(waking, 0, state.fails),
+            got=jnp.where(waking, False, state.got),
+            sup_thief=jnp.where(waking[:, None], -1, state.sup_thief),
+            sup_n=jnp.where(waking, 0, state.sup_n))
+
         # ------------- periodic checkpoint (TC) ---------------------------- #
         take_ckpt = (cfg.ckpt_interval > 0) & (t % max(cfg.ckpt_interval, 1) == 0)
         if cfg.recovery == Recovery.TC:
@@ -681,12 +781,16 @@ def _sim_core(workload, mesh: topo.MeshTopology, cfg: SimConfig, key0,
 
         # idle workers become thieves: request departs now, arrives in h·τ
         idle = running & (~burning) & (~popped) & (deque_.size == 0)
-        if cfg.preshed:
-            # retired workers (warned of shutdown) must not pull work back in
-            retired = (fail_time >= 0) & (t >= fail_time - cfg.warn_ticks)
-            idle = idle & ~retired
+        # retired workers (warned of shutdown) must not pull work back in
+        idle = idle & ~_retired_mask(cfg, fail_time, wake_time, t, W)
         victim_new = _select(cfg, tbl, key, idle, state.fails, W, link)
         has_victim = victim_new >= 0
+        if ls is not None:
+            # route-around: a victim with no live route (other component)
+            # is unreachable — the flight never departs, no attempt is
+            # counted, and the thief redraws at its next active tick.
+            has_victim = has_victim & lstate.same_component(
+                ls, eidx, jnp.arange(W), victim_new)
         vhops = jnp.where(has_victim,
                           _hop_dist(mesh, tbl["coords"], victim_new), 0)
         if ls is None:
@@ -709,6 +813,13 @@ def _sim_core(workload, mesh: topo.MeshTopology, cfg: SimConfig, key0,
         arriving = in_req & (timer == 0)
         # victims must be alive to grant (dead satellites drop requests)
         valid_victim = arriving & alive[jnp.clip(victim, 0, W - 1)]
+        if ls is not None:
+            # deny the grant when an epoch flip mid-request severed the
+            # reply path (different live-link component at arrival): loot
+            # must never be launched into a partition. The empty-handed
+            # reply below then prices as the nominal-RTT timeout.
+            valid_victim = valid_victim & lstate.same_component(
+                ls, eidx, victim, jnp.arange(W))
         plan = stealing.resolve_grants(jnp.where(valid_victim, victim, -1),
                                        deque_.size, cfg.max_grants_per_victim)
         v = jnp.clip(plan.victim, 0, W - 1)
@@ -716,6 +827,8 @@ def _sim_core(workload, mesh: topo.MeshTopology, cfg: SimConfig, key0,
             deque_, plan.taken, stealing.GRANT_WIDTH, use_kernel=use_kernel)
         stolen = stolen_blk[v, jnp.clip(plan.rank, 0, stealing.GRANT_WIDTH - 1)]
         got = plan.got
+        # victim-side steal ledger (who was stolen from, counted at grant)
+        stolen_from = state.stolen_from + plan.taken
         # supervision: victims log (record, thief)
         if cfg.recovery == Recovery.SUPERVISION:
             sup_buf, sup_thief, sup_n = state.sup_buf, state.sup_thief, state.sup_n
@@ -776,7 +889,7 @@ def _sim_core(workload, mesh: topo.MeshTopology, cfg: SimConfig, key0,
             timer=timer, victim=victim, loot=loot, got=got_flight & ~delivered,
             alive=alive, attempts=attempts, successes=successes, nodes=nodes,
             busy=busy, steal_wait=steal_wait, hops_lo=hops_lo, hops_hi=hops_hi,
-            overflow=overflow)
+            overflow=overflow, stolen_from=stolen_from)
         live = (jnp.sum(deque_.size) + jnp.sum(work)
                 + jnp.sum((got_flight & ~delivered).astype(jnp.int32))) > 0
         return new_state, snap, t + 1, live
@@ -837,8 +950,8 @@ def _sim_core(workload, mesh: topo.MeshTopology, cfg: SimConfig, key0,
         with `ne` the `_next_event` horizon of the returned state, so the
         trailing leap never recomputes it.
         """
-        ne_risky = _famine_horizon(state, t, speed, fail_time, cfg, W, mesh,
-                                   tbl, ls)
+        ne_risky = _famine_horizon(state, t, speed, fail_time, wake_time,
+                                   cfg, W, mesh, tbl, ls)
         hi = jnp.minimum(ne_risky, cfg.max_ticks)
         delta = jnp.clip(hi - t, 0, FB)
         # profitable only when probe-cycle events (counted by _next_event but
@@ -850,13 +963,13 @@ def _sim_core(workload, mesh: topo.MeshTopology, cfg: SimConfig, key0,
             if ls is None:
                 eidx0, sp0 = None, speed
                 nbr_tab, tau_row = tbl["neighbors"], None
+                r2_tab, comp0 = tbl.get("radius2"), None
             else:
                 eidx0, sp0 = _epoch_view(ls, t)
-                nbr_tab = jnp.where(ls.link_up[eidx0] & (tbl["neighbors"] >= 0),
-                                    tbl["neighbors"], topo.NO_NEIGHBOR)
+                nbr_tab, r2_tab, comp0 = _epoch_link_tables(tbl, ls, eidx0)
                 tau_row = ls.link_tau[eidx0]
             near, far = stealing.batched_victim_draws(
-                cfg.strategy, key0, t, FB, nbr_tab, tbl.get("radius2"),
+                cfg.strategy, key0, t, FB, nbr_tab, r2_tab,
                 num_workers=W, link_tau_row=tau_row)
             empty0 = state.deque.size == 0
             alive0 = state.alive
@@ -878,9 +991,7 @@ def _sim_core(workload, mesh: topo.MeshTopology, cfg: SimConfig, key0,
                 work = work - burning.astype(jnp.int32)
                 busy = busy + burning.astype(jnp.int32)
                 idle = running & ~burning & empty0 & act
-                if cfg.preshed:
-                    retired = (fail_time >= 0) & (tj >= fail_time - cfg.warn_ticks)
-                    idle = idle & ~retired
+                idle = idle & ~_retired_mask(cfg, fail_time, wake_time, tj, W)
                 if cfg.strategy is stealing.Strategy.ADAPTIVE:
                     chosen = jnp.where(fails >= cfg.escalate_after,
                                        far_j, near_j)
@@ -888,6 +999,12 @@ def _sim_core(workload, mesh: topo.MeshTopology, cfg: SimConfig, key0,
                     chosen = near_j
                 victim_new = jnp.where(idle, chosen, topo.NO_NEIGHBOR)
                 start_req = idle & (victim_new >= 0)
+                if comp0 is not None:
+                    # mirror the tick path's departure gate: a draw in a
+                    # different live-link component never launches (only
+                    # GLOBAL can draw one — near/far tables are masked)
+                    start_req = start_req & (
+                        comp0[jnp.clip(victim_new, 0, W - 1)] == comp0)
                 vhops = jnp.where(start_req,
                                   _hop_dist(mesh, tbl["coords"], victim_new), 0)
                 if ls is None:
@@ -946,7 +1063,8 @@ def _sim_core(workload, mesh: topo.MeshTopology, cfg: SimConfig, key0,
                 work=work, loot=loot, attempts=attempts, busy=busy,
                 steal_wait=steal_wait, hops_lo=hops_lo, hops_hi=hops_hi)
             return new_state, t_out, live_out, _next_event(
-                new_state, t_out, speed, fail_time, cfg, W, tbl, ls)
+                new_state, t_out, speed, fail_time, wake_time, cfg, W, tbl,
+                ls)
 
         return jax.lax.cond(pred, fast, lambda s, tt, lv: (s, tt, lv, ne_all),
                             state, t, live)
@@ -959,7 +1077,8 @@ def _sim_core(workload, mesh: topo.MeshTopology, cfg: SimConfig, key0,
         state, snap, t, _, iters = carry
         state, snap, t, live = tick_fn((state, snap, t))
         if cfg.step_mode == "leap":
-            ne = _next_event(state, t, speed, fail_time, cfg, W, tbl, ls)
+            ne = _next_event(state, t, speed, fail_time, wake_time, cfg, W,
+                             tbl, ls)
             if famine_on:
                 state, t, live, ne = famine_ff(state, t, live, ne)
             state, t, live = leap(state, t, live, ne)
@@ -976,10 +1095,10 @@ _sim_jit = partial(jax.jit, static_argnames=("workload", "mesh", "cfg"))(_sim_co
 
 
 @partial(jax.jit, static_argnames=("workload", "mesh", "cfg"))
-def _sim_batch_jit(workload, mesh, cfg, keys, fail_time, speed, ls):
+def _sim_batch_jit(workload, mesh, cfg, keys, fail_time, wake_time, speed, ls):
     return jax.vmap(
-        lambda k, ft, sp: _sim_core(workload, mesh, cfg, k, ft, sp, ls)
-    )(keys, fail_time, speed)
+        lambda k, ft, wt, sp: _sim_core(workload, mesh, cfg, k, ft, wt, sp, ls)
+    )(keys, fail_time, wake_time, speed)
 
 
 def _check_cfg(cfg: SimConfig):
@@ -1013,15 +1132,26 @@ def _finalize(state, ticks, iters, mesh: topo.MeshTopology,
         utilization=busy / max(t * max(alive_n, 1), 1),
         per_worker_busy=np.asarray(state.busy),
         events=int(iters),
-        per_worker_overflow=np.asarray(state.overflow))
+        per_worker_overflow=np.asarray(state.overflow),
+        per_worker_stolen=np.asarray(state.stolen_from))
 
 
-def _fail_speed_arrays(W, fail_time, speed):
-    ft = jnp.asarray(fail_time if fail_time is not None
-                     else -np.ones(W, np.int32), jnp.int32)
+def _fail_speed_arrays(W, fail_time, speed, wake_time=None):
+    ft_np = np.asarray(fail_time if fail_time is not None
+                       else -np.ones(W, np.int32), np.int32)
+    wt_np = np.asarray(wake_time if wake_time is not None
+                       else -np.ones(W, np.int32), np.int32)
+    bad = (wt_np >= 0) & ((ft_np < 0) | (wt_np <= ft_np))
+    if bad.any():
+        raise ValueError(
+            "wake_time must be strictly after the worker's fail_time (and "
+            f"only set for workers that fail); offending workers: "
+            f"{np.where(bad)[0].tolist()}")
+    ft = jnp.asarray(ft_np)
+    wt = jnp.asarray(wt_np)
     sp = jnp.asarray(speed if speed is not None
                      else np.ones(W, np.int32), jnp.int32)
-    return ft, sp
+    return ft, wt, sp
 
 
 def _linkstate_tables(linkstate, mesh, speed):
@@ -1038,17 +1168,22 @@ def _linkstate_tables(linkstate, mesh, speed):
 def simulate(workload, mesh: topo.MeshTopology, cfg: SimConfig | None = None,
              fail_time: np.ndarray | None = None,
              speed: np.ndarray | None = None,
-             linkstate: "lstate.LinkStateSchedule | None" = None) -> SimResult:
+             linkstate: "lstate.LinkStateSchedule | None" = None,
+             wake_time: np.ndarray | None = None) -> SimResult:
     """Run the tick simulator. `fail_time[w]` = death tick (-1: immortal);
+    `wake_time[w]` = rejoin tick of a dead worker (-1: death is permanent;
+    must be > fail_time[w] — eclipse exits wake with a fresh empty state);
     `speed[w]` = straggler divisor (1 = nominal). With `linkstate`, hop
     latency / link availability / speeds follow the piecewise-constant
     schedule instead of the scalar `cfg.hop_ticks` (which is then unused)."""
     cfg = cfg or SimConfig()
     _check_cfg(cfg)
     ls = _linkstate_tables(linkstate, mesh, speed)
-    ft, sp = _fail_speed_arrays(mesh.num_workers, fail_time, speed)
+    ft, wt, sp = _fail_speed_arrays(mesh.num_workers, fail_time, speed,
+                                    wake_time)
     state, ticks, iters = _sim_jit(workload, mesh, cfg,
-                                   jax.random.PRNGKey(cfg.seed), ft, sp, ls)
+                                   jax.random.PRNGKey(cfg.seed), ft, wt, sp,
+                                   ls)
     return _finalize(jax.device_get(state), ticks, iters, mesh, cfg)
 
 
@@ -1057,15 +1192,16 @@ def simulate_batch(workload, mesh: topo.MeshTopology,
                    seeds=(0,),
                    fail_time: np.ndarray | None = None,
                    speed: np.ndarray | None = None,
-                   linkstate: "lstate.LinkStateSchedule | None" = None
+                   linkstate: "lstate.LinkStateSchedule | None" = None,
+                   wake_time: np.ndarray | None = None
                    ) -> list[SimResult]:
     """Run one simulation per seed in a single compiled, vmapped call.
 
     All seeds share `cfg` (whose own `seed` field is ignored), the failure
-    schedule, the straggler speeds, and the link-state schedule; the batch
-    advances until the slowest seed terminates. Returns one `SimResult` per
-    seed, identical to `simulate(..., cfg._replace-ish(seed=s))` run
-    serially.
+    and wake-up schedules, the straggler speeds, and the link-state
+    schedule; the batch advances until the slowest seed terminates. Returns
+    one `SimResult` per seed, identical to
+    `simulate(..., cfg._replace-ish(seed=s))` run serially.
     """
     cfg = cfg or SimConfig()
     _check_cfg(cfg)
@@ -1073,12 +1209,13 @@ def simulate_batch(workload, mesh: topo.MeshTopology,
     W = mesh.num_workers
     seeds = list(seeds)
     keys = jnp.stack([jax.random.PRNGKey(int(s)) for s in seeds])
-    ft, sp = _fail_speed_arrays(W, fail_time, speed)
+    ft, wt, sp = _fail_speed_arrays(W, fail_time, speed, wake_time)
     B = len(seeds)
     fts = jnp.broadcast_to(ft[None], (B, W))
+    wts = jnp.broadcast_to(wt[None], (B, W))
     sps = jnp.broadcast_to(sp[None], (B, W))
-    states, ticks, iters = _sim_batch_jit(workload, mesh, cfg, keys, fts, sps,
-                                          ls)
+    states, ticks, iters = _sim_batch_jit(workload, mesh, cfg, keys, fts,
+                                          wts, sps, ls)
     states, ticks, iters = jax.device_get((states, ticks, iters))
     return [
         _finalize(jax.tree.map(lambda x: x[i], states), ticks[i], iters[i],

@@ -327,7 +327,8 @@ def probe_may_succeed(strategy: Strategy, nonempty: jax.Array,
                       fails: jax.Array, neighbor_table: jax.Array,
                       radius2_table: jax.Array | None, *,
                       escalate_after: int, window: int, min_cycle,
-                      num_workers: int) -> jax.Array:
+                      num_workers: int,
+                      comp_row: jax.Array | None = None) -> jax.Array:
     """Deterministic per-worker emptiness/reachability predicate.
 
     Returns, per worker, whether a steal probe *drawn within the next
@@ -339,18 +340,28 @@ def probe_may_succeed(strategy: Strategy, nonempty: jax.Array,
     lifeline-graph insight: victim emptiness is deterministic between
     events).
 
-    `neighbor_table` must already have dead links masked to NO_NEIGHBOR
-    when running under a link-state schedule. For ADAPTIVE the radius-2 set
-    only matters if the worker can escalate inside the window: each failed
-    attempt costs at least `min_cycle` ticks (2·τ_min − 1), so a worker
-    needing k more failures to escalate cannot draw a radius-2 victim
-    before (k − 1)·min_cycle ticks have passed. LIFELINE falls back to
-    global-random victims, so it is always treated as able to succeed
-    (the simulator keeps it on the slow path).
+    `neighbor_table` (and, for ADAPTIVE, `radius2_table`) must already have
+    dead links / unreachable victims masked to NO_NEIGHBOR when running
+    under a link-state schedule. For GLOBAL, `comp_row` — the active
+    epoch's (W,) live-link connected-component ids — restricts the
+    predicate to *reachable* nonempty victims (a probe to a different
+    component never departs, so it can never succeed): without it any
+    nonempty deque anywhere keeps every GLOBAL thief risky. For ADAPTIVE
+    the radius-2 set only matters if the worker can escalate inside the
+    window: each failed attempt costs at least `min_cycle` ticks
+    (2·τ_min − 1), so a worker needing k more failures to escalate cannot
+    draw a radius-2 victim before (k − 1)·min_cycle ticks have passed.
+    LIFELINE falls back to global-random victims, so it is always treated
+    as able to succeed (the simulator keeps it on the slow path).
     """
     if strategy == Strategy.GLOBAL:
-        return jnp.broadcast_to(nonempty.any() & (num_workers > 1),
-                                (num_workers,))
+        if comp_row is None:
+            return jnp.broadcast_to(nonempty.any() & (num_workers > 1),
+                                    (num_workers,))
+        in_comp = jnp.zeros((num_workers,), jnp.int32).at[comp_row].add(
+            nonempty.astype(jnp.int32))
+        others = in_comp[comp_row] - nonempty.astype(jnp.int32)
+        return others > 0
     if strategy == Strategy.LIFELINE:
         return jnp.ones((num_workers,), bool)
     near = _any_nonempty(neighbor_table, nonempty)

@@ -31,6 +31,12 @@ DIRECTIONS: tuple[tuple[int, int], ...] = ((-1, 0), (1, 0), (0, -1), (0, 1))
 NUM_DIRECTIONS = len(DIRECTIONS)
 NO_NEIGHBOR = -1
 
+# Path cost of a worker pair with no live route between them. Small enough
+# that sums with real link latencies never overflow int32, large enough that
+# any comparison `cost < UNREACHABLE` cleanly separates routable pairs
+# (real detours are bounded by W · max link τ, far below 2^28).
+UNREACHABLE = np.int32(1 << 28)
+
 
 @dataclasses.dataclass(frozen=True)
 class MeshTopology:
@@ -199,6 +205,33 @@ def hop_dist(mesh: MeshTopology, coords, victim):
         dr = jnp.minimum(dr, mesh.rows - dr)
         dc = jnp.minimum(dc, mesh.cols - dc)
     return (dr + dc).astype(jnp.int32)
+
+
+def detour_matrix(mesh: MeshTopology, link_tau: np.ndarray,
+                  link_up: np.ndarray) -> np.ndarray:
+    """(W, W) all-pairs shortest-path costs over LIVE links — test oracle.
+
+    Dense Floyd–Warshall, O(W^3) and host-side only: the reference that
+    `linkstate.live_path_costs` (the vectorized repeated-min-plus builder
+    used to compile route-around tables) is asserted against in tests.
+    `link_tau`/`link_up` are (W, 4) rows in `DIRECTIONS` order; dead or
+    non-existent links contribute no edge. Pairs with no live route are
+    pinned at `UNREACHABLE`. With all links up and uniform τ this equals
+    ``hop_matrix * τ`` (dimension-order routing cost).
+    """
+    W = mesh.num_workers
+    inf = np.int64(1) << 40
+    d = np.full((W, W), inf, np.int64)
+    np.fill_diagonal(d, 0)
+    nbr = mesh.neighbor_table
+    for w in range(W):
+        for k in range(NUM_DIRECTIONS):
+            v = int(nbr[w, k])
+            if v != NO_NEIGHBOR and bool(link_up[w, k]):
+                d[w, v] = min(d[w, v], int(link_tau[w, k]))
+    for k in range(W):
+        d = np.minimum(d, d[:, k : k + 1] + d[k : k + 1, :])
+    return np.minimum(d, UNREACHABLE).astype(np.int32)
 
 
 def theoretical_mean_hops(n: int) -> float:

@@ -128,6 +128,134 @@ def test_eclipse_links_dark_from_entry_and_symmetric():
         assert ls.link_up[e_before, w][free].all()
 
 
+def test_schedule_emits_wake_epochs_and_restores_links():
+    """Eclipse exits: every sleeper whose shadow ends inside the horizon
+    gets `wake_time = entry + eclipse_fraction·orbit`, the wake tick is an
+    epoch boundary, its links are dark for the whole sleep and back up from
+    the wake epoch on (symmetric — validate() passes throughout)."""
+    cfg = dataclasses.replace(BASE, battery_limited_frac=0.5,
+                              eclipse_fraction=0.3)
+    con = constellation.Constellation(cfg)
+    horizon = 2 * cfg.orbit_ticks
+    sched = con.schedule(horizon_ticks=horizon)
+    ls = sched.linkstate.validate(con.mesh)
+    eclipse_len = int(round(cfg.eclipse_fraction * cfg.orbit_ticks))
+    sleepers = np.where(sched.predictable)[0]
+    assert len(sleepers)
+    woken = sleepers[sched.wake_time[sleepers] >= 0]
+    assert len(woken), "no sleeper wakes inside the horizon"
+    # non-sleepers never get a wake tick
+    assert (sched.wake_time[~sched.predictable] == -1).all()
+    nbr = con.mesh.neighbor_table
+    for w in woken:
+        entry, exit_t = int(sched.fail_time[w]), int(sched.wake_time[w])
+        assert exit_t == entry + eclipse_len
+        assert exit_t in set(int(t) for t in ls.epoch_starts)
+        has = nbr[w] >= 0
+        assert (~ls.up_at(exit_t - 1)[w])[has].all()  # dark until the end...
+        # ...and up from the wake epoch on, unless the NEIGHBOR is asleep
+        nbr_w = np.clip(nbr[w], 0, con.mesh.num_workers - 1)
+        n_asleep = (sched.predictable[nbr_w]
+                    & (sched.fail_time[nbr_w] >= 0)
+                    & (sched.fail_time[nbr_w] <= exit_t)
+                    & ((sched.wake_time[nbr_w] < 0)
+                       | (sched.wake_time[nbr_w] > exit_t)))
+        free = has & ~n_asleep
+        assert ls.up_at(exit_t)[w][free].all()
+    # sleepers that never wake stay dark to the horizon's last epoch
+    never = sleepers[sched.wake_time[sleepers] < 0]
+    for w in never:
+        has = nbr[w] >= 0
+        assert (~ls.link_up[-1, w])[has].all()
+
+
+def test_device_tables_detours_match_floyd_warshall_oracle():
+    """Compiling a schedule with seam outages builds live-link shortest-path
+    tables exactly where a link is down (and nowhere else), each row equal
+    to the dense `topology.detour_matrix` oracle; all-up epochs keep
+    dimension-order pricing (detour_idx == -1)."""
+    cfg = dataclasses.replace(BASE, wraparound=True, battery_limited_frac=0.2,
+                              seam_outage_frac=0.2)
+    con = constellation.Constellation(cfg)
+    sched = con.schedule(horizon_ticks=cfg.orbit_ticks)
+    ls = sched.linkstate
+    tbl = linkstate.device_tables(ls, con.mesh)
+    exists = con.mesh.neighbor_table != topology.NO_NEIGHBOR
+    has_outage = (exists[None] & ~ls.link_up).any(axis=(1, 2))
+    assert has_outage.any() and not has_outage.all()
+    idx = np.asarray(tbl.detour_idx)
+    np.testing.assert_array_equal(idx >= 0, has_outage)
+    det = np.asarray(tbl.detour)
+    for e in np.where(has_outage)[0]:
+        want = topology.detour_matrix(con.mesh, ls.link_tau[e], ls.link_up[e])
+        np.testing.assert_array_equal(det[idx[e]], want)
+        # component ids partition exactly by reachability
+        comp = np.asarray(tbl.comp)[e]
+        np.testing.assert_array_equal(
+            comp[:, None] == comp[None, :],
+            want < topology.UNREACHABLE)
+    # epochs sharing the same (τ, up) link state share one table row
+    assert det.shape[0] == len({(ls.link_tau[e].tobytes(),
+                                 ls.link_up[e].tobytes())
+                                for e in np.where(has_outage)[0]})
+
+
+def test_live_path_costs_matches_oracle_random_outages():
+    """Property: the vectorized repeated-min-plus builder equals the dense
+    Floyd–Warshall oracle over random symmetric outage patterns and random
+    symmetric τ, torus and non-torus."""
+    for mesh in (topology.MeshTopology.square(9),
+                 topology.MeshTopology.grid(3, 4, torus=True)):
+        nbr = mesh.neighbor_table
+        W = mesh.num_workers
+        rng = np.random.default_rng(17)
+        for _ in range(6):
+            tau = np.ones((W, 4), np.int32)
+            up = np.ones((W, 4), bool)
+            for w in range(W):
+                for d in range(4):
+                    v = nbr[w, d]
+                    if v >= 0 and v > w:
+                        t = int(rng.integers(1, 6))
+                        u = bool(rng.random() > 0.3)
+                        o = linkstate.OPPOSITE[d]
+                        tau[w, d] = tau[v, o] = t
+                        up[w, d] = up[v, o] = u
+            np.testing.assert_array_equal(
+                linkstate.live_path_costs(mesh, tau, up),
+                topology.detour_matrix(mesh, tau, up))
+
+
+def test_flight_ticks_prices_detours_and_reduces_to_dimension_order():
+    """During a seam outage a cross-seam flight on a 3x3 torus is repriced
+    from the 1-hop wrap to the 2-hop route-around; in all-up epochs the
+    detour machinery is bypassed entirely (no tables are even built for an
+    outage-free schedule)."""
+    import jax.numpy as jnp
+    mesh = topology.MeshTopology.grid(3, 3, torus=True)
+    W = mesh.num_workers
+    rows = mesh.coords[:, 0]
+    starts = np.asarray([0, 50], np.int32)
+    tau = np.full((2, W, 4), 2, np.int32)
+    up = np.ones((2, W, 4), bool)
+    up[1, rows == 0, linkstate.NORTH] = False
+    up[1, rows == 2, linkstate.SOUTH] = False
+    ls = linkstate.LinkStateSchedule(
+        starts, tau, up, np.ones((2, W), np.int32)).validate(mesh)
+    tbl = linkstate.device_tables(ls, mesh)
+    src = jnp.zeros(W, jnp.int32)          # worker 0 = (0, 0)
+    dst = jnp.full(W, 6, jnp.int32)        # worker 6 = (2, 0)
+    t0 = np.asarray(linkstate.flight_ticks(tbl, 0, src, dst, 3, 3, True))
+    t1 = np.asarray(linkstate.flight_ticks(tbl, 1, src, dst, 3, 3, True))
+    assert (t0 == 2).all()   # 1-hop wrap at τ=2
+    assert (t1 == 4).all()   # routed around the dark seam: 2 hops
+    assert np.asarray(linkstate.same_component(
+        tbl, 1, src, dst)).all()  # rerouted, not partitioned
+    # outage-free schedule: no detour tables at all
+    assert linkstate.device_tables(
+        linkstate.LinkStateSchedule.static(mesh, 2), mesh).detour is None
+
+
 def test_schedule_rejects_bad_arrays():
     mesh = topology.MeshTopology.grid(3, 3)
     good = linkstate.LinkStateSchedule.static(mesh, 4)

@@ -394,6 +394,215 @@ def test_simulate_batch_matches_serial():
 
 
 # --------------------------------------------------------------------------- #
+# Route-around detours + eclipse wake-ups: leap ≡ tick conformance matrix
+# --------------------------------------------------------------------------- #
+CONF_TORUS = topology.MeshTopology.grid(3, 3, torus=True)
+CONF_WAKE_WL = tasks.FibWorkload(n=16, cutoff=12, max_leaf_cost=96)
+
+
+def _conf_seam_outage(tau):
+    """Seam outage with detours: the row-wrap links of the 3x3 torus go dark
+    in alternating epochs, and inter-row τ ≠ intra-row τ, so cross-seam
+    flights reprice from a 1-hop wrap to a 2-hop route-around detour."""
+    mesh = CONF_TORUS
+    W = mesh.num_workers
+    starts = np.asarray([0, 25, 70, 115], np.int32)
+    E = len(starts)
+    tau_tab = np.full((E, W, 4), int(tau), np.int32)
+    tau_tab[:, :, linkstate.NORTH] = tau_tab[:, :, linkstate.SOUTH] = int(tau) + 1
+    up = np.ones((E, W, 4), bool)
+    rows = mesh.coords[:, 0]
+    for e in (1, 3):  # seam dark while thieves are mid-flight across it
+        up[e, rows == 0, linkstate.NORTH] = False
+        up[e, rows == mesh.rows - 1, linkstate.SOUTH] = False
+    ls = linkstate.LinkStateSchedule(
+        starts, tau_tab, up, np.ones((E, W), np.int32)).validate(mesh)
+    return mesh, EQ_FIB, ls, None, None
+
+
+def _conf_eclipse_cycle(tau):
+    """Eclipse enter→exit: worker 4 (center) dies at t=3 with pre-shed
+    warning, its links dark while asleep, and it WAKES at t=60 with links
+    restored — early enough in the run that it is stolen from post-wake
+    (asserted: its pre-death window is provably too short to acquire work,
+    so any grant out of its deque happened after the wake)."""
+    mesh = EQ_MESH
+    W = mesh.num_workers
+    starts = np.asarray([0, 3, 60, 110], np.int32)
+    E = len(starts)
+    tau_tab = np.full((E, W, 4), int(tau), np.int32)
+    for e in range(E):
+        tau_tab[e, :, linkstate.NORTH] = tau_tab[e, :, linkstate.SOUTH] = \
+            int(tau) + (e % 2)
+    up = np.ones((E, W, 4), bool)
+    nbr = mesh.neighbor_table
+    for d in range(4):  # dark from entry (epoch 1) to wake (epoch 2)
+        if nbr[4, d] >= 0:
+            up[1, 4, d] = False
+            up[1, nbr[4, d], linkstate.OPPOSITE[d]] = False
+    ls = linkstate.LinkStateSchedule(
+        starts, tau_tab, up, np.ones((E, W), np.int32)).validate(mesh)
+    ft = -np.ones(W, np.int32)
+    wt = -np.ones(W, np.int32)
+    ft[4], wt[4] = 3, 60
+    return mesh, EQ_FIB, ls, ft, wt
+
+
+def _conf_midfamine_wake(tau):
+    """Mid-famine wake-up: few long leaves keep thieves churning on empty
+    deques; worker 5 sleeps through the opening spread and wakes into the
+    famine stretch, forcing the famine window to end at the wake tick."""
+    mesh = EQ_MESH
+    W = mesh.num_workers
+    starts = np.asarray([0, 5, 80, 140], np.int32)
+    E = len(starts)
+    tau_tab = np.full((E, W, 4), int(tau), np.int32)
+    for e in range(E):
+        tau_tab[e, :, linkstate.NORTH] = tau_tab[e, :, linkstate.SOUTH] = \
+            int(tau) + (e % 2)
+    up = np.ones((E, W, 4), bool)
+    nbr = mesh.neighbor_table
+    for d in range(4):
+        if nbr[5, d] >= 0:
+            up[1, 5, d] = False
+            up[1, nbr[5, d], linkstate.OPPOSITE[d]] = False
+    ls = linkstate.LinkStateSchedule(
+        starts, tau_tab, up, np.ones((E, W), np.int32)).validate(mesh)
+    ft = -np.ones(W, np.int32)
+    wt = -np.ones(W, np.int32)
+    ft[5], wt[5] = 5, 80
+    return mesh, CONF_WAKE_WL, ls, ft, wt
+
+
+CONF_SCENARIOS = {
+    "seam_detour": _conf_seam_outage,
+    "eclipse_cycle": _conf_eclipse_cycle,
+    "midfamine_wake": _conf_midfamine_wake,
+}
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("strategy", [stealing.Strategy.NEIGHBOR,
+                                      stealing.Strategy.GLOBAL,
+                                      stealing.Strategy.ADAPTIVE])
+@pytest.mark.parametrize("scenario", list(CONF_SCENARIOS))
+@pytest.mark.parametrize("tau", [1, 5])
+def test_leap_equals_tick_conformance_matrix(strategy, scenario, tau):
+    """Acceptance: the event-leaping stepper stays bit-identical to the
+    one-tick oracle under the new route-around + wake-up semantics, for
+    every strategy × {seam outage with detours, eclipse enter+exit,
+    mid-famine wake-up} × τ ∈ {1, 5} — the same way PR 1–3 pinned their
+    semantics. Per-worker busy / overflow / victim-side stolen counts are
+    asserted elementwise, not just the scalar stats."""
+    mesh, wl, ls, ft, wt = CONF_SCENARIOS[scenario](tau)
+    preshed = ft is not None
+    results = {}
+    for mode in ("tick", "leap"):
+        cfg = simulator.SimConfig(strategy=strategy, capacity=128,
+                                  max_ticks=200_000, step_mode=mode,
+                                  preshed=preshed,
+                                  warn_ticks=2 if preshed else 0)
+        results[mode] = simulator.simulate(wl, mesh, cfg, fail_time=ft,
+                                           linkstate=ls, wake_time=wt)
+    a, b = results["tick"], results["leap"]
+    for f in EQ_FIELDS:
+        assert getattr(a, f) == getattr(b, f), (
+            f"{f}: tick={getattr(a, f)} leap={getattr(b, f)}")
+    assert (a.per_worker_busy == b.per_worker_busy).all()
+    assert (a.per_worker_overflow == b.per_worker_overflow).all()
+    assert (a.per_worker_stolen == b.per_worker_stolen).all()
+    assert b.events <= b.ticks + 1
+    if scenario == "eclipse_cycle":
+        # pre-shed keeps the cycle exact, and the woken worker rejoined the
+        # victim set: tasks were granted out of ITS deque, which it can
+        # only have filled post-wake (it died at t=3, before any loot
+        # could reach it).
+        assert a.result == wl.expected_result()
+        assert a.per_worker_stolen[4] > 0
+        assert a.per_worker_busy[4] > 3
+    if scenario == "midfamine_wake":
+        # the famine fast path still collapses the churn around the wake
+        assert b.events < b.ticks, (b.events, b.ticks)
+
+
+def test_wake_up_worker_is_stolen_from_post_wake():
+    """Elastic grow on a 1x3 line, where the claim 'the woken worker is
+    stolen from post-wake' is airtight by topology: endpoint worker 2's
+    ONLY victim is the middle worker 1, which is dead from t=2 until its
+    wake and provably never held a task before dying — so busy[2] > 0 and
+    stolen_from[1] > 0 can only arise from post-wake steals. A no-wake
+    control run shows both pinned at 0."""
+    mesh = topology.MeshTopology.grid(1, 3)
+    wl = tasks.FibWorkload(n=18, cutoff=9, max_leaf_cost=12)
+    W = 3
+    ft = -np.ones(W, np.int32)
+    wt = -np.ones(W, np.int32)
+    ft[1], wt[1] = 2, 40
+    results = {}
+    for mode in ("tick", "leap"):
+        cfg = simulator.SimConfig(strategy=stealing.Strategy.NEIGHBOR,
+                                  hop_ticks=2, capacity=128,
+                                  max_ticks=200_000, preshed=True,
+                                  warn_ticks=1, step_mode=mode)
+        results[mode] = simulator.simulate(wl, mesh, cfg, fail_time=ft,
+                                           wake_time=wt)
+    a, b = results["tick"], results["leap"]
+    for f in EQ_FIELDS:
+        assert getattr(a, f) == getattr(b, f), f
+    assert (a.per_worker_stolen == b.per_worker_stolen).all()
+    assert a.result == wl.expected_result()
+    assert a.per_worker_stolen[1] > 0   # the woken worker was robbed...
+    assert a.per_worker_busy[2] > 0     # ...by the worker it unblocked
+    cfg = simulator.SimConfig(strategy=stealing.Strategy.NEIGHBOR,
+                              hop_ticks=2, capacity=128, max_ticks=200_000,
+                              preshed=True, warn_ticks=1)
+    dead = simulator.simulate(wl, mesh, cfg, fail_time=ft)
+    assert dead.per_worker_stolen[1] == 0
+    assert dead.per_worker_busy[2] == 0
+    assert a.ticks < dead.ticks  # the rejoin visibly helps the makespan
+
+
+def test_partitioned_workers_are_unreachable_not_cheap():
+    """Route-around acceptance: severing the single link of a 1x4 line
+    partitions workers {2, 3} away from the root's component. Under the old
+    semantics GLOBAL flights would be priced straight through the dead link
+    and the far side would receive work; now those flights never depart —
+    the far side stays at exactly zero busy ticks while the run completes
+    exactly on the near side, in both step modes."""
+    mesh = topology.MeshTopology.grid(1, 4)
+    W = 4
+    lt = np.full((1, W, 4), 2, np.int32)
+    lu = np.ones((1, W, 4), bool)
+    lu[0, 1, linkstate.EAST] = False
+    lu[0, 2, linkstate.WEST] = False
+    ls = linkstate.LinkStateSchedule(
+        np.zeros(1, np.int32), lt, lu,
+        np.ones((1, W), np.int32)).validate(mesh)
+    for mode in ("tick", "leap"):
+        cfg = simulator.SimConfig(strategy=stealing.Strategy.GLOBAL,
+                                  capacity=128, max_ticks=200_000,
+                                  step_mode=mode)
+        r = simulator.simulate(EQ_FIB, mesh, cfg, linkstate=ls)
+        assert r.result == EQ_FIB.expected_result()
+        assert r.per_worker_busy[2] == 0 and r.per_worker_busy[3] == 0
+        assert r.per_worker_stolen[2] == 0 and r.per_worker_stolen[3] == 0
+        assert r.per_worker_busy[0] > 0 and r.per_worker_busy[1] > 0
+
+
+def test_wake_time_requires_prior_death():
+    cfg = simulator.SimConfig()
+    wt = np.full(EQ_MESH.num_workers, 5, np.int32)
+    with pytest.raises(ValueError):
+        simulator.simulate(EQ_FIB, EQ_MESH, cfg, wake_time=wt)
+    ft = -np.ones(EQ_MESH.num_workers, np.int32)
+    ft[3] = 10
+    wt = -np.ones(EQ_MESH.num_workers, np.int32)
+    wt[3] = 10  # not strictly after the death
+    with pytest.raises(ValueError):
+        simulator.simulate(EQ_FIB, EQ_MESH, cfg, fail_time=ft, wake_time=wt)
+
+
+# --------------------------------------------------------------------------- #
 # Famine-churn regime: probe-cycle batching ≡ one-tick oracle
 # --------------------------------------------------------------------------- #
 # Few long leaves on many workers: most of the run is idle thieves
@@ -465,6 +674,32 @@ def test_famine_batch_size_never_changes_results(tau):
                 assert getattr(r, f) == getattr(ref, f), (fb, f)
             assert (r.per_worker_busy == ref.per_worker_busy).all()
     assert ref.result == FAMINE_WL.expected_result()
+
+
+def test_per_worker_overflow_sums_and_famine_batch_invariant_linkstate():
+    """Property (extends the PR 3 sweep to the linkstate path): under a
+    dynamic link-state schedule with an outage epoch and a capacity small
+    enough to actually drop tasks, `per_worker_overflow` always sums to the
+    scalar overflow, and famine_batch ∈ {0, 1, 7, 64} reproduces the
+    identical result — per-worker breakdown included."""
+    ls, ft = _dynamic_schedule()
+    ref = None
+    for fb in (0, 1, 7, 64):
+        cfg = simulator.SimConfig(strategy=stealing.Strategy.NEIGHBOR,
+                                  capacity=2, max_ticks=200_000,
+                                  preshed=True, warn_ticks=8,
+                                  famine_batch=fb)
+        r = simulator.simulate(EQ_FIB, EQ_MESH, cfg, fail_time=ft,
+                               linkstate=ls)
+        assert r.overflow == int(r.per_worker_overflow.sum())
+        assert r.overflow > 0  # capacity 2 really does drop tasks
+        if ref is None:
+            ref = r
+        else:
+            for f in EQ_FIELDS:
+                assert getattr(r, f) == getattr(ref, f), (fb, f)
+            assert (r.per_worker_overflow == ref.per_worker_overflow).all()
+            assert (r.per_worker_stolen == ref.per_worker_stolen).all()
 
 
 def test_famine_window_ends_at_midflight_refill():

@@ -74,11 +74,18 @@ def test_torus_wraps():
     topo.MeshTopology.square(10),              # ragged last row
     topo.MeshTopology.grid(4, 5, torus=True),  # exact torus
     topo.MeshTopology.grid(2, 3, torus=True),
+    topo.MeshTopology.grid(3, 7),              # non-square, wide
+    topo.MeshTopology.grid(7, 3),              # non-square, tall
+    topo.MeshTopology.grid(5, 3, torus=True),  # non-square torus wrap
+    topo.MeshTopology.grid(2, 6, torus=True),
+    topo.MeshTopology.grid(1, 6),
     topo.MeshTopology.square(1),
 ], ids=lambda m: f"{m.rows}x{m.cols}{'t' if m.torus else ''}w{m.num_workers}")
 def test_hop_dist_matches_hop_matrix(mesh):
-    """The coords-based O(W) pricing used by the simulator/stealing hot
-    paths equals a gather from the dense hop_matrix (test-only oracle)."""
+    """Regression: the coords-based O(W) pricing used by the simulator /
+    stealing hot paths equals a gather from the dense `hop_matrix`, which
+    survives ONLY as this oracle — pinned on non-square and torus-wrap
+    meshes so neither side can drift."""
     import jax.numpy as jnp
     rng = np.random.default_rng(0)
     W = mesh.num_workers
@@ -88,6 +95,60 @@ def test_hop_dist_matches_hop_matrix(mesh):
         got = np.asarray(topo.hop_dist(mesh, coords, jnp.asarray(victim)))
         want = mesh.hop_matrix[np.arange(W), victim]
         np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("mesh", [
+    topo.MeshTopology.grid(3, 7),
+    topo.MeshTopology.grid(5, 3, torus=True),
+    topo.MeshTopology.square(12),
+], ids=lambda m: f"{m.rows}x{m.cols}{'t' if m.torus else ''}w{m.num_workers}")
+def test_hop_matrix_oracle_stays_consistent(mesh):
+    """The dense oracle itself must agree with the scalar `hops()` metric
+    and keep its invariants (symmetry, zero diagonal, neighbors at 1)."""
+    h = mesh.hop_matrix
+    W = mesh.num_workers
+    assert (h == h.T).all()
+    assert (np.diag(h) == 0).all()
+    for a in range(W):
+        for b in range(W):
+            assert h[a, b] == mesh.hops(a, b), (a, b)
+    for w in range(W):
+        for nb in mesh.neighbors_of(w):
+            assert h[w, nb] == 1
+
+
+# --------------------------------------------------------------------------- #
+# Route-around detour oracle (dense Floyd–Warshall over live links)
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("mesh", [
+    topo.MeshTopology.square(9),
+    topo.MeshTopology.grid(3, 4, torus=True),
+], ids=lambda m: f"{m.rows}x{m.cols}{'t' if m.torus else ''}w{m.num_workers}")
+def test_detour_matrix_all_up_uniform_is_dimension_order(mesh):
+    """With every link up and uniform τ, live-link shortest paths ARE the
+    dimension-order costs: detour pricing reduces exactly to hop_matrix·τ."""
+    W = mesh.num_workers
+    tau = np.full((W, 4), 3, np.int32)
+    up = np.ones((W, 4), bool)
+    np.testing.assert_array_equal(topo.detour_matrix(mesh, tau, up),
+                                  mesh.hop_matrix * 3)
+
+
+def test_detour_matrix_partition_is_unreachable():
+    """Severing the middle link of a line leaves cross-cut pairs pinned at
+    UNREACHABLE (and same-side pairs priced normally)."""
+    mesh = topo.MeshTopology.grid(1, 4)
+    tau = np.full((4, 4), 2, np.int32)
+    up = np.ones((4, 4), bool)
+    up[1, 3] = False  # EAST link of worker 1
+    up[2, 2] = False  # WEST link of worker 2 (symmetric)
+    d = topo.detour_matrix(mesh, tau, up)
+    assert d[0, 1] == 2 and d[2, 3] == 2
+    for a in (0, 1):
+        for b in (2, 3):
+            assert d[a, b] == topo.UNREACHABLE
+            assert d[b, a] == topo.UNREACHABLE
+    assert (np.diag(d) == 0).all()
 
 
 def test_ppermute_pairs_valid():
