@@ -7,6 +7,17 @@ paper's regime). Both steppers are timed on the SAME simulated horizon (a
 per-W tick cap keeps the one-tick baseline affordable; leap-mode full runs
 finish far beyond it), so `speedup` is a like-for-like wall-clock ratio.
 
+Starlink-scale runs (W = 4096): use ``--leap-only`` (the one-tick oracle
+has nothing to say there) and size ``--capacity`` from a pilot run's
+reported ``hiwater`` (end-of-tick occupancy; certify the choice by the
+re-run's overflow == 0) — on `fib_granular` occupancy peaks around 10
+tasks/worker, so 64-slot rings replace the 2048 default (bytes_per_worker
+~33 KB → ~2.4 KB) and the whole 4096-worker constellation simulates ~146
+ticks/s of wall on this CPU container:
+
+  PYTHONPATH=src python -m benchmarks.bench_sim_throughput \\
+      --workers 4096 --strategies neighbor --leap-only --capacity 64
+
 What to expect (CPU, W=100):
 
   * GLOBAL — utilization ~0.99, thieves spend their idle time in multi-hop
@@ -34,9 +45,11 @@ from __future__ import annotations
 
 import argparse
 import json
+import resource
 import time
 
 from repro.configs import paper_mesh
+from repro.core import deque as dq
 from repro.core import simulator, stealing, topology
 from .common import emit
 
@@ -47,14 +60,31 @@ STRATS = {
 }
 
 # Shared simulated horizon per W (the one-tick oracle pays ~0.5-5 ms/tick
-# on CPU; the cap keeps its measurement to ~a minute per config).
-TICK_CAPS = {100: 60_000, 640: 24_000, 2500: 6_000}
+# on CPU; the cap keeps its measurement to ~a minute per config). W=4096 is
+# the Starlink-scale sweep the staged deque backend unlocks — run it with
+# --leap-only (the one-tick oracle is pointless there) and a hiwater-sized
+# --capacity (the 2048 default is 16x what the workload ever occupies).
+TICK_CAPS = {100: 60_000, 640: 24_000, 2500: 6_000, 4096: 6_000}
 
 
-def _run(wl, mesh, strategy, step_mode, max_ticks, hop_ticks, capacity):
+def _bytes_per_worker(capacity: int,
+                      supervision_slots: int = 64) -> int:
+    """Resident SimState per worker: the (C, T) int32 ring buffer, the
+    always-allocated supervision ledger ((S, T) records + (S,) thief ids),
+    the (T,) in-flight loot record, and the ~20 (W,) int32/bool lanes."""
+    T = dq.TASK_WIDTH
+    return (capacity * T * 4            # deque ring
+            + supervision_slots * (T + 1) * 4  # sup_buf + sup_thief
+            + T * 4                     # loot
+            + 20 * 4)                   # scalar lanes
+
+
+def _run(wl, mesh, strategy, step_mode, max_ticks, hop_ticks, capacity,
+         deque_backend=None):
     cfg = simulator.SimConfig(strategy=strategy, hop_ticks=hop_ticks,
                               capacity=capacity, max_ticks=max_ticks,
-                              step_mode=step_mode)
+                              step_mode=step_mode,
+                              deque_backend=deque_backend)
     t0 = time.perf_counter()
     r = simulator.simulate(wl, mesh, cfg)
     compile_wall = time.perf_counter() - t0
@@ -65,41 +95,68 @@ def _run(wl, mesh, strategy, step_mode, max_ticks, hop_ticks, capacity):
 
 
 def run(workers=(100, 640, 2500), strategies=("global", "neighbor", "adaptive"),
-        taus=(5,), quick: bool = False, json_path: str | None = None):
+        taus=(5,), quick: bool = False, json_path: str | None = None,
+        leap_only: bool = False, capacity: int = 2048,
+        max_ticks: int | None = None, deque_backend: str | None = None):
     wl = paper_mesh.CONFIG.fib_granular
-    capacity = 2048
     results = {}
     for W in workers:
         mesh = topology.MeshTopology.square(W)
-        cap = TICK_CAPS.get(W, 20_000)
-        if quick:
-            cap = min(cap, 4_000)
+        # an explicit horizon always wins; --quick only shortens defaults
+        if max_ticks is not None:
+            cap = max_ticks
+        else:
+            cap = TICK_CAPS.get(W, 20_000)
+            if quick:
+                cap = min(cap, 4_000)
         for sname in strategies:
             for tau in taus:
                 per = {}
-                for mode in ("leap", "tick"):
-                    r, wall, cwall = _run(wl, mesh, STRATS[sname], mode, cap,
-                                          tau, capacity)
+                modes = ("leap",) if leap_only else ("leap", "tick")
+                for mode in modes:
+                    r, wall, cwall = _run(wl, mesh, STRATS[sname], mode,
+                                          cap, tau, capacity, deque_backend)
                     per[mode] = dict(ticks=r.ticks, events=r.events, wall=wall,
                                      compile_wall=cwall,
                                      tps=r.ticks / max(wall, 1e-9),
-                                     util=r.utilization)
-                leap, tick = per["leap"], per["tick"]
-                assert leap["ticks"] == tick["ticks"], "steppers diverged"
-                speedup = tick["wall"] / max(leap["wall"], 1e-9)
+                                     eps=r.events / max(wall, 1e-9),
+                                     util=r.utilization,
+                                     overflow=r.overflow,
+                                     hiwater=int(r.per_worker_hiwater.max()))
+                leap = per["leap"]
                 leap_factor = leap["ticks"] / max(leap["events"], 1)
-                results[(W, sname, tau)] = dict(per=per, speedup=speedup,
-                                                leap_factor=leap_factor)
+                bpw = _bytes_per_worker(capacity)
+                extra = dict(W=W, leap_factor=leap_factor,
+                             bytes_per_worker=bpw,
+                             deque_backend=deque_backend or "auto")
+                derived = (f"ticks={leap['ticks']};events={leap['events']};"
+                           f"leap_factor={leap_factor:.1f}x;"
+                           f"leap_tps={leap['tps']:.0f};"
+                           f"events_per_s={leap['eps']:.0f};"
+                           f"leap_wall={leap['wall']:.2f}s;"
+                           f"bytes_per_worker={bpw};"
+                           f"hiwater={leap['hiwater']};"
+                           f"util={leap['util']:.2f}")
+                if not leap_only:
+                    tick = per["tick"]
+                    assert leap["ticks"] == tick["ticks"], "steppers diverged"
+                    extra["speedup"] = tick["wall"] / max(leap["wall"], 1e-9)
+                    derived += (f";tick_tps={tick['tps']:.0f};"
+                                f"tick_wall={tick['wall']:.2f}s;"
+                                f"speedup={extra['speedup']:.2f}x")
+                results[(W, sname, tau)] = dict(per=per, **extra)
                 emit(f"bench_sim/{sname}/W={W}/tau={tau}", leap["wall"] * 1e6,
-                     f"ticks={leap['ticks']};events={leap['events']};"
-                     f"leap_factor={leap_factor:.1f}x;"
-                     f"leap_tps={leap['tps']:.0f};tick_tps={tick['tps']:.0f};"
-                     f"leap_wall={leap['wall']:.2f}s;tick_wall={tick['wall']:.2f}s;"
-                     f"speedup={speedup:.2f}x;util={leap['util']:.2f}")
+                     derived)
+    # peak resident set of the whole process (compile + run), portable
+    # (getrusage, no GNU time dependency) — the W=4096 CI smoke logs it
+    peak_rss_mb = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024
+    print(f"peak_rss_mb={peak_rss_mb:.0f}")
     if json_path:
         with open(json_path, "w") as f:
-            json.dump({f"strategy={s}/W={W}/tau={tau}": r
-                       for (W, s, tau), r in results.items()}, f, indent=2)
+            json.dump(dict(
+                peak_rss_mb=round(peak_rss_mb, 1),
+                runs={f"strategy={s}/W={W}/tau={tau}": r
+                      for (W, s, tau), r in results.items()}), f, indent=2)
     return results
 
 
@@ -112,6 +169,18 @@ def main():
                     choices=sorted(STRATS))
     ap.add_argument("--taus", type=int, nargs="+", default=None,
                     help="hop_ticks values to sweep (default: 1 5)")
+    ap.add_argument("--leap-only", action="store_true",
+                    help="skip the one-tick oracle (W >= 4k: it would take "
+                         "minutes per config for a number nobody reads)")
+    ap.add_argument("--capacity", type=int, default=2048,
+                    help="per-worker deque capacity; size W >= 4k runs from "
+                         "a pilot run's reported hiwater")
+    ap.add_argument("--max-ticks", type=int, default=None,
+                    help="override the per-W simulated horizon (CI smokes)")
+    ap.add_argument("--deque-backend", default=None,
+                    choices=("staged", "loop"),
+                    help="deque mutation backend (default: platform auto — "
+                         "loop on CPU, staged on TPU)")
     ap.add_argument("--json", default=None,
                     help="write consolidated results JSON here "
                          "(e.g. BENCH_sim.json)")
@@ -124,7 +193,9 @@ def main():
     taus = tuple(args.taus) if args.taus else (1, 5)
     print("name,us_per_call,derived")
     run(workers=workers, strategies=strategies, taus=taus,
-        quick=args.quick, json_path=args.json)
+        quick=args.quick, json_path=args.json, leap_only=args.leap_only,
+        capacity=args.capacity, max_ticks=args.max_ticks,
+        deque_backend=args.deque_backend)
 
 
 if __name__ == "__main__":

@@ -17,6 +17,30 @@ All operations are functional and masked: `mask[w] == False` leaves worker
 `w`'s deque untouched. Overflow never corrupts the buffer — pushes that would
 overflow are dropped and reported via a flag the caller must check (the
 schedulers surface it in their stats, tests assert it stays zero).
+
+Staged mutations (`DequeOps`)
+-----------------------------
+The direct operations above commit one `(W, C, T)` buffer update each; a
+simulator tick chains several of them (expansion pop + children push, grant
+export, loot import, recovery re-pushes, transplants), paying one full
+buffer materialization per op. The staged layer collapses that: `stage()`
+opens a `DequeOps` delta against a frozen base buffer, the `stage_*`
+mirrors of every operation record their effects into a bounded SoA push
+log `(slot, record)` per worker while tracking *virtual* bottom/size
+cursors, and a single `apply()` commits the whole tick's mutations in ONE
+fused scatter (optionally the Pallas `deque_apply` kernel). Reads issued
+mid-tick (`stage_pop`'s top record, `stage_export`'s bottom window,
+`stage_window`) are overlay-aware: they see staged pushes from earlier in
+the same tick, so op-for-op the staged sequence is bit-identical to the
+direct sequence — asserted by the simulator's backend conformance matrix,
+which keeps the direct path alive as the `deque_backend="loop"` oracle.
+
+The push log holds `lanes` entries per worker; `lanes` must upper-bound
+the pushes any single worker can *accept* between `stage()` and `apply()`
+(accepted pushes are bounded by `capacity - size + frees`, so callers size
+it from their per-tick op mix — the simulator's `_lane_budget`). Staged
+pushes beyond the lane budget would be silently dropped; the conformance
+tests pin the budget.
 """
 
 from __future__ import annotations
@@ -74,19 +98,21 @@ def push_top_many(state: DequeState, tasks: jax.Array, counts: jax.Array):
     K is a static small constant (max children per expansion). Returns
     (state, overflowed) where overflowed[w] counts dropped tasks.
     """
-    k_max = tasks.shape[1]
+    W, k_max = tasks.shape[:2]
     cap = capacity(state)
     room = cap - state.size
     pushed = jnp.minimum(counts, room)
     overflow = counts - pushed
 
-    w = _warange(state)
-    buf = state.buf
-    base = state.bot + state.size
-    for k in range(k_max):  # static unroll, K is small
-        live = k < pushed
-        idx = (base + k) % cap
-        buf = buf.at[w, idx].set(jnp.where(live[:, None], tasks[:, k], buf[w, idx]))
+    # one batched scatter for all K slots (the K-step unroll this replaces
+    # paid one full (W, C, T) materialization per slot). Dropped lanes are
+    # routed out of bounds — XLA scatter skips them — instead of issuing
+    # no-op read-modify-writes whose duplicate-index order is undefined.
+    ranks = jnp.arange(k_max)[None, :]                       # (1, K)
+    idx = (state.bot[:, None] + state.size[:, None] + ranks) % cap
+    live = ranks < pushed[:, None]
+    dst_w = jnp.where(live, _warange(state)[:, None], W)
+    buf = state.buf.at[dst_w, idx].set(tasks, mode="drop")
     return DequeState(buf, state.bot, state.size + pushed), overflow
 
 
@@ -173,3 +199,231 @@ def to_list(state: DequeState, worker: int) -> list[tuple[int, ...]]:
     buf, bot, size = jax.device_get((state.buf[worker], state.bot[worker], state.size[worker]))
     cap = buf.shape[0]
     return [tuple(int(x) for x in buf[(bot + i) % cap]) for i in range(int(size))]
+
+
+# --------------------------------------------------------------------------- #
+# Staged mutations: record one tick's deque ops, commit in ONE fused scatter
+# --------------------------------------------------------------------------- #
+class DequeOps(NamedTuple):
+    """Delta record of staged mutations against a frozen base buffer.
+
+    `buf0` is the ring-buffer array at `stage()` time and is never written;
+    `bot`/`size` are the *virtual* cursors (they already reflect every
+    staged pop/export/clear/push). The push log is SoA: lane ``l < n[w]``
+    of worker w holds a record staged for absolute ring slot `slot[w, l]`,
+    in staging order — `apply` commits lanes in order (last write wins),
+    which is exactly the direct path's sequential-scatter semantics.
+    """
+
+    buf0: jax.Array  # (W, C, T) frozen tick-start ring buffers
+    bot: jax.Array   # (W,) virtual bottom cursor
+    size: jax.Array  # (W,) virtual live-task count
+    slot: jax.Array  # (W, L) absolute ring slot of each staged push
+    rec: jax.Array   # (W, L, T) staged records
+    n: jax.Array     # (W,) staged push count (lanes >= n are dead)
+
+
+def stage(state: DequeState, lanes: int) -> DequeOps:
+    """Open a staged-mutation record with an `lanes`-entry push log."""
+    W, _, T = state.buf.shape
+    return DequeOps(
+        buf0=state.buf, bot=state.bot, size=state.size,
+        slot=jnp.zeros((W, lanes), jnp.int32),
+        rec=jnp.zeros((W, lanes, T), jnp.int32),
+        n=jnp.zeros((W,), jnp.int32))
+
+
+def stage_read(ops: DequeOps, idx: jax.Array) -> jax.Array:
+    """Overlay-aware gather: record at absolute slot `idx[w, k]` as the
+    direct path would read it mid-tick — the latest staged push to that
+    slot if one exists, else the base buffer.
+
+    Lane-match formulation, O(W·K·L): right for the narrow reads
+    (`stage_pop`'s K=1). Wide window reads go through `stage_window`,
+    whose O(W·C) last-lane map stays bounded when the lane budget itself
+    is ~capacity (recovery configs)."""
+    L = ops.slot.shape[1]
+    squeeze = idx.ndim == 1
+    if squeeze:
+        idx = idx[:, None]
+    live = jnp.arange(L)[None, None, :] < ops.n[:, None, None]
+    match = (ops.slot[:, None, :] == idx[:, :, None]) & live  # (W, K, L)
+    hit = match.any(axis=-1)
+    # index of the LAST matching lane (later stages overwrite earlier ones)
+    last = L - 1 - jnp.argmax(match[:, :, ::-1], axis=-1)
+    staged = jnp.take_along_axis(ops.rec, last[:, :, None], axis=1)
+    base = jnp.take_along_axis(ops.buf0, idx[:, :, None], axis=1)
+    out = jnp.where(hit[:, :, None], staged, base)
+    return out[:, 0] if squeeze else out
+
+
+def _last_lane_map(ops: DequeOps) -> jax.Array:
+    """(W, C) map: highest live lane staged for each ring slot, -1 where no
+    push is staged. Scatter-max is duplicate-safe (max is commutative), so
+    this costs O(W·(C + L)) with no (W, K, L) or (W, L, L) intermediate —
+    the lane budget L is ~capacity on recovery configs, where the naive
+    pairwise forms would materialize O(W·C²) booleans."""
+    W, L = ops.slot.shape
+    lanes = jnp.arange(L)[None, :]
+    live = lanes < ops.n[:, None]
+    dst_w = jnp.where(live, jnp.arange(W)[:, None], W)
+    neg = jnp.full((W, ops.buf0.shape[1]), -1, jnp.int32)
+    return neg.at[dst_w, ops.slot].max(
+        jnp.broadcast_to(lanes, (W, L)), mode="drop")
+
+
+def _log_append(ops: DequeOps, dst_w, lane, slot, recs) -> DequeOps:
+    """Write staged entries; rows routed to worker index W are dropped."""
+    new_slot = ops.slot.at[dst_w, lane].set(slot, mode="drop")
+    new_rec = ops.rec.at[dst_w, lane].set(recs, mode="drop")
+    return ops._replace(slot=new_slot, rec=new_rec)
+
+
+def stage_push(ops: DequeOps, task: jax.Array, mask: jax.Array):
+    """Staged `push_top`. Returns (ops, ok).
+
+    A push past the lane budget is REFUSED (ok=False), not silently
+    half-applied: without the `n < lanes` guard the log write would drop
+    out of bounds while size still advanced, resurrecting stale buf0
+    records as phantom live tasks. An undersized budget therefore shows
+    up as an overflow-count divergence from the loop oracle — loud in the
+    conformance matrix — instead of silent corruption."""
+    W, cap, _ = ops.buf0.shape
+    L = ops.slot.shape[1]
+    ok = mask & (ops.size < cap) & (ops.n < L)
+    slot = (ops.bot + ops.size) % cap
+    dst_w = jnp.where(ok, jnp.arange(W), W)
+    ops = _log_append(ops, dst_w, ops.n, slot, task)
+    return ops._replace(size=ops.size + ok.astype(jnp.int32),
+                        n=ops.n + ok.astype(jnp.int32)), ok
+
+
+def stage_push_many(ops: DequeOps, tasks: jax.Array, counts: jax.Array):
+    """Staged `push_top_many` (K-slot staging block). Returns (ops, overflow).
+    Pushes past the lane budget are dropped and counted as overflow (see
+    `stage_push` on why the budget guard must gate size, not just the
+    log write)."""
+    W, k_max = tasks.shape[:2]
+    cap = ops.buf0.shape[1]
+    L = ops.slot.shape[1]
+    pushed = jnp.minimum(jnp.minimum(counts, cap - ops.size), L - ops.n)
+    overflow = counts - pushed
+    ranks = jnp.arange(k_max)[None, :]
+    slot = (ops.bot[:, None] + ops.size[:, None] + ranks) % cap
+    lane = ops.n[:, None] + ranks
+    dst_w = jnp.where(ranks < pushed[:, None], jnp.arange(W)[:, None], W)
+    ops = _log_append(ops, dst_w, lane, slot, tasks)
+    return ops._replace(size=ops.size + pushed, n=ops.n + pushed), overflow
+
+
+def stage_pop(ops: DequeOps, mask: jax.Array):
+    """Staged `pop_top`. Returns (ops, task, ok); the popped record may have
+    been staged earlier in the same tick (overlay-aware read)."""
+    cap = ops.buf0.shape[1]
+    ok = mask & (ops.size > 0)
+    new_size = ops.size - ok.astype(jnp.int32)
+    task = stage_read(ops, (ops.bot + new_size) % cap)
+    return ops._replace(size=new_size), task, ok
+
+
+def stage_window(ops: DequeOps, window: int) -> jax.Array:
+    """Staged `peek_bottom_window`: (W, window, T) overlay-aware view.
+
+    Reads through the O(W·C) last-lane map rather than the per-read lane
+    match, so full-capacity windows (the transplant path) stay linear in
+    the buffer size even when the lane budget is ~capacity."""
+    cap = ops.buf0.shape[1]
+    idx = (ops.bot[:, None] + jnp.arange(window)[None, :]) % cap
+    lane = jnp.take_along_axis(_last_lane_map(ops), idx, axis=1)  # (W, window)
+    staged = jnp.take_along_axis(ops.rec, jnp.maximum(lane, 0)[:, :, None],
+                                 axis=1)
+    base = jnp.take_along_axis(ops.buf0, idx[:, :, None], axis=1)
+    return jnp.where((lane >= 0)[:, :, None], staged, base)
+
+
+def stage_export(ops: DequeOps, grants: jax.Array, width: int):
+    """Staged `export_bottom`: gather the granted bottom records (zeros
+    beyond each worker's grant) and advance the virtual bottom. Returns
+    (ops, stolen (W, width, T))."""
+    cap = ops.buf0.shape[1]
+    g = jnp.minimum(jnp.minimum(grants, width), ops.size)
+    ranks = jnp.arange(width)[None, :]
+    rows = stage_window(ops, width)
+    stolen = jnp.where((ranks < g[:, None])[:, :, None], rows, 0)
+    return ops._replace(bot=(ops.bot + g) % cap, size=ops.size - g), stolen
+
+
+def stage_clear(ops: DequeOps, mask: jax.Array) -> DequeOps:
+    """Empty `mask` workers' deques (bottom cursor unchanged) — the staged
+    mirror of zeroing `size` after a transplant/death."""
+    return ops._replace(size=jnp.where(mask, 0, ops.size))
+
+
+def stage_select(ops: DequeOps, pred, other: DequeState) -> DequeOps:
+    """Where `pred` (broadcastable against (W,)), discard everything staged
+    and reset to `other` — the staged mirror of a rollback's wholesale
+    `jnp.where(pred, snapshot, current)` deque replacement."""
+    return DequeOps(
+        buf0=jnp.where(pred, other.buf, ops.buf0),
+        bot=jnp.where(pred, other.bot, ops.bot),
+        size=jnp.where(pred, other.size, ops.size),
+        slot=ops.slot, rec=ops.rec,
+        n=jnp.where(pred, 0, ops.n))
+
+
+def stage_place(ops: DequeOps, dst_w: jax.Array, rel_pos: jax.Array,
+                recs: jax.Array, write: jax.Array) -> DequeOps:
+    """Append records at positions `rel_pos` above each destination's
+    current virtual top (multi-source scatter — the transplant path).
+
+    Caller contract: per destination worker, the written `rel_pos` values
+    are collectively gap-free 0..k-1 and `write` already excludes records
+    beyond the destination's remaining room. The per-destination size/lane
+    advance is derived from the records actually logged (writes past the
+    lane budget are dropped AND excluded from it, so an undersized budget
+    can never mint phantom tasks — it surfaces as lost records in the
+    conformance matrix instead).
+    """
+    W, cap, _ = ops.buf0.shape
+    L = ops.slot.shape[1]
+    lane = ops.n[dst_w] + rel_pos
+    write = write & (lane < L)
+    slot = (ops.bot[dst_w] + ops.size[dst_w] + rel_pos) % cap
+    w_idx = jnp.where(write, dst_w, W)
+    ops = _log_append(ops, w_idx, lane, slot, recs)
+    added = jnp.zeros((W,), jnp.int32).at[w_idx.reshape(-1)].add(
+        write.reshape(-1).astype(jnp.int32), mode="drop")
+    return ops._replace(size=ops.size + added, n=ops.n + added)
+
+
+def apply(ops: DequeOps, use_kernel: bool = False) -> DequeState:
+    """Commit all staged mutations in ONE fused scatter.
+
+    Lanes are committed in staging order (last write to a slot wins —
+    identical to the direct path's sequential scatters; a slot is
+    re-staged when a push lands where a popped/exported record sat).
+    With `use_kernel=True` the scatter runs through the Pallas
+    `deque_apply` kernel (compiled on TPU, interpret mode elsewhere);
+    the jnp fallback is bit-identical — both are oracle-checked against
+    `kernels.ref.deque_apply_ref`.
+    """
+    if use_kernel:
+        from ..kernels import ops as kernel_ops  # lazy: pallas import is heavy
+
+        buf = kernel_ops.deque_apply(ops.buf0, ops.slot, ops.rec, ops.n)
+        return DequeState(buf, ops.bot, ops.size)
+    W, _, _ = ops.buf0.shape
+    L = ops.slot.shape[1]
+    lanes = jnp.arange(L)
+    live = lanes[None, :] < ops.n[:, None]
+    # keep only the LAST live lane per (worker, slot) — the scatter below
+    # must never see duplicate indices (duplicate-index scatter order is
+    # undefined in XLA) and the last stage is the one the sequential
+    # backend would have left in the buffer. The (W, C) last-lane map
+    # avoids the O(W·L²) pairwise-supersession tensor (L is ~capacity on
+    # recovery configs).
+    last = jnp.take_along_axis(_last_lane_map(ops), ops.slot, axis=1)
+    keep = live & (last == lanes[None, :])
+    dst_w = jnp.where(keep, jnp.arange(W)[:, None], W)
+    buf = ops.buf0.at[dst_w, ops.slot].set(ops.rec, mode="drop")
+    return DequeState(buf, ops.bot, ops.size)

@@ -87,6 +87,35 @@ Steal-conflict resolution uses sort-based segment ranking
 (``use_steal_kernel``; auto-enabled on TPU) — so the per-tick path never
 materializes a (W, W) intermediate and W ≥ 2500 meshes fit comfortably.
 
+Staged deque-ops backend (``deque_backend="staged"``; auto on TPU)
+------------------------------------------------------------------
+The event tick chains several deque mutations — expansion pop + children
+push, grant export, loot import, and (under recovery) transplants /
+re-pushes — each committing its own ``(W, C, T)`` buffer update. The
+staged backend threads every one of those mutations through a
+`deque.DequeOps` delta instead: virtual bottom/size cursors plus a
+bounded per-worker push log, committed in ONE fused pass at the end of
+the tick (`deque.apply`; the Pallas ``deque_apply`` kernel replays the
+log with the rings resident in VMEM). Mid-tick reads (the popped record,
+the exported bottom window, transplant source rings) are overlay-aware,
+so the staged op sequence is bit-identical to the sequential one, which
+survives as ``deque_backend="loop"`` — the conformance oracle, asserted
+across the strategy × recovery × modifier matrix in both step modes. On
+the common no-recovery path the push log is ``EXPAND_K + 1`` lanes.
+
+Measured reality on CPU (this container, W=4096, NEIGHBOR, τ=5): XLA CPU
+already performs the per-op scatters *in place* inside the while_loop —
+the "~8 sequential (W, C, T) scatters" never materialize as full-buffer
+traffic — so the staged log's second write makes "staged" ~1.7x slower
+per event than "loop" there, and the auto default keeps CPU on "loop".
+What actually unlocked the W=4096 sweep was sizing `capacity` from
+`SimResult.per_worker_hiwater` (occupancy peaks at ~10 tasks/worker on
+the paper workload — 2048-slot rings were 200x oversized) plus the
+PR 1–3 leap machinery; the staged backend is the TPU-facing data layout,
+where per-element scatters don't vectorize and the one VMEM-resident
+kernel commit per tick is the right shape (TPU validation pending, like
+`steal_compact`'s).
+
 Beyond the paper's model, the simulator also covers the SEC failure modes the
 paper lists in §2.1/§5, each as an orthogonal, testable mechanism:
 
@@ -196,9 +225,22 @@ class SimConfig:
     # batched replay (0 disables; bit-identical either way — the batch size
     # only trades loop iterations against per-iteration work)
     famine_batch: int = 64
-    # victim-side grant export via the Pallas steal_compact kernel;
-    # None = auto (compiled kernel on TPU, plain jnp gather elsewhere)
+    # victim-side grant export (loop backend: Pallas steal_compact) and
+    # staged-ops commit (staged backend: Pallas deque_apply) kernels;
+    # None = auto (compiled kernels on TPU, plain jnp elsewhere)
     use_steal_kernel: bool | None = None
+    # deque mutation backend: "staged" records every per-tick deque
+    # mutation in a `deque.DequeOps` delta — virtual bot/size cursors plus
+    # a bounded push log — and commits them in ONE fused pass per tick
+    # (the Pallas deque_apply kernel); "loop" is the seed
+    # one-scatter-per-op path, kept as the staged backend's bit-exactness
+    # oracle (see the backend conformance matrix in tests). None = auto:
+    # staged on TPU (per-op scatters don't fuse there; the VMEM-resident
+    # kernel commit does), loop on CPU — measured on this container, XLA
+    # CPU already performs the per-op scatters in place inside the
+    # while_loop, so the staged log's second write costs ~2x (module
+    # docstring, "measured reality" note)
+    deque_backend: str | None = None
     # fault tolerance
     recovery: Recovery = Recovery.NONE
     ckpt_interval: int = 0             # TC: ticks between snapshots (0 = off)
@@ -239,6 +281,10 @@ class SimState(NamedTuple):
     stolen_from: jax.Array  # (W,) int32 tasks granted out of each worker's
                             # deque bottom (victim-side view of successful
                             # steals, counted at grant time)
+    hiwater: jax.Array      # (W,) int32 running max end-of-tick deque
+                            # occupancy (victim-side) — sizes capacity for
+                            # W >= 4k sweeps; mid-tick transients that were
+                            # rejected show up in `overflow` instead
 
 
 class SimResult(NamedTuple):
@@ -265,6 +311,13 @@ class SimResult(NamedTuple):
     # steal count) — lets tests pin *who* was stolen from, e.g. that a
     # woken worker rejoined the victim set after an eclipse exit
     per_worker_stolen: np.ndarray | None = None
+    # (W,) running max END-OF-TICK deque occupancy (hiwater <= capacity
+    # always; survives TC rollbacks — the buffers physically held the
+    # peak). A capacity floor for sizing W >= 4k runs from a pilot, but
+    # note it does not see mid-tick transients (children are pushed
+    # before grants export within a tick), so the actual certificate for
+    # a chosen capacity is the re-run reporting overflow == 0
+    per_worker_hiwater: np.ndarray | None = None
 
 
 def _mesh_tables(mesh: topo.MeshTopology, strategy: stealing.Strategy):
@@ -347,27 +400,21 @@ def _nearest_alive_neighbor(tbl, alive, w_dead):
     return heir
 
 
-def _transplant(deque_, acc, src_mask, heir, overflow):
-    """Move every `src_mask` worker's deque + acc onto its heir, emptying src.
+def _transplant_plan(size, src_mask, heir, cap: int):
+    """Append plan shared by both deque backends: where every transplanted
+    record lands on its heir, which records the heir's capacity rejects,
+    and the per-worker size delta. Their agreement is load-bearing for the
+    staged ≡ loop backend conformance, so there is exactly one spelling.
 
-    Vectorized one-source-at-a-time via scan over workers would be O(W·C);
-    instead we exploit that heirs are (nearly) idle during recovery and
-    append src rings onto heir rings with a bounded copy of `cap` slots.
+    Heir h receives all tasks of its dead sources, sequentially. Multiple
+    sources per heir are handled by offsetting each source with the summed
+    counts of its heir's earlier (lower worker id) sources — a sorted
+    segment prefix, no (W, W) pairwise matrix.
     """
-    W, cap, T = deque_.buf.shape
+    W = size.shape[0]
     ranks = jnp.arange(cap)[None, :]
-    src_tasks = dq.peek_bottom_window(deque_, cap)          # (W, cap, T)
-    src_counts = jnp.where(src_mask, deque_.size, 0)
-
-    # Scatter: heir h receives all tasks of its dead sources, sequentially.
-    # Multiple sources per heir are handled by offsetting each source with
-    # the summed counts of its heir's earlier (lower worker id) sources —
-    # a sorted segment prefix, no (W, W) pairwise matrix.
+    src_counts = jnp.where(src_mask, size, 0)
     offset = stealing.segment_prefix(heir, src_mask, src_counts)
-
-    buf, bot, size = deque_.buf, deque_.bot, deque_.size
-    heir_base = size[heir] + offset                        # insertion cursor per source
-    dst_slot = (bot[heir][:, None] + heir_base[:, None] + ranks) % cap
     live = src_mask[:, None] & (ranks < src_counts[:, None])
     # drop writes that would overflow the heir; charge drops to the heir
     # whose capacity rejected them (per-worker breakdown in SimResult)
@@ -375,24 +422,171 @@ def _transplant(deque_, acc, src_mask, heir, overflow):
     fits = ranks < room[:, None]
     write = live & fits
     dropped = jnp.sum(live & ~fits, axis=1).astype(jnp.int32)
-    overflow = overflow.at[heir].add(jnp.where(src_mask, dropped, 0))
-    # Scatter with duplicate (row, slot) pairs is order-undefined in XLA:
-    # inactive rows must NOT read-modify-write the same destinations (a
-    # no-op write may clobber a real one). Route every inactive element to
-    # a padding row instead.
-    dst_w = jnp.where(write, jnp.broadcast_to(heir[:, None], (W, cap)), W)
-    buf_p = jnp.concatenate([buf, jnp.zeros((1, cap, buf.shape[2]),
-                                            buf.dtype)], axis=0)
-    buf = buf_p.at[dst_w, dst_slot].set(
-        jnp.where(write[:, :, None], src_tasks, buf_p[dst_w, dst_slot]))[:W]
     written = jnp.sum(write, axis=1).astype(jnp.int32)
     added = jnp.zeros((W,), jnp.int32).at[heir].add(
         jnp.where(src_mask, written, 0))
-    size = size + added
-    size = jnp.where(src_mask, 0, size)
+    return ranks, offset, write, dropped, added
+
+
+def _transplant_acc(acc, src_mask, heir):
     new_acc = acc.at[heir].add(jnp.where(src_mask, acc, 0))
-    new_acc = jnp.where(src_mask, 0, new_acc) % tasks.RESULT_MOD
-    return dq.DequeState(buf, bot, size), new_acc, overflow
+    return jnp.where(src_mask, 0, new_acc) % tasks.RESULT_MOD
+
+
+def _transplant(deque_, acc, src_mask, heir, overflow):
+    """Move every `src_mask` worker's deque + acc onto its heir, emptying src.
+
+    Vectorized one-source-at-a-time via scan over workers would be O(W·C);
+    instead we exploit that heirs are (nearly) idle during recovery and
+    append src rings onto heir rings with a bounded copy of `cap` slots.
+    This is the loop-backend applier; `_stage_transplant` commits the same
+    plan into a staged `DequeOps` delta instead.
+    """
+    W, cap, T = deque_.buf.shape
+    src_tasks = dq.peek_bottom_window(deque_, cap)          # (W, cap, T)
+    ranks, offset, write, dropped, added = _transplant_plan(
+        deque_.size, src_mask, heir, cap)
+    overflow = overflow.at[heir].add(jnp.where(src_mask, dropped, 0))
+    buf, bot, size = deque_.buf, deque_.bot, deque_.size
+    heir_base = size[heir] + offset                        # insertion cursor per source
+    dst_slot = (bot[heir][:, None] + heir_base[:, None] + ranks) % cap
+    # Scatter with duplicate (row, slot) pairs is order-undefined in XLA:
+    # inactive rows must NOT read-modify-write the same destinations (a
+    # no-op write may clobber a real one). Route every inactive element
+    # out of bounds instead — XLA scatter drops them.
+    dst_w = jnp.where(write, jnp.broadcast_to(heir[:, None], (W, cap)), W)
+    buf = buf.at[dst_w, dst_slot].set(src_tasks, mode="drop")
+    size = jnp.where(src_mask, 0, size + added)
+    return (dq.DequeState(buf, bot, size),
+            _transplant_acc(acc, src_mask, heir), overflow)
+
+
+def _stage_transplant(ops: dq.DequeOps, acc, src_mask, heir, overflow):
+    """Staged-backend transplant: same plan as `_transplant`, committed into
+    the push log. The source window read is overlay-aware, so records
+    staged earlier in the tick (the dying worker's banked in-flight loot)
+    transplant exactly as the loop backend's buffer read would see them."""
+    W, cap, T = ops.buf0.shape
+    src_tasks = dq.stage_window(ops, cap)                   # (W, cap, T)
+    # `added` is recomputed inside stage_place from the records actually
+    # logged (identical under a correct lane budget; see stage_place)
+    ranks, offset, write, dropped, _ = _transplant_plan(
+        ops.size, src_mask, heir, cap)
+    overflow = overflow.at[heir].add(jnp.where(src_mask, dropped, 0))
+    ops = dq.stage_place(ops, jnp.broadcast_to(heir[:, None], (W, cap)),
+                         offset[:, None] + ranks, src_tasks, write)
+    ops = dq.stage_clear(ops, src_mask)
+    return ops, _transplant_acc(acc, src_mask, heir), overflow
+
+
+def _lane_budget(cfg: "SimConfig") -> int:
+    """Static push-log width of the staged backend: an upper bound on the
+    staged pushes any single worker can *accept* in one tick. Accepted
+    pushes are bounded by free room plus slots freed mid-tick (one
+    expansion pop + at most GRANT_WIDTH exported grants), so transplant
+    appends can never exceed capacity + GRANT_WIDTH + 1 on top of the
+    always-on expansion-children + loot-import lanes. Sized per config:
+    the common (no-recovery) path stays at EXPAND_K + 1 lanes."""
+    L = tasks.EXPAND_K + 1          # expansion children + thief-side loot import
+    if cfg.recovery == Recovery.SUPERVISION:
+        L += min(cfg.supervision_slots, cfg.capacity)
+    if cfg.preshed or cfg.recovery == Recovery.TC:
+        # pre-shed / rollback transplants plus the dying worker's loot bank
+        L += cfg.capacity + stealing.GRANT_WIDTH + 2
+    return L
+
+
+class _LoopDeques:
+    """Per-op deque backend (`deque_backend="loop"`): every mutation commits
+    its own `(W, C, T)` buffer update — the seed semantics, kept as the
+    staged backend's bit-exactness oracle."""
+
+    def __init__(self, state: dq.DequeState, use_kernel: bool):
+        self.st = state
+        self.use_kernel = use_kernel
+
+    @property
+    def size(self):
+        return self.st.size
+
+    def push(self, task, mask):
+        self.st, ok = dq.push_top(self.st, task, mask)
+        return ok
+
+    def push_many(self, tasks_, counts):
+        self.st, over = dq.push_top_many(self.st, tasks_, counts)
+        return over
+
+    def pop(self, mask):
+        self.st, task, ok = dq.pop_top(self.st, mask)
+        return task, ok
+
+    def export(self, grants, width):
+        stolen, self.st = dq.export_bottom(self.st, grants, width,
+                                           use_kernel=self.use_kernel)
+        return stolen
+
+    def clear(self, mask):
+        self.st = dq.DequeState(self.st.buf, self.st.bot,
+                                jnp.where(mask, 0, self.st.size))
+
+    def select(self, pred, other: dq.DequeState):
+        self.st = jax.tree.map(lambda o, c: jnp.where(pred, o, c),
+                               other, self.st)
+
+    def transplant(self, acc, src_mask, heir, overflow):
+        self.st, acc, overflow = _transplant(self.st, acc, src_mask, heir,
+                                             overflow)
+        return acc, overflow
+
+    def finish(self) -> dq.DequeState:
+        return self.st
+
+
+class _StagedDeques:
+    """Staged deque backend (`deque_backend="staged"`): mutations accumulate
+    in a `deque.DequeOps` delta — virtual cursors plus a bounded push log —
+    and `finish()` commits the whole tick in ONE fused scatter (the Pallas
+    `deque_apply` kernel when kernels are enabled). Mid-tick reads are
+    overlay-aware, so the op sequence is bit-identical to `_LoopDeques`."""
+
+    def __init__(self, state: dq.DequeState, lanes: int, use_kernel: bool):
+        self.ops = dq.stage(state, lanes)
+        self.use_kernel = use_kernel
+
+    @property
+    def size(self):
+        return self.ops.size
+
+    def push(self, task, mask):
+        self.ops, ok = dq.stage_push(self.ops, task, mask)
+        return ok
+
+    def push_many(self, tasks_, counts):
+        self.ops, over = dq.stage_push_many(self.ops, tasks_, counts)
+        return over
+
+    def pop(self, mask):
+        self.ops, task, ok = dq.stage_pop(self.ops, mask)
+        return task, ok
+
+    def export(self, grants, width):
+        self.ops, stolen = dq.stage_export(self.ops, grants, width)
+        return stolen
+
+    def clear(self, mask):
+        self.ops = dq.stage_clear(self.ops, mask)
+
+    def select(self, pred, other: dq.DequeState):
+        self.ops = dq.stage_select(self.ops, pred, other)
+
+    def transplant(self, acc, src_mask, heir, overflow):
+        self.ops, acc, overflow = _stage_transplant(self.ops, acc, src_mask,
+                                                    heir, overflow)
+        return acc, overflow
+
+    def finish(self) -> dq.DequeState:
+        return dq.apply(self.ops, use_kernel=self.use_kernel)
 
 
 def _epoch_view(ls, t):
@@ -609,19 +803,33 @@ def _sim_core(workload, mesh: topo.MeshTopology, cfg: SimConfig, key0,
         f"shared grant/export staging width GRANT_WIDTH={stealing.GRANT_WIDTH}")
 
     deques = dq.make(W, cfg.capacity)
+    T = deques.buf.shape[2]  # task record width — single source of truth
     root = jnp.asarray(workload.root_task())
-    deques, _ = dq.push_top(deques, jnp.broadcast_to(root[None], (W, 4)),
+    assert root.shape[-1] == T, (
+        f"root task width {root.shape[-1]} != deque record width {T}")
+    deques, _ = dq.push_top(deques, jnp.broadcast_to(root[None], (W, T)),
                             jnp.arange(W) == 0)
+    staged = (cfg.deque_backend == "staged"
+              or (cfg.deque_backend is None
+                  and jax.default_backend() == "tpu"))
+    lanes_full = _lane_budget(cfg)
+
+    def _session(deq, lanes):
+        if staged:
+            return _StagedDeques(deq, lanes, use_kernel)
+        return _LoopDeques(deq, use_kernel)
+
     z = jnp.zeros((W,), jnp.int32)
     state0 = SimState(
         deque=deques, acc=z, work=z, fails=z,
-        phase=z, timer=z, victim=z - 1, loot=jnp.zeros((W, 4), jnp.int32),
+        phase=z, timer=z, victim=z - 1, loot=jnp.zeros((W, T), jnp.int32),
         got=jnp.zeros((W,), bool), alive=jnp.ones((W,), bool),
-        sup_buf=jnp.zeros((W, S, 4), jnp.int32),
+        sup_buf=jnp.zeros((W, S, T), jnp.int32),
         sup_thief=jnp.full((W, S), -1, jnp.int32), sup_n=z,
         attempts=z, successes=z, nodes=z, busy=z, steal_wait=z,
         hops_lo=jnp.int32(0), hops_hi=jnp.int32(0),
-        ckpt_count=jnp.int32(0), overflow=z, stolen_from=z)
+        ckpt_count=jnp.int32(0), overflow=z, stolen_from=z,
+        hiwater=deques.size)
 
     def tick_fn(carry):
         state, snap, t = carry
@@ -638,23 +846,29 @@ def _sim_core(workload, mesh: topo.MeshTopology, cfg: SimConfig, key0,
         dying_now = alive & (fail_time == t)
         warned = alive & cfg.preshed & (fail_time >= 0) & (fail_time == t + cfg.warn_ticks)
 
+        # every deque mutation below goes through the session: the staged
+        # backend accumulates them into one end-of-tick apply, the loop
+        # backend commits op by op (the oracle). `state.deque` is stale
+        # until ses.finish() lands in new_state.
+        ses = _session(state.deque, lanes_full)
+
         # malleable pre-shed: migrate whole deque+acc one warn window early,
         # then a final flush at the (predictable) death tick catches any loot
         # delivered in between. Retired workers stop stealing (see below).
-        deque_, acc, overflow = state.deque, state.acc, state.overflow
+        acc, overflow = state.acc, state.overflow
         if cfg.preshed:
             heir = _nearest_alive_neighbor(tbl, alive & ~warned & ~dying_now,
                                            jnp.arange(W))
-            deque_, acc, overflow = _transplant(deque_, acc, warned, heir, overflow)
+            acc, overflow = ses.transplant(acc, warned, heir, overflow)
             # death-tick flush: bank in-flight loot into own deque, then move all
             flush = dying_now
             want_bank = flush & state.got
-            deque_, banked = dq.push_top(deque_, state.loot, want_bank)
+            banked = ses.push(state.loot, want_bank)
             overflow = overflow + (want_bank & ~banked).astype(jnp.int32)
-            deque_, acc, overflow = _transplant(deque_, acc, flush, heir, overflow)
+            acc, overflow = ses.transplant(acc, flush, heir, overflow)
             state = state._replace(got=jnp.where(flush, False, state.got))
 
-        state = state._replace(deque=deque_, acc=acc, overflow=overflow)
+        state = state._replace(acc=acc, overflow=overflow)
 
         # apply deaths
         alive = alive & ~dying_now
@@ -666,23 +880,34 @@ def _sim_core(workload, mesh: topo.MeshTopology, cfg: SimConfig, key0,
             # worker's snapshot deque + accumulator + in-flight loot onto
             # its heir. Exactly-once for arbitrary failure schedules.
             rb = dying_now.any() & (cfg.ckpt_interval > 0)
-            merged = jax.tree.map(lambda s, c: jnp.where(rb, s, c), snap, state)
+            # the session owns the live deque: on rollback it discards
+            # everything staged (incl. this tick's pre-shed moves) and
+            # resets to the snapshot, mirroring the wholesale merge below
+            ses.select(rb, snap.deque)
+            merged = jax.tree.map(lambda s, c: jnp.where(rb, s, c), snap,
+                                  state._replace(deque=snap.deque))
             heir = _nearest_alive_neighbor(tbl, alive, jnp.arange(W))
             # the snapshot may predate EARLIER deaths, resurrecting state on
             # long-dead workers — transplant everything on ANY dead worker
             dead = (~alive) & rb
             # bank the dead worker's in-flight loot into its own deque first
             want_bank = dead & merged.got
-            deq, banked = dq.push_top(merged.deque, merged.loot, want_bank)
+            banked = ses.push(merged.loot, want_bank)
             ovf = merged.overflow + (want_bank & ~banked).astype(jnp.int32)
-            deq, acc, ovf = _transplant(deq, merged.acc, dead, heir, ovf)
+            acc, ovf = ses.transplant(merged.acc, dead, heir, ovf)
             return merged._replace(
-                deque=deq, acc=acc, overflow=ovf, alive=alive,
+                acc=acc, overflow=ovf, alive=alive,
                 # only the DEAD workers' in-flight state is voided
                 phase=jnp.where(dead, 0, merged.phase),
                 timer=jnp.where(dead, 0, merged.timer),
                 work=jnp.where(dead, 0, merged.work),
-                got=jnp.where(dead, False, merged.got))
+                got=jnp.where(dead, False, merged.got),
+                # the occupancy high-water mark is an observability
+                # counter, not simulation state: the discarded ticks
+                # physically filled the buffers, so a rollback must not
+                # erase the peak (capacity sized to the reported hiwater
+                # has to fit the PRE-rollback segment on a re-run too)
+                hiwater=state.hiwater)
 
         def apply_supervision(state):
             # victims re-push records whose thief just died. Clearing uses
@@ -690,33 +915,17 @@ def _sim_core(workload, mesh: topo.MeshTopology, cfg: SimConfig, key0,
             # pushes additionally require the victim to be alive.
             repush = (state.sup_thief >= 0) & dying_now[jnp.clip(state.sup_thief, 0, W - 1)]
             pushing = repush & (state.alive & ~dying_now)[:, None]
-            deq = state.deque
             # compact each victim's repushed records to the front, slot order
             slot_order = jnp.argsort(~pushing, axis=1, stable=True)
             recs = jnp.take_along_axis(state.sup_buf, slot_order[:, :, None],
                                        axis=1)                    # (W, S, T)
             n_re = jnp.sum(pushing, axis=1).astype(jnp.int32)
-            cap = dq.capacity(deq)
-            n_push = jnp.minimum(n_re, cap - deq.size)
-            ovf = state.overflow + (n_re - n_push)
-            # one batched scatter; dead lanes route to a padding row (see
-            # _transplant on XLA duplicate-scatter ordering)
-            j = jnp.arange(S)[None, :]
-            dst_slot = (deq.bot[:, None] + deq.size[:, None] + j) % cap
-            put = j < n_push[:, None]
-            dst_w = jnp.where(put, jnp.arange(W)[:, None], W)
-            buf_p = jnp.concatenate(
-                [deq.buf, jnp.zeros((1, cap, deq.buf.shape[2]),
-                                    deq.buf.dtype)], axis=0)
-            buf = buf_p.at[dst_w, dst_slot].set(
-                jnp.where(put[:, :, None], recs, buf_p[dst_w, dst_slot]))[:W]
-            deq = dq.DequeState(buf, deq.bot, deq.size + n_push)
+            ovf = state.overflow + ses.push_many(recs, n_re)
             sup_thief = jnp.where(repush, -1, state.sup_thief)
             # dead worker's own state is lost
-            deq = dq.DequeState(deq.buf, deq.bot,
-                                jnp.where(dying_now, 0, deq.size))
+            ses.clear(dying_now)
             acc = jnp.where(dying_now, 0, state.acc)
-            return state._replace(deque=deq, acc=acc, sup_thief=sup_thief,
+            return state._replace(acc=acc, sup_thief=sup_thief,
                                   alive=alive, overflow=ovf,
                                   work=jnp.where(dying_now, 0, state.work),
                                   phase=jnp.where(dying_now, 0, state.phase),
@@ -727,9 +936,8 @@ def _sim_core(workload, mesh: topo.MeshTopology, cfg: SimConfig, key0,
         elif cfg.recovery == Recovery.SUPERVISION:
             state = apply_supervision(state)
         else:
-            deq = dq.DequeState(state.deque.buf, state.deque.bot,
-                                jnp.where(dying_now, 0, state.deque.size))
-            state = state._replace(deque=deq, alive=alive,
+            ses.clear(dying_now)
+            state = state._replace(alive=alive,
                                    acc=jnp.where(dying_now, 0, state.acc),
                                    work=jnp.where(dying_now, 0, state.work),
                                    phase=jnp.where(dying_now, 0, state.phase),
@@ -758,7 +966,14 @@ def _sim_core(workload, mesh: topo.MeshTopology, cfg: SimConfig, key0,
         # ------------- periodic checkpoint (TC) ---------------------------- #
         take_ckpt = (cfg.ckpt_interval > 0) & (t % max(cfg.ckpt_interval, 1) == 0)
         if cfg.recovery == Recovery.TC:
-            # only TC consumes snapshots — other modes don't carry one
+            # only TC consumes snapshots — other modes don't carry one. The
+            # snapshot cut must see the post-recovery deque, so the staged
+            # ops commit here and a fresh session (back at the common-path
+            # lane budget) carries the rest of the tick — TC ticks pay two
+            # fused applies instead of one.
+            deq_mid = ses.finish()
+            ses = _session(deq_mid, tasks.EXPAND_K + 1)
+            state = state._replace(deque=deq_mid)
             snap = jax.tree.map(lambda s, c: jnp.where(take_ckpt, c, s), snap, state)
         state = state._replace(
             ckpt_count=state.ckpt_count + take_ckpt.astype(jnp.int32))
@@ -769,10 +984,10 @@ def _sim_core(workload, mesh: topo.MeshTopology, cfg: SimConfig, key0,
         burning = running & (state.work > 0)
         work = state.work - burning.astype(jnp.int32)
 
-        can_expand = running & (~burning) & (state.deque.size > 0)
-        deque_, task, popped = dq.pop_top(state.deque, can_expand)
+        can_expand = running & (~burning) & (ses.size > 0)
+        task, popped = ses.pop(can_expand)
         ex = tasks.expand(task, popped, tables)
-        deque_, over = dq.push_top_many(deque_, ex["children"], ex["n_children"])
+        over = ses.push_many(ex["children"], ex["n_children"])
         acc = (state.acc + ex["value"]) % tasks.RESULT_MOD
         work = work + jnp.maximum(ex["cost"] - 1, 0) * popped.astype(jnp.int32)
         nodes = state.nodes + ex["nodes"]
@@ -780,7 +995,7 @@ def _sim_core(workload, mesh: topo.MeshTopology, cfg: SimConfig, key0,
         overflow = state.overflow + over.astype(jnp.int32)
 
         # idle workers become thieves: request departs now, arrives in h·τ
-        idle = running & (~burning) & (~popped) & (deque_.size == 0)
+        idle = running & (~burning) & (~popped) & (ses.size == 0)
         # retired workers (warned of shutdown) must not pull work back in
         idle = idle & ~_retired_mask(cfg, fail_time, wake_time, t, W)
         victim_new = _select(cfg, tbl, key, idle, state.fails, W, link)
@@ -821,10 +1036,9 @@ def _sim_core(workload, mesh: topo.MeshTopology, cfg: SimConfig, key0,
             valid_victim = valid_victim & lstate.same_component(
                 ls, eidx, victim, jnp.arange(W))
         plan = stealing.resolve_grants(jnp.where(valid_victim, victim, -1),
-                                       deque_.size, cfg.max_grants_per_victim)
+                                       ses.size, cfg.max_grants_per_victim)
         v = jnp.clip(plan.victim, 0, W - 1)
-        stolen_blk, deque_ = dq.export_bottom(
-            deque_, plan.taken, stealing.GRANT_WIDTH, use_kernel=use_kernel)
+        stolen_blk = ses.export(plan.taken, stealing.GRANT_WIDTH)
         stolen = stolen_blk[v, jnp.clip(plan.rank, 0, stealing.GRANT_WIDTH - 1)]
         got = plan.got
         # victim-side steal ledger (who was stolen from, counted at grant)
@@ -837,7 +1051,7 @@ def _sim_core(workload, mesh: topo.MeshTopology, cfg: SimConfig, key0,
             vslot = jnp.clip(sup_n[v] + plan.rank, 0, S - 1)
             dst_v = jnp.where(got, v, W)
             sup_buf = jnp.concatenate(
-                [sup_buf, jnp.zeros((1, S, 4), jnp.int32)],
+                [sup_buf, jnp.zeros((1, S, T), jnp.int32)],
                 axis=0).at[dst_v, vslot].set(stolen)[:W]
             sup_thief = jnp.concatenate(
                 [sup_thief, jnp.full((1, S), -1, jnp.int32)],
@@ -876,7 +1090,7 @@ def _sim_core(workload, mesh: topo.MeshTopology, cfg: SimConfig, key0,
         # by a transplant/re-push while the steal was in flight) is a REAL
         # task loss — count it, don't swallow it
         want_import = delivered & got_flight
-        deque_, imported = dq.push_top(deque_, loot, want_import)
+        imported = ses.push(loot, want_import)
         overflow = overflow + (want_import & ~imported).astype(jnp.int32)
         successes = state.successes + (delivered & got_flight).astype(jnp.int32)
         fails = jnp.where(delivered & got_flight, 0,
@@ -884,12 +1098,16 @@ def _sim_core(workload, mesh: topo.MeshTopology, cfg: SimConfig, key0,
         phase = jnp.where(delivered, PHASE_RUN, phase)
         steal_wait = state.steal_wait + (in_req | in_resp).astype(jnp.int32)
 
+        # the ONE fused commit of every staged deque mutation this tick
+        # (loop backend: already-committed state, a no-op here)
+        deque_ = ses.finish()
         new_state = state._replace(
             deque=deque_, acc=acc, work=work, fails=fails, phase=phase,
             timer=timer, victim=victim, loot=loot, got=got_flight & ~delivered,
             alive=alive, attempts=attempts, successes=successes, nodes=nodes,
             busy=busy, steal_wait=steal_wait, hops_lo=hops_lo, hops_hi=hops_hi,
-            overflow=overflow, stolen_from=stolen_from)
+            overflow=overflow, stolen_from=stolen_from,
+            hiwater=jnp.maximum(state.hiwater, deque_.size))
         live = (jnp.sum(deque_.size) + jnp.sum(work)
                 + jnp.sum((got_flight & ~delivered).astype(jnp.int32))) > 0
         return new_state, snap, t + 1, live
@@ -1104,6 +1322,10 @@ def _sim_batch_jit(workload, mesh, cfg, keys, fail_time, wake_time, speed, ls):
 def _check_cfg(cfg: SimConfig):
     if cfg.step_mode not in ("leap", "tick"):
         raise ValueError(f"step_mode must be 'leap' or 'tick', got {cfg.step_mode!r}")
+    if cfg.deque_backend not in (None, "staged", "loop"):
+        raise ValueError(
+            "deque_backend must be 'staged', 'loop', or None (auto), "
+            f"got {cfg.deque_backend!r}")
     if cfg.max_ticks >= int(_NEVER):
         raise ValueError(f"max_ticks must stay below {int(_NEVER)}")
     if cfg.famine_batch < 0:
@@ -1133,7 +1355,8 @@ def _finalize(state, ticks, iters, mesh: topo.MeshTopology,
         per_worker_busy=np.asarray(state.busy),
         events=int(iters),
         per_worker_overflow=np.asarray(state.overflow),
-        per_worker_stolen=np.asarray(state.stolen_from))
+        per_worker_stolen=np.asarray(state.stolen_from),
+        per_worker_hiwater=np.asarray(state.hiwater))
 
 
 def _fail_speed_arrays(W, fail_time, speed, wake_time=None):

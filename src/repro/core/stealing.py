@@ -45,10 +45,12 @@ class Strategy(enum.Enum):
 
 # Staging width of the grant/export path: the maximum number of bottom tasks
 # a victim can hand out in one steal round. Single source of truth shared by
-# `resolve_grants` callers, `kernels.steal_compact` (its VMEM staging block
-# is (block_w, GRANT_WIDTH, T)) and `kernels.ref.steal_compact_ref`; config
-# budgets (`max_grants_per_victim`) must stay <= GRANT_WIDTH, asserted where
-# the kernel is invoked.
+# `resolve_grants` callers, both deque backends' export (`deque.export_bottom`
+# and the staged `deque.stage_export` the grant plan hands off to),
+# `kernels.steal_compact` (its VMEM staging block is (block_w, GRANT_WIDTH,
+# T)) and `kernels.ref.steal_compact_ref`; config budgets
+# (`max_grants_per_victim`) must stay <= GRANT_WIDTH, asserted where the
+# kernel is invoked.
 GRANT_WIDTH = 8
 
 

@@ -1,0 +1,65 @@
+"""Staged deque-ops apply kernel (TPU Pallas) — one tick's deque mutations
+committed in a single fused pass.
+
+The simulator's staged backend (`deque.DequeOps`) records every push of a
+tick as `(slot, record)` lanes per worker; pops/exports/clears only move
+the virtual cursors. Committing the log is a scatter of up to L records
+into each worker's `(C, T)` ring — done op-by-op this is the ~8 sequential
+full `(W, C, T)` scatters the loop backend pays per tick. The kernel
+performs the whole commit for a block of workers with the rings resident
+in VMEM: lanes are replayed in staging order (ascending l), so a later
+push to a re-used slot overwrites an earlier one exactly as the
+sequential scatters would (last write wins).
+
+Grid: (W / block_w,); each step owns `block_w` workers' full rings plus
+their push logs in VMEM. Oracle: `ref.deque_apply_ref` (and the jnp
+fallback in `deque.apply`, which dedups superseded lanes and issues one
+scatter — bit-identical by the same last-write-wins rule).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _apply_kernel(buf_ref, slot_ref, n_ref, rec_ref, out_ref, *, lanes: int):
+    buf = buf_ref[...]          # (block_w, C, T)
+    slots = slot_ref[...]       # (block_w, L)
+    n = n_ref[...]              # (block_w,)
+    cap = buf.shape[1]
+    cols = jax.lax.broadcasted_iota(jnp.int32, (buf.shape[0], cap), 1)
+    out = buf
+    for l in range(lanes):      # static unroll, ascending: last write wins
+        hit = (cols == slots[:, l][:, None]) & (l < n)[:, None]
+        out = jnp.where(hit[:, :, None], rec_ref[:, l][:, None, :], out)
+    out_ref[...] = out
+
+
+def deque_apply(buf, slot, rec, n, *, block_w: int = 64,
+                interpret: bool = False):
+    """buf: (W, C, T) int32; slot: (W, L); rec: (W, L, T); n: (W,) →
+    new_buf (W, C, T) with lanes l < n[w] committed in lane order."""
+    W, C, T = buf.shape
+    L = slot.shape[1]
+    # Largest divisor of W that fits the requested block (grid must tile W).
+    block_w = min(block_w, W)
+    while W % block_w:
+        block_w -= 1
+    kernel = functools.partial(_apply_kernel, lanes=L)
+    return pl.pallas_call(
+        kernel,
+        grid=(W // block_w,),
+        in_specs=[
+            pl.BlockSpec((block_w, C, T), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block_w, L), lambda i: (i, 0)),
+            pl.BlockSpec((block_w,), lambda i: (i,)),
+            pl.BlockSpec((block_w, L, T), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_w, C, T), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((W, C, T), jnp.int32),
+        interpret=interpret,
+    )(buf, slot, n, rec)

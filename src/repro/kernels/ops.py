@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from . import decode_attention as _dec
+from . import deque_apply as _da
 from . import flash_attention as _fa
 from . import rglru_scan as _rg
 from . import rwkv6_scan as _wkv
@@ -58,3 +59,9 @@ def rglru(x, r, i, lam, chunk: int = 128, block_w: int = 512):
 def steal_compact(buf, bot, size, grants, block_w: int = 64):
     return _sc.steal_compact(buf, bot, size, grants, block_w=block_w,
                              interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("block_w",))
+def deque_apply(buf, slot, rec, n, block_w: int = 64):
+    return _da.deque_apply(buf, slot, rec, n, block_w=block_w,
+                           interpret=_interpret())

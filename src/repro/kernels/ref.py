@@ -103,3 +103,22 @@ def steal_compact_ref(buf, bot, size, grants):
     live = ranks < g[:, None]
     stolen = jnp.where(live[:, :, None], rows, 0)
     return stolen, (bot + g) % C, size - g
+
+
+def deque_apply_ref(buf, slot, rec, n):
+    """Commit a staged push log into the ring buffers, lanes in order.
+
+    buf: (W, C, T) int32; slot: (W, L) absolute ring slots; rec: (W, L, T)
+    records; n: (W,) live-lane count. Lane l is committed iff l < n[w];
+    ascending lane order means a later push to a re-used slot wins —
+    matching both the Pallas kernel's replay loop and `deque.apply`'s
+    dedup-then-scatter fallback.
+    """
+    W, C, T = buf.shape
+    L = slot.shape[1]
+    cols = jnp.arange(C)[None, :]
+    out = buf
+    for l in range(L):
+        hit = (cols == slot[:, l][:, None]) & (l < n)[:, None]
+        out = jnp.where(hit[:, :, None], rec[:, l][:, None, :], out)
+    return out

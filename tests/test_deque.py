@@ -98,3 +98,94 @@ def test_ring_wraparound():
         state, ok = dq.push_top(state, jnp.asarray([[0, i, 0, 0]]), t)
         assert bool(ok[0])
     assert [x[1] for x in dq.to_list(state, 0)] == [2, 3, 4, 5]
+
+
+def _full_ring(cap, n, bot):
+    """One worker whose ring holds records (9, i, 0, 0) bottom→top with the
+    bottom parked at slot `bot` (so the live window wraps for n+bot > cap)."""
+    buf = np.zeros((1, cap, dq.TASK_WIDTH), np.int32)
+    for i in range(n):
+        buf[0, (bot + i) % cap] = (9, i, 0, 0)
+    return dq.DequeState(jnp.asarray(buf), jnp.asarray([bot], jnp.int32),
+                         jnp.asarray([n], jnp.int32))
+
+
+def test_ring_wraparound_export_plus_push_many_same_tick():
+    """Regression (ISSUE 5): `bot` near capacity with `export_bottom` and
+    `push_top_many` crossing the wrap in the same tick. Pinned against the
+    tuple-materializing `to_list` helper, and the staged path must produce
+    the identical deque, exported block included."""
+    cap = 8
+    state = _full_ring(cap, 5, bot=6)         # live slots 6,7,0,1,2
+    grants = jnp.asarray([3], jnp.int32)
+    pushes = jnp.asarray(
+        [[(7, i, 0, 0) for i in range(6)]], jnp.int32)  # 6 new records
+    counts = jnp.asarray([6], jnp.int32)
+
+    # direct path: export 3 from the wrapped bottom, then push 6 over the wrap
+    stolen_d, mid = dq.export_bottom(state, grants, 4)
+    direct, over_d = dq.push_top_many(mid, pushes, counts)
+
+    # staged path: same ops against a DequeOps delta, one fused apply
+    ops = dq.stage(state, lanes=8)
+    ops, stolen_s = dq.stage_export(ops, grants, 4)
+    ops, over_s = dq.stage_push_many(ops, pushes, counts)
+    staged_ = dq.apply(ops)
+
+    # bottom moved 6 → 1; pushes filled 1+5..(wrap)..up to capacity
+    expect = [(9, 3, 0, 0), (9, 4, 0, 0)] + [(7, i, 0, 0) for i in range(6)]
+    assert dq.to_list(direct, 0) == expect
+    assert dq.to_list(staged_, 0) == expect
+    assert int(direct.bot[0]) == int(staged_.bot[0]) == (6 + 3) % cap
+    assert int(direct.size[0]) == int(staged_.size[0]) == 8
+    assert int(over_d[0]) == int(over_s[0]) == 0
+    np.testing.assert_array_equal(np.asarray(stolen_d), np.asarray(stolen_s))
+    np.testing.assert_array_equal(
+        np.asarray(stolen_d[0, :, 1]), [0, 1, 2, 0])  # 3 granted, zero-padded
+
+
+def test_staged_ops_match_direct_sequence():
+    """Op-for-op staged ≡ direct over a mixed sequence on a wrapped ring:
+    push, pop (reading a record staged the same tick), export, re-push over
+    exported slots (apply's last-write-wins), clear. Buffers compared
+    elementwise, not just the live window."""
+    cap = 6
+    state = _full_ring(cap, 4, bot=4)          # live slots 4,5,0,1
+    on = jnp.asarray([True])
+
+    direct = state
+    ops = dq.stage(state, lanes=8)
+
+    # push one, then pop it right back (staged read must see the overlay)
+    rec = jnp.asarray([[8, 77, 0, 0]], jnp.int32)
+    direct, ok_d = dq.push_top(direct, rec, on)
+    ops, ok_s = dq.stage_push(ops, rec, on)
+    assert bool(ok_d[0]) and bool(ok_s[0])
+    direct, task_d, pok_d = dq.pop_top(direct, on)
+    ops, task_s, pok_s = dq.stage_pop(ops, on)
+    assert bool(pok_d[0]) and bool(pok_s[0])
+    np.testing.assert_array_equal(np.asarray(task_d), np.asarray(task_s))
+    assert int(task_s[0, 1]) == 77
+
+    # export 2 from the wrapped bottom, then push 3 — the last lands on an
+    # exported slot AND on the slot the pop vacated (re-staged slot)
+    stolen_d, direct = dq.export_bottom(direct, jnp.asarray([2]), 4)
+    ops, stolen_s = dq.stage_export(ops, jnp.asarray([2]), 4)
+    np.testing.assert_array_equal(np.asarray(stolen_d), np.asarray(stolen_s))
+    pushes = jnp.asarray([[(6, i, 0, 0) for i in range(3)]], jnp.int32)
+    direct, _ = dq.push_top_many(direct, pushes, jnp.asarray([3]))
+    ops, _ = dq.stage_push_many(ops, pushes, jnp.asarray([3]))
+
+    staged_ = dq.apply(ops)
+    assert dq.to_list(direct, 0) == dq.to_list(staged_, 0)
+    np.testing.assert_array_equal(np.asarray(direct.buf), np.asarray(staged_.buf))
+    np.testing.assert_array_equal(np.asarray(direct.bot), np.asarray(staged_.bot))
+    np.testing.assert_array_equal(np.asarray(direct.size), np.asarray(staged_.size))
+
+    # clear mirrors the transplant-source wipe
+    direct = dq.DequeState(direct.buf, direct.bot,
+                           jnp.where(on, 0, direct.size))
+    ops2 = dq.stage(staged_, lanes=4)
+    ops2 = dq.stage_clear(ops2, on)
+    np.testing.assert_array_equal(np.asarray(dq.apply(ops2).size),
+                                  np.asarray(direct.size))

@@ -132,6 +132,42 @@ def test_steal_compact_matches_export_bottom():
     np.testing.assert_array_equal(np.asarray(a_state.size), np.asarray(b_state.size))
 
 
+@pytest.mark.parametrize("W,C,L", [(64, 16, 9), (100, 32, 9), (9, 16, 24),
+                                   (128, 8, 5)])
+def test_deque_apply_sweep(W, C, L):
+    """Staged-ops commit kernel vs oracle, including re-used slots (a later
+    lane must win — the last-write-wins rule both paths implement) and W
+    not divisible by the default block width."""
+    buf = jnp.asarray(RNG.integers(1, 1000, (W, C, 4)), jnp.int32)
+    # draw slots from a narrow range so duplicates are common
+    slot = jnp.asarray(RNG.integers(0, min(C, 6), (W, L)), jnp.int32)
+    rec = jnp.asarray(RNG.integers(1, 1000, (W, L, 4)), jnp.int32)
+    n = jnp.asarray(RNG.integers(0, L + 1, W), jnp.int32)
+    got = ops.deque_apply(buf, slot, rec, n)
+    expect = ref.deque_apply_ref(buf, slot, rec, n)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(expect))
+
+
+def test_deque_apply_matches_jnp_fallback():
+    """`deque.apply`'s dedup-then-scatter fallback and the kernel replay
+    agree on the same DequeOps delta."""
+    from repro.core import deque as dq
+
+    W, C, L = 32, 16, 12
+    ops_rec = dq.DequeOps(
+        buf0=jnp.asarray(RNG.integers(1, 1000, (W, C, 4)), jnp.int32),
+        bot=jnp.asarray(RNG.integers(0, C, W), jnp.int32),
+        size=jnp.asarray(RNG.integers(0, C + 1, W), jnp.int32),
+        slot=jnp.asarray(RNG.integers(0, 5, (W, L)), jnp.int32),
+        rec=jnp.asarray(RNG.integers(1, 1000, (W, L, 4)), jnp.int32),
+        n=jnp.asarray(RNG.integers(0, L + 1, W), jnp.int32))
+    a = dq.apply(ops_rec, use_kernel=False)
+    b = dq.apply(ops_rec, use_kernel=True)
+    np.testing.assert_array_equal(np.asarray(a.buf), np.asarray(b.buf))
+    np.testing.assert_array_equal(np.asarray(a.bot), np.asarray(b.bot))
+    np.testing.assert_array_equal(np.asarray(a.size), np.asarray(b.size))
+
+
 def test_flash_attention_used_by_model_layer():
     """The jnp chunked path in models.layers is the kernel's oracle — verify
     the two agree end to end on a GQA shape."""

@@ -253,6 +253,177 @@ def test_leap_equals_tick_with_steal_kernel():
 
 
 # --------------------------------------------------------------------------- #
+# Staged deque-ops backend ≡ per-op loop oracle
+# --------------------------------------------------------------------------- #
+# Latin-square design over strategy × recovery: every strategy and every
+# recovery meets each modifier ({pre-shed, stragglers, dynamic linkstate})
+# exactly once, in BOTH step modes — the ISSUE 5 acceptance matrix.
+BACKEND_MODS = ("preshed", "stragglers", "linkstate")
+BACKEND_MATRIX = [
+    (strat, rec, BACKEND_MODS[(si + ri) % 3])
+    for si, strat in enumerate([stealing.Strategy.NEIGHBOR,
+                                stealing.Strategy.GLOBAL,
+                                stealing.Strategy.LIFELINE,
+                                stealing.Strategy.ADAPTIVE])
+    for ri, rec in enumerate([simulator.Recovery.NONE,
+                              simulator.Recovery.TC,
+                              simulator.Recovery.SUPERVISION])
+]
+
+PW_FIELDS = ("per_worker_busy", "per_worker_overflow", "per_worker_stolen",
+             "per_worker_hiwater")
+
+
+def _backend_case(strategy, recovery, modifier, mode, backend,
+                  use_steal_kernel=None):
+    W = EQ_MESH.num_workers
+    ft = -np.ones(W, np.int32)
+    ft[2], ft[5] = 70, 150
+    speed, ls = None, None
+    preshed, warn = False, 0
+    if modifier == "stragglers":
+        speed = np.ones(W, np.int32)
+        speed[[1, 4]] = 3
+    elif modifier == "preshed":
+        preshed, warn = True, 8
+    else:  # dynamic linkstate: oscillating τ + outage epoch + speed epochs
+        ls, ft = _dynamic_schedule()
+    cfg = simulator.SimConfig(
+        strategy=strategy, hop_ticks=3, capacity=128, max_ticks=200_000,
+        recovery=recovery,
+        ckpt_interval=30 if recovery is simulator.Recovery.TC else 0,
+        preshed=preshed, warn_ticks=warn, step_mode=mode,
+        deque_backend=backend, use_steal_kernel=use_steal_kernel)
+    return simulator.simulate(EQ_FIB, EQ_MESH, cfg, fail_time=ft,
+                              speed=speed, linkstate=ls)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("strategy,recovery,modifier", BACKEND_MATRIX)
+@pytest.mark.parametrize("mode", ["tick", "leap"])
+def test_staged_backend_equals_loop_oracle(strategy, recovery, modifier,
+                                           mode):
+    """Acceptance (ISSUE 5): `deque_backend="staged"` — every per-tick deque
+    mutation staged into one fused apply — is bit-identical to the per-op
+    `"loop"` oracle across strategy × recovery × {pre-shed, stragglers,
+    dynamic linkstate}, in both step modes, per-worker arrays elementwise."""
+    a = _backend_case(strategy, recovery, modifier, mode, "loop")
+    b = _backend_case(strategy, recovery, modifier, mode, "staged")
+    for f in EQ_FIELDS:
+        assert getattr(a, f) == getattr(b, f), (
+            f"{f}: loop={getattr(a, f)} staged={getattr(b, f)}")
+    for f in PW_FIELDS:
+        assert (getattr(a, f) == getattr(b, f)).all(), f
+
+
+def test_staged_backend_kernel_path_equals_loop_oracle():
+    """The Pallas interpret path of the staged commit (`deque_apply`) stays
+    bit-identical to the loop oracle too — the kernels differ between
+    backends (steal_compact exports vs fused applies), the results must
+    not."""
+    a = _backend_case(stealing.Strategy.NEIGHBOR, simulator.Recovery.NONE,
+                      "preshed", "leap", "loop", use_steal_kernel=True)
+    b = _backend_case(stealing.Strategy.NEIGHBOR, simulator.Recovery.NONE,
+                      "preshed", "leap", "staged", use_steal_kernel=True)
+    for f in EQ_FIELDS:
+        assert getattr(a, f) == getattr(b, f), f
+    for f in PW_FIELDS:
+        assert (getattr(a, f) == getattr(b, f)).all(), f
+
+
+def test_rejects_unknown_deque_backend():
+    cfg = simulator.SimConfig(deque_backend="fused")
+    with pytest.raises(ValueError):
+        simulator.simulate(EQ_FIB, EQ_MESH, cfg)
+
+
+# --------------------------------------------------------------------------- #
+# Deque-occupancy high-water mark (capacity sizing for W >= 4k sweeps)
+# --------------------------------------------------------------------------- #
+def test_hiwater_bounds_and_empirical_capacity_sizing():
+    """`per_worker_hiwater` tracks the running max end-of-tick occupancy:
+    bounded by capacity, at least the final occupancy, identical across
+    backends and step modes — and usable as an empirical capacity floor
+    (re-running with capacity == max hiwater reproduces the run with zero
+    overflow, while capacity below it must drop tasks)."""
+    cfg = simulator.SimConfig(strategy=stealing.Strategy.NEIGHBOR,
+                              hop_ticks=3, capacity=256, max_ticks=300_000)
+    r = run(cfg)
+    hw = r.per_worker_hiwater
+    assert hw.shape == (MESH.num_workers,)
+    assert (hw <= cfg.capacity).all()
+    assert hw[0] >= 1          # the root seed alone raises worker 0's mark
+    assert hw.max() > 1        # steals spread occupancy beyond the seed
+    assert r.overflow == 0
+
+    # bit-identical across step modes and backends (it's part of the state)
+    for mode in ("tick", "leap"):
+        for backend in ("loop", "staged"):
+            r2 = run(dataclasses.replace(cfg, step_mode=mode,
+                                         deque_backend=backend))
+            np.testing.assert_array_equal(r2.per_worker_hiwater, hw)
+
+    # the empirical-sizing claim: capacity == observed max hiwater loses
+    # nothing; one below it overflows
+    peak = int(hw.max())
+    r_fit = run(dataclasses.replace(cfg, capacity=peak))
+    assert r_fit.result == EXPECT and r_fit.overflow == 0
+    assert int(r_fit.per_worker_hiwater.max()) == peak
+    r_tight = run(dataclasses.replace(cfg, capacity=peak - 1))
+    assert r_tight.overflow > 0
+
+
+def test_hiwater_survives_tc_rollback():
+    """Regression (found by review): the high-water mark is an
+    observability counter, not simulation state — a TC rollback must not
+    erase peaks reached during the discarded ticks (the buffers physically
+    held them, so capacity sized to the reported hiwater has to fit the
+    pre-rollback segment of a re-run). Pinned as truncation monotonicity:
+    extending the horizon across the death/rollback tick can never shrink
+    any worker's reported hiwater. The schedule makes the rollback
+    maximally destructive — the only snapshot is the near-empty t=0 cut
+    (ckpt_interval > death tick), so a rolled-back mark would collapse
+    toward the seed one-hot while the buffers demonstrably held their
+    pre-death peaks."""
+    W = MESH.num_workers
+    ft = -np.ones(W, np.int32)
+    ft[3] = 150
+    cfg = simulator.SimConfig(strategy=stealing.Strategy.NEIGHBOR,
+                              hop_ticks=3, capacity=256,
+                              recovery=simulator.Recovery.TC,
+                              ckpt_interval=200, max_ticks=500_000)
+    prev = None
+    for horizon in (149, 151, 160, 500_000):
+        r = run(dataclasses.replace(cfg, max_ticks=horizon), fail=ft)
+        hw = r.per_worker_hiwater
+        if prev is not None:
+            assert (hw >= prev).all(), (
+                f"hiwater shrank when extending the horizon to {horizon}")
+        prev = hw
+    assert prev.max() > 1      # the pre-death peaks really are on record
+    assert r.result == EXPECT  # the sweep's endpoint is the full exact run
+
+
+def test_hiwater_at_least_final_occupancy_on_truncated_run():
+    """On a max_ticks-truncated run the deques are still populated at exit;
+    the running max must dominate the final occupancy elementwise (raw
+    SimState check — SimResult only carries the mark)."""
+    import jax
+
+    cfg = simulator.SimConfig(strategy=stealing.Strategy.NEIGHBOR,
+                              hop_ticks=3, capacity=256, max_ticks=40)
+    ft, wt, sp = simulator._fail_speed_arrays(MESH.num_workers, None, None)
+    state, ticks, _ = simulator._sim_jit(FIB, MESH, cfg,
+                                         jax.random.PRNGKey(cfg.seed),
+                                         ft, wt, sp, None)
+    assert int(ticks) == 40
+    final = np.asarray(state.deque.size)
+    assert final.sum() > 0      # truly truncated mid-run
+    assert (np.asarray(state.hiwater) >= final).all()
+    assert (np.asarray(state.hiwater) <= cfg.capacity).all()
+
+
+# --------------------------------------------------------------------------- #
 # Time-varying link state (linkstate subsystem)
 # --------------------------------------------------------------------------- #
 def _dynamic_schedule():
