@@ -48,8 +48,12 @@ import json
 import resource
 import time
 
+import numpy as np
+
 from repro.configs import paper_mesh
+from repro.core import constellation
 from repro.core import deque as dq
+from repro.core import linkstate
 from repro.core import simulator, stealing, topology
 from .common import emit
 
@@ -94,14 +98,109 @@ def _run(wl, mesh, strategy, step_mode, max_ticks, hop_ticks, capacity,
     return r, wall, compile_wall
 
 
+def _dynamic_constellation(W: int, tau_base: int, orbits: int):
+    """Full-constellation dynamic scenario for a square W: wraparound torus,
+    eclipse cycles (periodic per-worker (fail, wake) schedules), and seam
+    handover outages. `orbit_ticks` is chosen divisible by `sats_per_plane`
+    so the seam phase repeats at the orbit boundary and second-orbit epochs
+    dedup against the first (the periodic-schedule fast path for the
+    routing-table build)."""
+    side = int(round(W ** 0.5))
+    if side * side != W:
+        raise SystemExit(f"--dynamic needs a square worker count, got {W}")
+    orbit_ticks = 16 * side          # seam handover cycle = 16 ticks exactly
+    ccfg = constellation.ConstellationConfig(
+        planes=side, sats_per_plane=side, orbit_ticks=orbit_ticks,
+        tau_base=tau_base, wraparound=True, epochs_per_orbit=32,
+        eclipse_fraction=0.35, battery_limited_frac=0.1,
+        seam_outage_frac=0.1, warn_ticks=min(50, orbit_ticks // 8))
+    con = constellation.Constellation(ccfg)
+    sched = con.schedule(horizon_ticks=orbits * orbit_ticks)
+    return con, sched, orbit_ticks
+
+
+def _run_dynamic(wl, con, sched, strategy, routing, orbits, orbit_ticks,
+                 capacity, deque_backend):
+    """One leap-mode dynamic run against prebuilt routing tables; returns
+    the SimResult, wall, compile wall, and the routing build stats."""
+    mesh = con.mesh
+    routing = linkstate.resolve_routing(routing, mesh.num_workers)
+    t0 = time.perf_counter()
+    tbl, stats = linkstate.build_tables(sched.linkstate, mesh,
+                                        routing=routing)
+    build_s = time.perf_counter() - t0
+    pred_fail = np.where(sched.predictable, sched.fail_time,
+                         -1).astype(np.int32)
+    cfg = simulator.SimConfig(
+        strategy=strategy, capacity=capacity,
+        max_ticks=orbits * orbit_ticks, step_mode="leap",
+        preshed=True, warn_ticks=con.cfg.warn_ticks,
+        deque_backend=deque_backend)
+    t0 = time.perf_counter()
+    r = simulator.simulate(wl, mesh, cfg, fail_time=pred_fail,
+                           linkstate=tbl, wake_time=sched.wake_time,
+                           fail_period=sched.fail_period)
+    compile_wall = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    r = simulator.simulate(wl, mesh, cfg, fail_time=pred_fail,
+                           linkstate=tbl, wake_time=sched.wake_time,
+                           fail_period=sched.fail_period)
+    wall = time.perf_counter() - t0
+    return r, wall, compile_wall, stats, build_s
+
+
 def run(workers=(100, 640, 2500), strategies=("global", "neighbor", "adaptive"),
         taus=(5,), quick: bool = False, json_path: str | None = None,
         leap_only: bool = False, capacity: int = 2048,
-        max_ticks: int | None = None, deque_backend: str | None = None):
+        max_ticks: int | None = None, deque_backend: str | None = None,
+        routing: str = "auto", dynamic: bool = False, orbits: int = 2,
+        rss_budget_mb: float | None = None):
     wl = paper_mesh.CONFIG.fib_granular
     results = {}
     for W in workers:
         mesh = topology.MeshTopology.square(W)
+        if dynamic:
+            con, sched, orbit_ticks = _dynamic_constellation(W, taus[0],
+                                                             orbits)
+            for sname in strategies:
+                r, wall, cwall, stats, build_s = _run_dynamic(
+                    wl, con, sched, STRATS[sname], routing, orbits,
+                    orbit_ticks, capacity, deque_backend)
+                table_mb = stats.table_bytes / 2**20
+                dense_mb = stats.dense_equiv_bytes / 2**20
+                results[(W, sname, taus[0])] = dict(
+                    W=W, dynamic=True, orbits=orbits,
+                    orbit_ticks=orbit_ticks,
+                    routing_backend=stats.routing,
+                    routing_table_build_s=round(build_s, 3),
+                    routing_table_mb=round(table_mb, 2),
+                    dense_equiv_mb=round(dense_mb, 2),
+                    routing_stats=dict(
+                        num_epochs=stats.num_epochs,
+                        outage_epochs=stats.outage_epochs,
+                        struct_classes=stats.struct_classes,
+                        cost_classes=stats.cost_classes,
+                        struct_dedup_hits=stats.struct_dedup_hits,
+                        cost_dedup_hits=stats.cost_dedup_hits,
+                        num_landmarks=stats.num_landmarks,
+                        num_patches=stats.num_patches,
+                        stretch_add=stats.stretch_add),
+                    per=dict(leap=dict(
+                        ticks=r.ticks, events=r.events, wall=wall,
+                        compile_wall=cwall,
+                        tps=r.ticks / max(wall, 1e-9),
+                        eps=r.events / max(wall, 1e-9),
+                        util=r.utilization, overflow=r.overflow,
+                        hiwater=int(r.per_worker_hiwater.max()))))
+                emit(f"bench_sim_dyn/{sname}/W={W}/orbits={orbits}",
+                     wall * 1e6,
+                     f"ticks={r.ticks};events={r.events};"
+                     f"leap_tps={r.ticks / max(wall, 1e-9):.0f};"
+                     f"routing={stats.routing};"
+                     f"table_mb={table_mb:.1f};"
+                     f"dense_equiv_mb={dense_mb:.0f};"
+                     f"build_s={build_s:.2f}")
+            continue
         # an explicit horizon always wins; --quick only shortens defaults
         if max_ticks is not None:
             cap = max_ticks
@@ -157,6 +256,10 @@ def run(workers=(100, 640, 2500), strategies=("global", "neighbor", "adaptive"),
                 peak_rss_mb=round(peak_rss_mb, 1),
                 runs={f"strategy={s}/W={W}/tau={tau}": r
                       for (W, s, tau), r in results.items()}), f, indent=2)
+    if rss_budget_mb is not None and peak_rss_mb > rss_budget_mb:
+        raise SystemExit(
+            f"peak RSS {peak_rss_mb:.0f} MB exceeds the "
+            f"--rss-budget-mb {rss_budget_mb:.0f} MB budget")
     return results
 
 
@@ -181,6 +284,23 @@ def main():
                     choices=("staged", "loop"),
                     help="deque mutation backend (default: platform auto — "
                          "loop on CPU, staged on TPU)")
+    ap.add_argument("--routing-backend", default="auto",
+                    choices=("auto", "dense", "sparse"),
+                    help="outage-table layout for dynamic schedules: dense "
+                         "(W, W) Floyd-Warshall oracle vs sparse "
+                         "hierarchical (patches + landmarks, O(W*L)); auto "
+                         f"flips to sparse at W >= "
+                         f"{linkstate.SPARSE_AUTO_MIN_WORKERS}")
+    ap.add_argument("--dynamic", action="store_true",
+                    help="full-constellation dynamic schedule (eclipse "
+                         "cycles + seam outages) instead of the static "
+                         "mesh; strategies run leap-only against prebuilt "
+                         "routing tables")
+    ap.add_argument("--orbits", type=int, default=2,
+                    help="with --dynamic: orbital periods in the horizon")
+    ap.add_argument("--rss-budget-mb", type=float, default=None,
+                    help="fail if the process peak RSS exceeds this "
+                         "(CI budget assertion for the W=16384 smoke)")
     ap.add_argument("--json", default=None,
                     help="write consolidated results JSON here "
                          "(e.g. BENCH_sim.json)")
@@ -195,7 +315,9 @@ def main():
     run(workers=workers, strategies=strategies, taus=taus,
         quick=args.quick, json_path=args.json, leap_only=args.leap_only,
         capacity=args.capacity, max_ticks=args.max_ticks,
-        deque_backend=args.deque_backend)
+        deque_backend=args.deque_backend, routing=args.routing_backend,
+        dynamic=args.dynamic, orbits=args.orbits,
+        rss_budget_mb=args.rss_budget_mb)
 
 
 if __name__ == "__main__":

@@ -50,11 +50,13 @@ def _workload(quick: bool) -> tasks.FibWorkload:
             else tasks.FibWorkload(n=30, cutoff=13, max_leaf_cost=48))
 
 
-def run(quick: bool = False, json_path: str | None = None):
+def run(quick: bool = False, json_path: str | None = None, orbits: int = 1):
     ccfg = (paper_mesh.CONFIG.orbit_quick if quick
             else paper_mesh.CONFIG.orbit)
     wl = _workload(quick)
-    horizon = ccfg.orbit_ticks  # one full orbital period of link dynamics
+    # `orbits > 1` exercises the periodic (fail, wake) schedules: eclipses
+    # recur every orbit and the sleepers re-enter shadow each cycle
+    horizon = orbits * ccfg.orbit_ticks
     rows = []
     for eclipse in (False, True):
         cc = ccfg if eclipse else dataclasses.replace(
@@ -76,7 +78,8 @@ def run(quick: bool = False, json_path: str | None = None):
                 r = simulator.simulate(
                     wl, con.mesh, cfg, fail_time=pred_fail if eclipse else None,
                     linkstate=ls if dynamic else None,
-                    wake_time=sched.wake_time if eclipse else None)
+                    wake_time=sched.wake_time if eclipse else None,
+                    fail_period=sched.fail_period if eclipse else None)
                 wall = time.perf_counter() - t0
                 row = dict(
                     strategy=sname, dynamic=dynamic, eclipse=eclipse,
@@ -87,6 +90,7 @@ def run(quick: bool = False, json_path: str | None = None):
                     steal_wait_ticks=r.steal_wait_ticks,
                     bytes_hops=r.bytes_hops, static_tau=static_tau,
                     epochs=ls.num_epochs, woken=n_woken if eclipse else 0,
+                    periodic=int((sched.fail_period > 0).sum()) if eclipse else 0,
                     wall_s=round(wall, 3))
                 rows.append(row)
                 emit(f"orbit/{sname}/dyn={int(dynamic)}/ecl={int(eclipse)}",
@@ -98,7 +102,8 @@ def run(quick: bool = False, json_path: str | None = None):
     if json_path:
         with open(json_path, "w") as f:
             json.dump(dict(config=dataclasses.asdict(ccfg), quick=quick,
-                           horizon=horizon, rows=rows), f, indent=2)
+                           horizon=horizon, orbits=orbits, rows=rows),
+                      f, indent=2)
     return rows
 
 
@@ -106,10 +111,13 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke: 5x5 torus, one short orbit")
+    ap.add_argument("--orbits", type=int, default=1,
+                    help="orbital periods in the horizon (> 1 exercises the "
+                         "periodic eclipse schedules)")
     ap.add_argument("--json", default=None, help="write results JSON here")
     args = ap.parse_args()
     print("name,us_per_call,derived")
-    run(quick=args.quick, json_path=args.json)
+    run(quick=args.quick, json_path=args.json, orbits=args.orbits)
 
 
 if __name__ == "__main__":

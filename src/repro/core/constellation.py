@@ -74,6 +74,11 @@ class Schedule:
     # predictable (eclipse) shutdowns whose shadow ends inside the horizon;
     # radiation deaths stay permanent
     wake_time: np.ndarray = None
+    # (W,) eclipse cycle length (-1 = one-shot): set to `orbit_ticks` for
+    # battery-limited satellites whose shadow recurs inside the horizon —
+    # the worker then dies at fail + k·period and wakes at wake + k·period
+    # every orbit, so multi-orbit horizons run end-to-end
+    fail_period: np.ndarray = None
 
 
 class Constellation:
@@ -125,8 +130,10 @@ class Constellation:
         # become wake-ups (the satellite rejoins the victim set and its
         # links come back up at the wake epoch).
         eclipse_len = max(int(round(cfg.eclipse_fraction * cfg.orbit_ticks)), 1)
+        eclipse_len = min(eclipse_len, cfg.orbit_ticks - 1)
         n_weak = int(round(cfg.battery_limited_frac * W))
         weak = rng.choice(W, size=n_weak, replace=False) if n_weak else []
+        period = -np.ones(W, np.int64)
         for w in weak:
             _, c = self.mesh.coords_of(int(w))
             slot_phase = c / cfg.sats_per_plane
@@ -140,6 +147,11 @@ class Constellation:
                 exit_t = entry + eclipse_len
                 if exit_t < horizon_ticks:
                     wake[w] = exit_t
+                # the shadow recurs every orbit: emit the periodic form when
+                # the second entry is still inside the horizon (the wake is
+                # then always set — the exit precedes it by construction)
+                if entry + cfg.orbit_ticks < horizon_ticks:
+                    period[w] = cfg.orbit_ticks
 
         # radiation / hardware faults: Poisson per orbit
         if cfg.failure_rate > 0:
@@ -153,32 +165,38 @@ class Constellation:
         # keep the root worker (ground-station adjacent) up
         fail[0] = -1
         wake[0] = -1
+        period[0] = -1
         predictable[0] = False
 
         fail = fail.astype(np.int32)
         wake = wake.astype(np.int32)
+        period = period.astype(np.int32)
         speed = np.ones(W, np.int32)
-        link = self.linkstate_schedule(horizon_ticks, fail, predictable, wake)
+        link = self.linkstate_schedule(horizon_ticks, fail, predictable, wake,
+                                       period)
         return Schedule(fail_time=fail,
                         predictable=predictable,
                         speed=speed,
                         mean_hop_ticks=self.mean_tau(),
                         linkstate=link,
-                        wake_time=wake)
+                        wake_time=wake,
+                        fail_period=period)
 
     # ------------------------------------------------------------------ #
     # Link-state schedule compilation
     # ------------------------------------------------------------------ #
     def linkstate_schedule(self, horizon_ticks: int, fail_time: np.ndarray,
                            predictable: np.ndarray,
-                           wake_time: np.ndarray | None = None
+                           wake_time: np.ndarray | None = None,
+                           fail_period: np.ndarray | None = None
                            ) -> lstate.LinkStateSchedule:
         """Compile the orbit into a piecewise-constant `LinkStateSchedule`.
 
         Epoch boundaries are the union of the uniform τ-oscillation sampling
         grid (`epochs_per_orbit` per orbit), each predictable shutdown's
         entry tick (its links go dark with it) and wake tick (its links
-        come back up with it), and — with `wraparound` — every seam
+        come back up with it) — repeated at every `fail_period` cycle for
+        periodic eclipse schedules — and, with `wraparound`, every seam
         handover on/off transition, so the piecewise-constant arrays change
         exactly where the modeled state does.
         """
@@ -188,13 +206,22 @@ class Constellation:
         R, C = cfg.planes, cfg.sats_per_plane
         if wake_time is None:
             wake_time = -np.ones(W, np.int64)
+        if fail_period is None:
+            fail_period = -np.ones(W, np.int64)
 
         bounds = {0}
         step = max(int(round(cfg.orbit_ticks / max(cfg.epochs_per_orbit, 1))), 1)
         bounds.update(range(0, horizon_ticks, step))
         sleeps = predictable & (fail_time >= 0)
-        bounds.update(int(t) for t in fail_time[sleeps])
-        bounds.update(int(t) for t in wake_time[sleeps & (wake_time >= 0)])
+        for w in np.where(sleeps)[0]:
+            reps = (range(1) if fail_period[w] <= 0 else
+                    range(-(-(horizon_ticks - int(fail_time[w]))
+                            // int(fail_period[w]))))
+            for k in reps:
+                off = k * int(fail_period[w]) if k else 0
+                bounds.add(int(fail_time[w]) + off)
+                if wake_time[w] >= 0:
+                    bounds.add(int(wake_time[w]) + off)
         cycle = self.handover_cycle()
         dark_len = 0
         if cfg.wraparound and cfg.seam_outage_frac > 0:
@@ -219,11 +246,17 @@ class Constellation:
 
         # availability: a sleeping satellite's links are down from its entry
         # tick until its wake tick — eclipse exits bring them back up (both
-        # endpoints see the predictable outage either way)
+        # endpoints see the predictable outage either way). Periodic
+        # schedules sleep in [fail + kP, wake + kP) every cycle; the cycle
+        # phase reduces to the plain interval comparison when P is unset.
         up = np.ones((E, W, 4), bool)
-        asleep = (sleeps[None, :] & (fail_time[None, :] <= starts[:, None]))
-        awake = (wake_time[None, :] >= 0) & (starts[:, None] >= wake_time[None, :])
-        asleep &= ~awake
+        ft = fail_time[None, :].astype(np.int64)
+        wt = wake_time[None, :].astype(np.int64)
+        pp = fail_period[None, :].astype(np.int64)
+        rel = starts[:, None].astype(np.int64) - ft
+        phase = np.where(pp > 0, rel % np.maximum(pp, 1), rel)
+        dur = np.where(wt >= 0, wt - ft, np.int64(1) << 40)
+        asleep = sleeps[None, :] & (rel >= 0) & (phase < dur)
         up &= ~asleep[:, :, None]
         nbr = mesh.neighbor_table
         nbr_c = np.clip(nbr, 0, W - 1)

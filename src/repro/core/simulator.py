@@ -349,14 +349,12 @@ def _masked_radius2(tbl, ls, eidx):
     the escalated draw must not waste picks on them (and the famine
     predicate may not treat them as reachable supply). A (W, 12) gather
     from the per-epoch component row; the unmasked table when the schedule
-    has no outage epochs (trace-time: `ls.detour is None`)."""
+    has no outage epochs (trace-time: no outage tables of either routing
+    backend)."""
     r2 = tbl.get("radius2")
-    if r2 is None or ls is None or ls.detour is None:
+    if r2 is None or ls is None or not lstate.has_outage_tables(ls):
         return r2
-    c = ls.comp[eidx]
-    W = c.shape[0]
-    ok = (r2 >= 0) & (c[jnp.clip(r2, 0, W - 1)] == c[:, None])
-    return jnp.where(ok, r2, topo.NO_NEIGHBOR)
+    return stealing.mask_reachable(r2, ls.comp[eidx])
 
 
 def _select(cfg: SimConfig, tbl, key, is_thief, fails, W, link=None):
@@ -606,7 +604,7 @@ def _can_attempt(cfg: SimConfig, tbl, ls, eidx, fails, W: int):
     stepper skips idle workers for which this is False.
     """
     if cfg.strategy in (stealing.Strategy.GLOBAL, stealing.Strategy.LIFELINE):
-        if ls is None or ls.detour is None:
+        if ls is None or not lstate.has_outage_tables(ls):
             return jnp.broadcast_to(jnp.bool_(W > 1), (W,))
         c = ls.comp[eidx]
         comp_size = jnp.zeros((W,), jnp.int32).at[c].add(1)
@@ -633,40 +631,69 @@ def _epoch_link_tables(tbl, ls, eidx):
     nbr_tab = jnp.where(ls.link_up[eidx] & (tbl["neighbors"] >= 0),
                         tbl["neighbors"], topo.NO_NEIGHBOR)
     r2_tab = _masked_radius2(tbl, ls, eidx)
-    comp_row = None if ls.detour is None else ls.comp[eidx]
+    comp_row = ls.comp[eidx] if lstate.has_outage_tables(ls) else None
     return nbr_tab, r2_tab, comp_row
 
 
-def _retired_mask(cfg: SimConfig, fail_time, wake_time, t, W: int):
+def _fires_now(base, period, t):
+    """Does the periodic event anchored at `base` with cycle `period` fire
+    at tick t?  period == -1 is the one-shot (scalar schedule) case, where
+    this reduces bit-exactly to ``base == t``; period > 0 fires at
+    ``base + k * period`` for every k >= 0. `base < 0` never fires."""
+    hit = jnp.where(period > 0,
+                    (t - base) % jnp.maximum(period, 1) == 0,
+                    t == base)
+    return (base >= 0) & (t >= base) & hit
+
+
+def _next_fire(base, period, t):
+    """First fire tick >= t of the periodic event (base, period); `_NEVER`
+    when none remains. One-shot (period == -1) reduces bit-exactly to the
+    scalar horizon terms: base if still pending, else `_NEVER`. Int32-safe
+    for period < 2**29 (validated host-side) and t <= max_ticks < 2**30."""
+    pp = jnp.maximum(period, 1)
+    k = jnp.maximum((t - base + pp - 1) // pp, 0)
+    periodic = base + k * pp
+    one_shot = jnp.where(base >= t, base, _NEVER)
+    return jnp.where(base < 0, _NEVER,
+                     jnp.where(period > 0, periodic, one_shot))
+
+
+def _retired_mask(cfg: SimConfig, fail_time, fail_period, t, W: int):
     """Pre-shed retirement: a warned worker idles from `fail - warn_ticks`
-    until its (predictable) death and must not pull work back in. The
-    retirement ends at the wake tick — a worker that rejoined after an
-    eclipse exit is a full citizen again, not a zombie of its old warning.
+    until its (predictable) death and must not pull work back in. Phrased
+    on the NEXT pending death: an alive worker is retired iff a death fire
+    is due within `warn_ticks` — so a worker that rejoined after an
+    eclipse exit is a full citizen again (its next fire is a full cycle
+    out), and one-shot schedules reduce bit-exactly to the scalar rule for
+    every alive worker (the only consumers — dead workers never read it).
     Shared by the tick path, both horizons, and the famine replay so the
     predicate can never drift between them."""
     if not cfg.preshed:
         return jnp.zeros((W,), bool)
-    r = (fail_time >= 0) & (t >= fail_time - cfg.warn_ticks)
-    return r & ~((wake_time >= 0) & (t >= wake_time))
+    nf = _next_fire(fail_time, fail_period, t)
+    return (nf < _NEVER) & (t >= nf - cfg.warn_ticks)
 
 
-def _scheduled_horizons(ne, t, alive, fail_time, wake_time, cfg: SimConfig,
-                        ls):
+def _scheduled_horizons(ne, t, alive, fail_time, wake_time, fail_period,
+                        cfg: SimConfig, ls):
     """Clip `ne` at every scheduled global event: deaths (and pre-shed
     warnings) of still-alive workers, wake-ups of dead ones, periodic
-    checkpoints, and link-state epoch boundaries. Shared by `_next_event`
-    and `_famine_horizon` so the two horizons can never drift apart on
-    these correctness-critical terms.
+    checkpoints, and link-state epoch boundaries. Periodic (fail, wake)
+    schedules clip at EVERY cycle's boundary via `_next_fire`, so leaps
+    and famine windows land exactly on second-orbit eclipses too. Shared
+    by `_next_event` and `_famine_horizon` so the two horizons can never
+    drift apart on these correctness-critical terms.
     """
-    ne = jnp.minimum(ne, jnp.min(
-        jnp.where(alive & (fail_time >= t), fail_time, _NEVER)))
+    nf = _next_fire(fail_time, fail_period, t)
+    nw = _next_fire(wake_time, fail_period, t)
+    ne = jnp.minimum(ne, jnp.min(jnp.where(alive, nf, _NEVER)))
     # eclipse exits: a dead worker with a pending wake rejoins mid-horizon
-    ne = jnp.minimum(ne, jnp.min(
-        jnp.where(~alive & (wake_time >= t), wake_time, _NEVER)))
+    ne = jnp.minimum(ne, jnp.min(jnp.where(~alive, nw, _NEVER)))
     if cfg.preshed:
-        warn_at = fail_time - cfg.warn_ticks
+        warn_at = nf - cfg.warn_ticks
         ne = jnp.minimum(ne, jnp.min(
-            jnp.where(alive & (fail_time >= 0) & (warn_at >= t),
+            jnp.where(alive & (nf < _NEVER) & (warn_at >= t),
                       warn_at, _NEVER)))
     if cfg.ckpt_interval > 0:
         ck = cfg.ckpt_interval
@@ -678,7 +705,7 @@ def _scheduled_horizons(ne, t, alive, fail_time, wake_time, cfg: SimConfig,
     return ne
 
 
-def _next_event(state: SimState, t, speed, fail_time, wake_time,
+def _next_event(state: SimState, t, speed, fail_time, wake_time, fail_period,
                 cfg: SimConfig, W: int, tbl, ls):
     """First tick >= t at which any worker does more than a bulk decrement.
 
@@ -700,7 +727,7 @@ def _next_event(state: SimState, t, speed, fail_time, wake_time,
     # work-exhausted workers expand (deque nonempty) or start a steal (if a
     # victim is reachable under the current link state) at their next active
     # tick — unless retired by a pre-shed warning (they idle until death).
-    retired = _retired_mask(cfg, fail_time, wake_time, t, W)
+    retired = _retired_mask(cfg, fail_time, fail_period, t, W)
     can_try = _can_attempt(cfg, tbl, ls, eidx, state.fails, W)
     idle_acts = (state.deque.size > 0) | (can_try & ~retired)
     run_ev = jnp.where(state.work > 0, burn_ev,
@@ -710,11 +737,12 @@ def _next_event(state: SimState, t, speed, fail_time, wake_time,
     flight = (state.phase != PHASE_RUN) & alive
     ev = jnp.where(flight, t + jnp.maximum(state.timer - 1, 0), ev)
     return _scheduled_horizons(jnp.min(ev), t, alive, fail_time, wake_time,
-                               cfg, ls)
+                               fail_period, cfg, ls)
 
 
 def _famine_horizon(state: SimState, t, speed, fail_time, wake_time,
-                    cfg: SimConfig, W: int, mesh: topo.MeshTopology, tbl, ls):
+                    fail_period, cfg: SimConfig, W: int,
+                    mesh: topo.MeshTopology, tbl, ls):
     """First tick >= t at which any deque size can change (or a recovery /
     checkpoint / epoch event fires) — the famine-window horizon.
 
@@ -745,7 +773,7 @@ def _famine_horizon(state: SimState, t, speed, fail_time, wake_time,
     t0 = t + ((sp - t % sp) % sp)
     run = (state.phase == PHASE_RUN) & alive
     burn_ev = t0 + state.work * sp
-    retired = _retired_mask(cfg, fail_time, wake_time, t, W)
+    retired = _retired_mask(cfg, fail_time, fail_period, t, W)
     risky = stealing.probe_may_succeed(
         cfg.strategy, nonempty, state.fails, nbr_tab, r2_tab,
         escalate_after=cfg.escalate_after, window=cfg.famine_batch,
@@ -786,11 +814,11 @@ def _famine_horizon(state: SimState, t, speed, fail_time, wake_time,
                                                  next_probe, _NEVER))
     ev = jnp.where(flight, flight_ev, ev)
     return _scheduled_horizons(jnp.min(ev), t, alive, fail_time, wake_time,
-                               cfg, ls)
+                               fail_period, cfg, ls)
 
 
 def _sim_core(workload, mesh: topo.MeshTopology, cfg: SimConfig, key0,
-              fail_time, wake_time, speed, ls=None):
+              fail_time, wake_time, fail_period, speed, ls=None):
     W = mesh.num_workers
     torus_full = mesh.torus_full()
     tbl = _mesh_tables(mesh, cfg.strategy)
@@ -843,8 +871,10 @@ def _sim_core(workload, mesh: topo.MeshTopology, cfg: SimConfig, key0,
                     _masked_radius2(tbl, ls, eidx))
 
         # ------------- scheduled failures / shutdowns --------------------- #
-        dying_now = alive & (fail_time == t)
-        warned = alive & cfg.preshed & (fail_time >= 0) & (fail_time == t + cfg.warn_ticks)
+        # periodic schedules fire at base + k·period (one-shot: base == t)
+        dying_now = alive & _fires_now(fail_time, fail_period, t)
+        warned = (alive & cfg.preshed
+                  & _fires_now(fail_time, fail_period, t + cfg.warn_ticks))
 
         # every deque mutation below goes through the session: the staged
         # backend accumulates them into one end-of-tick apply, the loop
@@ -950,7 +980,7 @@ def _sim_core(workload, mesh: topo.MeshTopology, cfg: SimConfig, key0,
         # leaves dead deques empty), zero fail count, cleared supervision
         # ledger, no in-flight state. It resumes stealing this very tick
         # and is immediately stealable once it holds work.
-        waking = (~alive) & (wake_time == t)
+        waking = (~alive) & _fires_now(wake_time, fail_period, t)
         alive = alive | waking
         state = state._replace(
             alive=alive,
@@ -997,7 +1027,7 @@ def _sim_core(workload, mesh: topo.MeshTopology, cfg: SimConfig, key0,
         # idle workers become thieves: request departs now, arrives in h·τ
         idle = running & (~burning) & (~popped) & (ses.size == 0)
         # retired workers (warned of shutdown) must not pull work back in
-        idle = idle & ~_retired_mask(cfg, fail_time, wake_time, t, W)
+        idle = idle & ~_retired_mask(cfg, fail_time, fail_period, t, W)
         victim_new = _select(cfg, tbl, key, idle, state.fails, W, link)
         has_victim = victim_new >= 0
         if ls is not None:
@@ -1169,7 +1199,7 @@ def _sim_core(workload, mesh: topo.MeshTopology, cfg: SimConfig, key0,
         trailing leap never recomputes it.
         """
         ne_risky = _famine_horizon(state, t, speed, fail_time, wake_time,
-                                   cfg, W, mesh, tbl, ls)
+                                   fail_period, cfg, W, mesh, tbl, ls)
         hi = jnp.minimum(ne_risky, cfg.max_ticks)
         delta = jnp.clip(hi - t, 0, FB)
         # profitable only when probe-cycle events (counted by _next_event but
@@ -1209,7 +1239,8 @@ def _sim_core(workload, mesh: topo.MeshTopology, cfg: SimConfig, key0,
                 work = work - burning.astype(jnp.int32)
                 busy = busy + burning.astype(jnp.int32)
                 idle = running & ~burning & empty0 & act
-                idle = idle & ~_retired_mask(cfg, fail_time, wake_time, tj, W)
+                idle = idle & ~_retired_mask(cfg, fail_time, fail_period, tj,
+                                             W)
                 if cfg.strategy is stealing.Strategy.ADAPTIVE:
                     chosen = jnp.where(fails >= cfg.escalate_after,
                                        far_j, near_j)
@@ -1281,8 +1312,8 @@ def _sim_core(workload, mesh: topo.MeshTopology, cfg: SimConfig, key0,
                 work=work, loot=loot, attempts=attempts, busy=busy,
                 steal_wait=steal_wait, hops_lo=hops_lo, hops_hi=hops_hi)
             return new_state, t_out, live_out, _next_event(
-                new_state, t_out, speed, fail_time, wake_time, cfg, W, tbl,
-                ls)
+                new_state, t_out, speed, fail_time, wake_time, fail_period,
+                cfg, W, tbl, ls)
 
         return jax.lax.cond(pred, fast, lambda s, tt, lv: (s, tt, lv, ne_all),
                             state, t, live)
@@ -1295,8 +1326,8 @@ def _sim_core(workload, mesh: topo.MeshTopology, cfg: SimConfig, key0,
         state, snap, t, _, iters = carry
         state, snap, t, live = tick_fn((state, snap, t))
         if cfg.step_mode == "leap":
-            ne = _next_event(state, t, speed, fail_time, wake_time, cfg, W,
-                             tbl, ls)
+            ne = _next_event(state, t, speed, fail_time, wake_time,
+                             fail_period, cfg, W, tbl, ls)
             if famine_on:
                 state, t, live, ne = famine_ff(state, t, live, ne)
             state, t, live = leap(state, t, live, ne)
@@ -1313,10 +1344,12 @@ _sim_jit = partial(jax.jit, static_argnames=("workload", "mesh", "cfg"))(_sim_co
 
 
 @partial(jax.jit, static_argnames=("workload", "mesh", "cfg"))
-def _sim_batch_jit(workload, mesh, cfg, keys, fail_time, wake_time, speed, ls):
+def _sim_batch_jit(workload, mesh, cfg, keys, fail_time, wake_time,
+                   fail_period, speed, ls):
     return jax.vmap(
-        lambda k, ft, wt, sp: _sim_core(workload, mesh, cfg, k, ft, wt, sp, ls)
-    )(keys, fail_time, wake_time, speed)
+        lambda k, ft, wt, fp, sp: _sim_core(workload, mesh, cfg, k, ft, wt,
+                                            fp, sp, ls)
+    )(keys, fail_time, wake_time, fail_period, speed)
 
 
 def _check_cfg(cfg: SimConfig):
@@ -1359,10 +1392,12 @@ def _finalize(state, ticks, iters, mesh: topo.MeshTopology,
         per_worker_hiwater=np.asarray(state.hiwater))
 
 
-def _fail_speed_arrays(W, fail_time, speed, wake_time=None):
+def _fail_speed_arrays(W, fail_time, speed, wake_time=None, fail_period=None):
     ft_np = np.asarray(fail_time if fail_time is not None
                        else -np.ones(W, np.int32), np.int32)
     wt_np = np.asarray(wake_time if wake_time is not None
+                       else -np.ones(W, np.int32), np.int32)
+    fp_np = np.asarray(fail_period if fail_period is not None
                        else -np.ones(W, np.int32), np.int32)
     bad = (wt_np >= 0) & ((ft_np < 0) | (wt_np <= ft_np))
     if bad.any():
@@ -1370,14 +1405,28 @@ def _fail_speed_arrays(W, fail_time, speed, wake_time=None):
             "wake_time must be strictly after the worker's fail_time (and "
             f"only set for workers that fail); offending workers: "
             f"{np.where(bad)[0].tolist()}")
+    per = fp_np != -1
+    bad_p = per & (fp_np <= 0)
+    # int32 fire arithmetic (`_next_fire`) needs period < 2**29; a worker
+    # must die and wake exactly once per cycle, so the wake offset has to
+    # land strictly inside it
+    bad_p |= per & (fp_np >= (1 << 29))
+    bad_p |= per & ((ft_np < 0) | (wt_np < 0) | (wt_np - ft_np >= fp_np))
+    if bad_p.any():
+        raise ValueError(
+            "fail_period must be -1 (one-shot) or a positive cycle length "
+            "< 2**29 with fail_time >= 0 and fail_time < wake_time < "
+            f"fail_time + fail_period; offending workers: "
+            f"{np.where(bad_p)[0].tolist()}")
     ft = jnp.asarray(ft_np)
     wt = jnp.asarray(wt_np)
+    fp = jnp.asarray(fp_np)
     sp = jnp.asarray(speed if speed is not None
                      else np.ones(W, np.int32), jnp.int32)
-    return ft, wt, sp
+    return ft, wt, fp, sp
 
 
-def _linkstate_tables(linkstate, mesh, speed):
+def _linkstate_tables(linkstate, mesh, speed, routing="auto"):
     if linkstate is None:
         return None
     if speed is not None:
@@ -1385,28 +1434,40 @@ def _linkstate_tables(linkstate, mesh, speed):
             "pass straggler speeds through the LinkStateSchedule's per-epoch "
             "`speed` field, not the static `speed` argument, when simulating "
             "under a link-state schedule")
-    return lstate.device_tables(linkstate, mesh)
+    if isinstance(linkstate, lstate.LinkStateArrays):
+        # prebuilt device tables (e.g. a benchmark that wants the build
+        # stats, or a sweep reusing one build) pass through as-is
+        return linkstate
+    return lstate.device_tables(linkstate, mesh, routing=routing)
 
 
 def simulate(workload, mesh: topo.MeshTopology, cfg: SimConfig | None = None,
              fail_time: np.ndarray | None = None,
              speed: np.ndarray | None = None,
-             linkstate: "lstate.LinkStateSchedule | None" = None,
-             wake_time: np.ndarray | None = None) -> SimResult:
+             linkstate=None,
+             wake_time: np.ndarray | None = None,
+             fail_period: np.ndarray | None = None,
+             routing_backend: str = "auto") -> SimResult:
     """Run the tick simulator. `fail_time[w]` = death tick (-1: immortal);
     `wake_time[w]` = rejoin tick of a dead worker (-1: death is permanent;
     must be > fail_time[w] — eclipse exits wake with a fresh empty state);
-    `speed[w]` = straggler divisor (1 = nominal). With `linkstate`, hop
-    latency / link availability / speeds follow the piecewise-constant
-    schedule instead of the scalar `cfg.hop_ticks` (which is then unused)."""
+    `fail_period[w]` = cycle length of a periodic (fail, wake) schedule
+    (-1: one-shot): the worker dies at `fail + k*period` and wakes at
+    `wake + k*period` every orbit, with the wake strictly inside the cycle;
+    `speed[w]` = straggler divisor (1 = nominal). With `linkstate` (a
+    `LinkStateSchedule`, or prebuilt `LinkStateArrays` accepted verbatim),
+    hop latency / link availability / speeds follow the piecewise-constant
+    schedule instead of the scalar `cfg.hop_ticks` (which is then unused);
+    `routing_backend` picks the outage-table layout ('dense', 'sparse', or
+    'auto' — sparse at W >= linkstate.SPARSE_AUTO_MIN_WORKERS)."""
     cfg = cfg or SimConfig()
     _check_cfg(cfg)
-    ls = _linkstate_tables(linkstate, mesh, speed)
-    ft, wt, sp = _fail_speed_arrays(mesh.num_workers, fail_time, speed,
-                                    wake_time)
+    ls = _linkstate_tables(linkstate, mesh, speed, routing_backend)
+    ft, wt, fp, sp = _fail_speed_arrays(mesh.num_workers, fail_time, speed,
+                                        wake_time, fail_period)
     state, ticks, iters = _sim_jit(workload, mesh, cfg,
-                                   jax.random.PRNGKey(cfg.seed), ft, wt, sp,
-                                   ls)
+                                   jax.random.PRNGKey(cfg.seed), ft, wt, fp,
+                                   sp, ls)
     return _finalize(jax.device_get(state), ticks, iters, mesh, cfg)
 
 
@@ -1415,8 +1476,10 @@ def simulate_batch(workload, mesh: topo.MeshTopology,
                    seeds=(0,),
                    fail_time: np.ndarray | None = None,
                    speed: np.ndarray | None = None,
-                   linkstate: "lstate.LinkStateSchedule | None" = None,
-                   wake_time: np.ndarray | None = None
+                   linkstate=None,
+                   wake_time: np.ndarray | None = None,
+                   fail_period: np.ndarray | None = None,
+                   routing_backend: str = "auto"
                    ) -> list[SimResult]:
     """Run one simulation per seed in a single compiled, vmapped call.
 
@@ -1428,17 +1491,19 @@ def simulate_batch(workload, mesh: topo.MeshTopology,
     """
     cfg = cfg or SimConfig()
     _check_cfg(cfg)
-    ls = _linkstate_tables(linkstate, mesh, speed)
+    ls = _linkstate_tables(linkstate, mesh, speed, routing_backend)
     W = mesh.num_workers
     seeds = list(seeds)
     keys = jnp.stack([jax.random.PRNGKey(int(s)) for s in seeds])
-    ft, wt, sp = _fail_speed_arrays(W, fail_time, speed, wake_time)
+    ft, wt, fp, sp = _fail_speed_arrays(W, fail_time, speed, wake_time,
+                                        fail_period)
     B = len(seeds)
     fts = jnp.broadcast_to(ft[None], (B, W))
     wts = jnp.broadcast_to(wt[None], (B, W))
+    fps = jnp.broadcast_to(fp[None], (B, W))
     sps = jnp.broadcast_to(sp[None], (B, W))
     states, ticks, iters = _sim_batch_jit(workload, mesh, cfg, keys, fts,
-                                          wts, sps, ls)
+                                          wts, fps, sps, ls)
     states, ticks, iters = jax.device_get((states, ticks, iters))
     return [
         _finalize(jax.tree.map(lambda x: x[i], states), ticks[i], iters[i],

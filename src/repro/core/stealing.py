@@ -188,6 +188,18 @@ def cheapest_live_table(neighbor_table: jax.Array,
     return jnp.where(cheapest, neighbor_table, topo.NO_NEIGHBOR)
 
 
+def mask_reachable(table: jax.Array, comp_row: jax.Array) -> jax.Array:
+    """Mask a (W, D) victim table down to same-live-link-component entries
+    (NO_NEIGHBOR elsewhere). Works against either routing backend — both
+    dense and sparse tables carry identical per-epoch component rows. The
+    single spelling shared by the simulator's escalated-draw masking and
+    the famine horizon, so reachability can never drift between them."""
+    W = comp_row.shape[0]
+    ok = ((table != topo.NO_NEIGHBOR)
+          & (comp_row[jnp.clip(table, 0, W - 1)] == comp_row[:, None]))
+    return jnp.where(ok, table, topo.NO_NEIGHBOR)
+
+
 def choose_adaptive_linkaware(key, neighbor_table: jax.Array,
                               radius2_table: jax.Array, link_tau: jax.Array,
                               fails: jax.Array, is_thief: jax.Array,

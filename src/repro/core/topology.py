@@ -207,6 +207,66 @@ def hop_dist(mesh: MeshTopology, coords, victim):
     return (dr + dc).astype(jnp.int32)
 
 
+# ------------------------------------------------------------------------- #
+# Patch partition + landmarks (sparse hierarchical routing support)
+# ------------------------------------------------------------------------- #
+# Default edge length of a routing patch: rectangular blocks of the grid
+# inside which dimension-order pricing is kept exact by the sparse routing
+# backend (see linkstate module docstring). An axis shorter than twice the
+# target collapses to the full axis — then every ring arc stays inside the
+# patch; otherwise the block is a strict sub-range and must span at most
+# half the axis so the shorter ring arc of any same-patch pair is always
+# the direct (in-patch) one. `patch_dims` maintains that invariant.
+PATCH_TARGET = 32
+
+
+def patch_dims(mesh: MeshTopology, target: int = PATCH_TARGET) -> tuple[int, int]:
+    """(patch_rows, patch_cols) block shape for hierarchical routing."""
+    if target < 1:
+        raise ValueError("patch target must be >= 1")
+
+    def pick(n: int) -> int:
+        # strict sub-blocks must satisfy block - 1 <= n // 2 so a full
+        # torus's shorter arc between same-patch coordinates never wraps;
+        # guaranteed by collapsing short axes to the full axis.
+        return n if n < 2 * target else target
+
+    return pick(mesh.rows), pick(mesh.cols)
+
+
+def patch_ids(mesh: MeshTopology, pr: int, pc: int) -> tuple[np.ndarray, int]:
+    """((W,) int32 patch index per worker, number of patches).
+
+    Patches tile the grid row-major in (pr, pc) blocks (trailing blocks may
+    be ragged). Requires a fully populated grid, like every link-state
+    consumer.
+    """
+    if not (1 <= pr <= mesh.rows and 1 <= pc <= mesh.cols):
+        raise ValueError(f"patch dims ({pr}, {pc}) outside grid "
+                         f"{mesh.rows}x{mesh.cols}")
+    npc = -(-mesh.cols // pc)
+    r, c = mesh.coords[:, 0], mesh.coords[:, 1]
+    pid = ((r // pr) * npc + (c // pc)).astype(np.int32)
+    npr = -(-mesh.rows // pr)
+    return pid, int(npr * npc)
+
+
+def patch_centers(mesh: MeshTopology, pr: int, pc: int) -> np.ndarray:
+    """(P,) int32 worker id at the center of each patch block, in patch-id
+    order — the sparse routing backend's base landmark set (one per patch)."""
+    npr = -(-mesh.rows // pr)
+    npc = -(-mesh.cols // pc)
+    out = np.empty(npr * npc, np.int32)
+    for i in range(npr):
+        r0, r1 = i * pr, min((i + 1) * pr, mesh.rows)
+        rc = (r0 + r1 - 1) // 2
+        for j in range(npc):
+            c0, c1 = j * pc, min((j + 1) * pc, mesh.cols)
+            cc = (c0 + c1 - 1) // 2
+            out[i * npc + j] = rc * mesh.cols + cc
+    return out
+
+
 def detour_matrix(mesh: MeshTopology, link_tau: np.ndarray,
                   link_up: np.ndarray) -> np.ndarray:
     """(W, W) all-pairs shortest-path costs over LIVE links — test oracle.

@@ -1,0 +1,192 @@
+"""Sparse hierarchical routing: oracle conformance against the dense
+Floyd–Warshall backend at small W, the bounded-stretch guarantee, the
+structural/cost epoch-dedup split, and the auto backend policy."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import linkstate, topology
+
+
+def _down(up, mesh, a, b):
+    """Mark the (a, b) link down in both directions in up-row `up`."""
+    nbr = mesh.neighbor_table
+    for d in range(4):
+        if nbr[a, d] == b:
+            up[a, d] = False
+            up[b, linkstate.OPPOSITE[d]] = False
+
+
+def _mixed_schedule(mesh, uniform_tau=False):
+    """3-epoch schedule: clean epoch, scattered outages, isolated corner.
+    With `uniform_tau` every link costs 3; otherwise the inter-row τ
+    oscillates per boundary (the constellation's axis-separable shape)."""
+    W = mesh.num_workers
+    E = 3
+    tau = np.full((E, W, 4), 3, np.int32)
+    if not uniform_tau:
+        rows = mesh.coords[:, 0]
+        for e in range(E):
+            bump = (rows + e) % 3
+            tau[e, :, linkstate.SOUTH] = 3 + bump
+            tau[e, :, linkstate.NORTH] = 3 + ((rows - 1) % mesh.rows + e) % 3
+    up = np.ones((E, W, 4), bool)
+    for a, b in [(9, 10), (17, 25), (35, 36), (0, 8)]:
+        _down(up[1], mesh, a, b)
+    nbr = mesh.neighbor_table
+    for d in range(4):  # epoch 2: corner worker W-1 fully isolated
+        v = nbr[W - 1, d]
+        if v >= 0:
+            _down(up[2], mesh, W - 1, v)
+    starts = np.asarray([0, 40, 90], np.int32)
+    return linkstate.LinkStateSchedule(
+        starts, tau, up, np.ones((E, W), np.int32)).validate(mesh)
+
+
+def _all_pairs(tbl, e, mesh):
+    W = mesh.num_workers
+    return np.stack([
+        np.asarray(linkstate.flight_ticks(
+            tbl, e, jnp.full((W,), s, jnp.int32), jnp.arange(W),
+            mesh.rows, mesh.cols, mesh.torus_full()))
+        for s in range(W)
+    ])
+
+
+@pytest.mark.parametrize("torus", [False, True])
+def test_sparse_bounded_stretch_and_components_match_oracle(torus):
+    """Acceptance: for every epoch and every connected pair, the sparse
+    price sits in [dense, dense + stretch_add]; component ids and
+    unreachability (the base-cost fallback) are identical to the dense
+    backend's, elementwise."""
+    mesh = topology.MeshTopology.grid(8, 8, torus=torus)
+    sched = _mixed_schedule(mesh)
+    sparse, st = linkstate.build_tables(sched, mesh, routing="sparse",
+                                        patch=(4, 4))
+    dense, _ = linkstate.build_tables(sched, mesh, routing="dense")
+    np.testing.assert_array_equal(np.asarray(sparse.comp),
+                                  np.asarray(dense.comp))
+    W = mesh.num_workers
+    for e in range(3):
+        want = topology.detour_matrix(mesh, sched.link_tau[e],
+                                      sched.link_up[e])
+        got = _all_pairs(sparse, e, mesh)
+        reach = want < topology.UNREACHABLE
+        assert (got[reach] >= want[reach]).all()
+        assert (got[reach] - want[reach]).max() <= st.stretch_add
+        # unreachable pairs fall back to the nominal dimension-order base,
+        # exactly like the dense backend
+        np.testing.assert_array_equal(got[~reach],
+                                      _all_pairs(dense, e, mesh)[~reach])
+        sc = np.asarray(linkstate.same_component(
+            sparse, e, jnp.arange(W), jnp.zeros((W,), jnp.int32)))
+        np.testing.assert_array_equal(sc, want[:, 0] < topology.UNREACHABLE)
+
+
+@pytest.mark.parametrize("torus", [False, True])
+def test_sparse_within_patch_exact_under_uniform_tau(torus):
+    """Same-patch pairs in clean patches price exactly under uniform τ
+    (where the in-patch dimension-order path IS a live shortest path —
+    the documented exactness domain), even with outages elsewhere."""
+    mesh = topology.MeshTopology.grid(8, 8, torus=torus)
+    sched = _mixed_schedule(mesh, uniform_tau=True)
+    sparse, _ = linkstate.build_tables(sched, mesh, routing="sparse",
+                                       patch=(4, 4))
+    pid, _n = topology.patch_ids(mesh, 4, 4)
+    det_idx = np.asarray(sparse.detour_idx)
+    clean = np.asarray(sparse.patch_clean)
+    for e in range(3):
+        want = topology.detour_matrix(mesh, sched.link_tau[e],
+                                      sched.link_up[e])
+        got = _all_pairs(sparse, e, mesh)
+        reach = want < topology.UNREACHABLE
+        same_clean = (pid[:, None] == pid[None, :]) & clean[det_idx[e]][pid][:, None]
+        np.testing.assert_array_equal(got[same_clean & reach],
+                                      want[same_clean & reach])
+
+
+def test_epoch_dedup_splits_structural_and_cost_keys():
+    """Satellite: τ-only oscillation with an unchanged live-link mask must
+    reuse the structural half (components / patches / landmarks) and only
+    rebuild costs; a fully repeated (τ, up) epoch reuses both."""
+    mesh = topology.MeshTopology.grid(4, 4)
+    W = mesh.num_workers
+    E = 4
+    tau = np.full((E, W, 4), 2, np.int32)
+    tau[1] += 1          # τ changes, same outage structure
+    tau[3] = tau[1]      # exact repeat of epoch 1
+    up = np.ones((E, W, 4), bool)
+    for e in range(E):
+        _down(up[e], mesh, 5, 6)
+    sched = linkstate.LinkStateSchedule(
+        np.asarray([0, 10, 20, 30], np.int32), tau, up,
+        np.ones((E, W), np.int32)).validate(mesh)
+    for routing in ("dense", "sparse"):
+        tbl, st = linkstate.build_tables(sched, mesh, routing=routing)
+        assert st.outage_epochs == 4
+        assert st.struct_classes == 1          # one live-link mask
+        assert st.struct_dedup_hits == 3       # reused by epochs 1..3
+        assert st.cost_classes == 2            # two distinct τ rows
+        assert st.cost_dedup_hits == 2         # epoch 2 (=0) and 3 (=1)
+        # epochs with identical (τ, up) share one table slot
+        idx = np.asarray(tbl.detour_idx)
+        assert idx[1] == idx[3] and idx[0] == idx[2] and idx[0] != idx[1]
+
+
+def test_sparse_storage_is_osublinear_and_auto_policy():
+    """Sparse tables shrink the per-epoch footprint by an asymptotic factor
+    (O(W·L) vs O(W²)); `resolve_routing('auto')` flips to sparse at the
+    documented worker-count threshold."""
+    mesh = topology.MeshTopology.grid(16, 16)
+    W = mesh.num_workers
+    tau = np.full((2, W, 4), 2, np.int32)
+    up = np.ones((2, W, 4), bool)
+    _down(up[1], mesh, 5, 6)
+    sched = linkstate.LinkStateSchedule(
+        np.asarray([0, 50], np.int32), tau, up,
+        np.ones((2, W), np.int32)).validate(mesh)
+    sparse, st_s = linkstate.build_tables(sched, mesh, routing="sparse",
+                                          patch=(8, 8))
+    dense, st_d = linkstate.build_tables(sched, mesh, routing="dense")
+    assert linkstate.table_bytes(sparse) == st_s.table_bytes
+    assert st_s.table_bytes * 8 < st_d.table_bytes
+    # dense_equiv counts the (K, W, W) detour payload the sparse build
+    # avoided; the dense backend's measured bytes add idx/comp on top
+    assert st_s.dense_equiv_bytes <= st_d.table_bytes
+    assert st_s.dense_equiv_bytes == 1 * W * W * 4
+    assert st_s.num_landmarks >= st_s.num_patches > 1
+    assert linkstate.resolve_routing("auto", 4095) == "dense"
+    assert linkstate.resolve_routing("auto",
+                                     linkstate.SPARSE_AUTO_MIN_WORKERS) == "sparse"
+    assert linkstate.resolve_routing("dense", 10**6) == "dense"
+    with pytest.raises(ValueError):
+        linkstate.resolve_routing("banana", 64)
+
+
+def test_simulate_accepts_prebuilt_sparse_tables():
+    """`simulate(linkstate=<LinkStateArrays>)` uses prebuilt device tables
+    verbatim — and a sparse-backed run completes with the same certified
+    result as the dense-backed one (leaf sums don't depend on pricing)."""
+    from repro.core import simulator, stealing, tasks
+    mesh = topology.MeshTopology.grid(3, 3, torus=True)
+    W = mesh.num_workers
+    tau = np.full((2, W, 4), 2, np.int32)
+    up = np.ones((2, W, 4), bool)
+    rows = mesh.coords[:, 0]
+    up[1, rows == 0, linkstate.NORTH] = False
+    up[1, rows == mesh.rows - 1, linkstate.SOUTH] = False
+    sched = linkstate.LinkStateSchedule(
+        np.asarray([0, 30], np.int32), tau, up,
+        np.ones((2, W), np.int32)).validate(mesh)
+    wl = tasks.FibWorkload(n=16, cutoff=8, max_leaf_cost=8)
+    cfg = simulator.SimConfig(strategy=stealing.Strategy.NEIGHBOR,
+                              capacity=128, max_ticks=100_000)
+    prebuilt, _ = linkstate.build_tables(sched, mesh, routing="sparse")
+    r_pre = simulator.simulate(wl, mesh, cfg, linkstate=prebuilt)
+    r_sparse = simulator.simulate(wl, mesh, cfg, linkstate=sched,
+                                  routing_backend="sparse")
+    r_dense = simulator.simulate(wl, mesh, cfg, linkstate=sched,
+                                 routing_backend="dense")
+    assert r_pre.result == r_sparse.result == r_dense.result \
+        == wl.expected_result()
+    assert r_pre.ticks == r_sparse.ticks

@@ -412,10 +412,10 @@ def test_hiwater_at_least_final_occupancy_on_truncated_run():
 
     cfg = simulator.SimConfig(strategy=stealing.Strategy.NEIGHBOR,
                               hop_ticks=3, capacity=256, max_ticks=40)
-    ft, wt, sp = simulator._fail_speed_arrays(MESH.num_workers, None, None)
+    ft, wt, fp, sp = simulator._fail_speed_arrays(MESH.num_workers, None, None)
     state, ticks, _ = simulator._sim_jit(FIB, MESH, cfg,
                                          jax.random.PRNGKey(cfg.seed),
-                                         ft, wt, sp, None)
+                                         ft, wt, fp, sp, None)
     assert int(ticks) == 40
     final = np.asarray(state.deque.size)
     assert final.sum() > 0      # truly truncated mid-run
@@ -1029,3 +1029,146 @@ def test_neighbor_beats_global_at_high_latency():
                                   max_ticks=1_000_000)
         times[strat] = simulator.simulate(wl, mesh, cfg).ticks
     assert times[stealing.Strategy.NEIGHBOR] < times[stealing.Strategy.GLOBAL]
+
+
+# --------------------------------------------------------------------------- #
+# Periodic (fail, wake) schedules
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("strategy", [stealing.Strategy.NEIGHBOR,
+                                      stealing.Strategy.GLOBAL])
+@pytest.mark.parametrize("mode", ["tick", "leap"])
+def test_periodic_single_cycle_bit_identical_to_scalar_wake(strategy, mode):
+    """Satellite regression: a periodic (fail, wake) schedule whose second
+    cycle lies beyond the horizon is the scalar `wake_time=` schedule —
+    every scalar stat AND every per-worker array must match elementwise."""
+    W = EQ_MESH.num_workers
+    ft = -np.ones(W, np.int32)
+    wt = -np.ones(W, np.int32)
+    ft[4], wt[4] = 40, 90
+    fp = -np.ones(W, np.int32)
+    fp[4] = 1 << 20                      # one cycle: next fire > max_ticks
+    cfg = simulator.SimConfig(strategy=strategy, hop_ticks=2, capacity=128,
+                              max_ticks=200_000, step_mode=mode,
+                              preshed=True, warn_ticks=10)
+    a = simulator.simulate(EQ_FIB, EQ_MESH, cfg, fail_time=ft, wake_time=wt)
+    b = simulator.simulate(EQ_FIB, EQ_MESH, cfg, fail_time=ft, wake_time=wt,
+                           fail_period=fp)
+    for f in EQ_FIELDS + ("events",):
+        assert getattr(a, f) == getattr(b, f), (
+            f"{f}: scalar={getattr(a, f)} periodic={getattr(b, f)}")
+    np.testing.assert_array_equal(a.per_worker_busy, b.per_worker_busy)
+    np.testing.assert_array_equal(a.per_worker_overflow, b.per_worker_overflow)
+    np.testing.assert_array_equal(a.per_worker_stolen, b.per_worker_stolen)
+    np.testing.assert_array_equal(a.per_worker_hiwater, b.per_worker_hiwater)
+
+
+def test_fail_period_validation():
+    W = EQ_MESH.num_workers
+    ft = -np.ones(W, np.int32)
+    wt = -np.ones(W, np.int32)
+    fp = -np.ones(W, np.int32)
+    cfg = simulator.SimConfig(strategy=stealing.Strategy.NEIGHBOR,
+                              max_ticks=100)
+    ft[2], wt[2] = 10, 20
+    for bad in (0, -3, 5, 1 << 29):      # zero/negative, wake outside cycle,
+        fp[2] = bad                       # int32-unsafe cycle
+        with pytest.raises(ValueError):
+            simulator.simulate(EQ_FIB, EQ_MESH, cfg, fail_time=ft,
+                               wake_time=wt, fail_period=fp)
+    fp[2] = 50                           # period without a wake
+    with pytest.raises(ValueError):
+        simulator.simulate(EQ_FIB, EQ_MESH, cfg, fail_time=ft,
+                           fail_period=fp)
+
+
+def _conf_second_cycle_wake(tau):
+    """Periodic eclipse on the mid-famine scenario: worker 5 sleeps in
+    [5, 40) and again in [75, 110) (period 70); the long-leaf workload
+    keeps thieves churning on empty deques, so the SECOND-cycle wake lands
+    inside a certified famine window and must clip it exactly as the
+    first-cycle wake did. Link epochs mirror both sleep intervals."""
+    mesh = EQ_MESH
+    W = mesh.num_workers
+    starts = np.asarray([0, 5, 40, 75, 110, 145, 180], np.int32)
+    E = len(starts)
+    tau_tab = np.full((E, W, 4), int(tau), np.int32)
+    for e in range(E):
+        tau_tab[e, :, linkstate.NORTH] = tau_tab[e, :, linkstate.SOUTH] = \
+            int(tau) + (e % 2)
+    up = np.ones((E, W, 4), bool)
+    nbr = mesh.neighbor_table
+    for e in (1, 3):                     # dark during both sleep cycles
+        for d in range(4):
+            if nbr[5, d] >= 0:
+                up[e, 5, d] = False
+                up[e, nbr[5, d], linkstate.OPPOSITE[d]] = False
+    ls = linkstate.LinkStateSchedule(
+        starts, tau_tab, up, np.ones((E, W), np.int32)).validate(mesh)
+    ft = -np.ones(W, np.int32)
+    wt = -np.ones(W, np.int32)
+    fp = -np.ones(W, np.int32)
+    ft[5], wt[5], fp[5] = 5, 40, 70
+    return mesh, CONF_WAKE_WL, ls, ft, wt, fp
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("strategy", [stealing.Strategy.NEIGHBOR,
+                                      stealing.Strategy.GLOBAL,
+                                      stealing.Strategy.ADAPTIVE])
+@pytest.mark.parametrize("tau", [1, 5])
+def test_second_cycle_wake_clips_famine_window(strategy, tau):
+    """Satellite: extends PR 4's conformance matrix — a mid-famine wake in
+    the SECOND eclipse cycle terminates the certified famine window exactly
+    like a first-cycle wake (leap ≡ tick bit-identical, fast path active)."""
+    mesh, wl, ls, ft, wt, fp = _conf_second_cycle_wake(tau)
+    results = {}
+    for mode in ("tick", "leap"):
+        cfg = simulator.SimConfig(strategy=strategy, capacity=128,
+                                  max_ticks=200_000, step_mode=mode,
+                                  preshed=True, warn_ticks=2)
+        results[mode] = simulator.simulate(wl, mesh, cfg, fail_time=ft,
+                                           linkstate=ls, wake_time=wt,
+                                           fail_period=fp)
+    a, b = results["tick"], results["leap"]
+    for f in EQ_FIELDS:
+        assert getattr(a, f) == getattr(b, f), (
+            f"{f}: tick={getattr(a, f)} leap={getattr(b, f)}")
+    np.testing.assert_array_equal(a.per_worker_busy, b.per_worker_busy)
+    np.testing.assert_array_equal(a.per_worker_stolen, b.per_worker_stolen)
+    assert a.ticks > 110     # the run actually reaches the second-cycle wake
+    assert b.events < b.ticks  # famine churn still collapses around wakes
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("strategy", [stealing.Strategy.NEIGHBOR,
+                                      stealing.Strategy.GLOBAL,
+                                      stealing.Strategy.ADAPTIVE])
+@pytest.mark.parametrize("scenario", ["seam_detour", "multi_cycle_eclipse"])
+@pytest.mark.parametrize("tau", [1, 5])
+def test_leap_equals_tick_under_sparse_backend(strategy, scenario, tau):
+    """Acceptance: the event-leaping stepper stays bit-identical to the
+    one-tick oracle when outage pricing runs through the SPARSE hierarchical
+    tables, across strategy × {seam outage, multi-cycle eclipse} × τ."""
+    if scenario == "seam_detour":
+        mesh, wl, ls, ft, wt = CONF_SCENARIOS[scenario](tau)
+        fp = None
+    else:
+        mesh, wl, ls, ft, wt, fp = _conf_second_cycle_wake(tau)
+    preshed = ft is not None
+    results = {}
+    for mode in ("tick", "leap"):
+        cfg = simulator.SimConfig(strategy=strategy, capacity=128,
+                                  max_ticks=200_000, step_mode=mode,
+                                  preshed=preshed,
+                                  warn_ticks=2 if preshed else 0)
+        results[mode] = simulator.simulate(wl, mesh, cfg, fail_time=ft,
+                                           linkstate=ls, wake_time=wt,
+                                           fail_period=fp,
+                                           routing_backend="sparse")
+    a, b = results["tick"], results["leap"]
+    for f in EQ_FIELDS:
+        assert getattr(a, f) == getattr(b, f), (
+            f"{f}: tick={getattr(a, f)} leap={getattr(b, f)}")
+    assert (a.per_worker_busy == b.per_worker_busy).all()
+    assert (a.per_worker_overflow == b.per_worker_overflow).all()
+    assert (a.per_worker_stolen == b.per_worker_stolen).all()
