@@ -45,6 +45,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import resource
 import time
 
@@ -54,7 +55,7 @@ from repro.configs import paper_mesh
 from repro.core import constellation
 from repro.core import deque as dq
 from repro.core import linkstate
-from repro.core import simulator, stealing, topology
+from repro.core import simulator, stealing, topology, tracing
 from .common import emit
 
 STRATS = {
@@ -83,12 +84,42 @@ def _bytes_per_worker(capacity: int,
             + 20 * 4)                   # scalar lanes
 
 
+def _trace_cfg(horizon: int, ring: int, bins: int) -> tracing.TraceConfig:
+    """Size the flight recorder to the run: bins cover the horizon."""
+    return tracing.TraceConfig(
+        ring_capacity=ring, bins=bins,
+        bin_ticks=max(1, -(-horizon // bins))).validate()
+
+
+def _write_trace_artifacts(r, tag: str, mesh, strategy, tau: float,
+                           trace_dir: str, assert_complete: bool):
+    """Write the Perfetto JSON + RTT histogram for one traced run; the drop
+    counter is always surfaced (CI asserts it is 0 at the sized ring)."""
+    os.makedirs(trace_dir, exist_ok=True)
+    pj = os.path.join(trace_dir, f"TRACE_{tag}.perfetto.json")
+    hj = os.path.join(trace_dir, f"TRACE_{tag}.hist.json")
+    tracing.write_chrome_trace(pj, r.trace, mesh_rows=mesh.rows,
+                               mesh_cols=mesh.cols,
+                               timeseries=r.timeseries)
+    tracing.write_attempt_latency_hist(hj, r.trace, strategy=strategy,
+                                       num_workers=mesh.num_workers,
+                                       tau=float(tau))
+    print(f"trace[{tag}]: emitted={r.trace.emitted} "
+          f"dropped={r.trace.dropped} -> {pj}")
+    if assert_complete and r.trace.dropped > 0:
+        raise SystemExit(
+            f"trace[{tag}]: ring dropped {r.trace.dropped} events — "
+            f"resize --trace-ring above {r.trace.emitted}")
+    return dict(emitted=r.trace.emitted, dropped=r.trace.dropped,
+                perfetto=pj, hist=hj)
+
+
 def _run(wl, mesh, strategy, step_mode, max_ticks, hop_ticks, capacity,
-         deque_backend=None):
+         deque_backend=None, trace_cfg=None):
     cfg = simulator.SimConfig(strategy=strategy, hop_ticks=hop_ticks,
                               capacity=capacity, max_ticks=max_ticks,
                               step_mode=step_mode,
-                              deque_backend=deque_backend)
+                              deque_backend=deque_backend, trace=trace_cfg)
     t0 = time.perf_counter()
     r = simulator.simulate(wl, mesh, cfg)
     compile_wall = time.perf_counter() - t0
@@ -120,7 +151,7 @@ def _dynamic_constellation(W: int, tau_base: int, orbits: int):
 
 
 def _run_dynamic(wl, con, sched, strategy, routing, orbits, orbit_ticks,
-                 capacity, deque_backend):
+                 capacity, deque_backend, trace_cfg=None):
     """One leap-mode dynamic run against prebuilt routing tables; returns
     the SimResult, wall, compile wall, and the routing build stats."""
     mesh = con.mesh
@@ -135,7 +166,7 @@ def _run_dynamic(wl, con, sched, strategy, routing, orbits, orbit_ticks,
         strategy=strategy, capacity=capacity,
         max_ticks=orbits * orbit_ticks, step_mode="leap",
         preshed=True, warn_ticks=con.cfg.warn_ticks,
-        deque_backend=deque_backend)
+        deque_backend=deque_backend, trace=trace_cfg)
     t0 = time.perf_counter()
     r = simulator.simulate(wl, mesh, cfg, fail_time=pred_fail,
                            linkstate=tbl, wake_time=sched.wake_time,
@@ -154,7 +185,9 @@ def run(workers=(100, 640, 2500), strategies=("global", "neighbor", "adaptive"),
         leap_only: bool = False, capacity: int = 2048,
         max_ticks: int | None = None, deque_backend: str | None = None,
         routing: str = "auto", dynamic: bool = False, orbits: int = 2,
-        rss_budget_mb: float | None = None):
+        rss_budget_mb: float | None = None, trace: bool = False,
+        trace_dir: str = ".", trace_ring: int = 65536,
+        trace_bins: int = 256, trace_assert_complete: bool = False):
     wl = paper_mesh.CONFIG.fib_granular
     results = {}
     for W in workers:
@@ -162,10 +195,12 @@ def run(workers=(100, 640, 2500), strategies=("global", "neighbor", "adaptive"),
         if dynamic:
             con, sched, orbit_ticks = _dynamic_constellation(W, taus[0],
                                                              orbits)
+            tcfg = (_trace_cfg(orbits * orbit_ticks, trace_ring, trace_bins)
+                    if trace else None)
             for sname in strategies:
                 r, wall, cwall, stats, build_s = _run_dynamic(
                     wl, con, sched, STRATS[sname], routing, orbits,
-                    orbit_ticks, capacity, deque_backend)
+                    orbit_ticks, capacity, deque_backend, trace_cfg=tcfg)
                 table_mb = stats.table_bytes / 2**20
                 dense_mb = stats.dense_equiv_bytes / 2**20
                 results[(W, sname, taus[0])] = dict(
@@ -192,6 +227,12 @@ def run(workers=(100, 640, 2500), strategies=("global", "neighbor", "adaptive"),
                         eps=r.events / max(wall, 1e-9),
                         util=r.utilization, overflow=r.overflow,
                         hiwater=int(r.per_worker_hiwater.max()))))
+                if trace:
+                    results[(W, sname, taus[0])]["trace"] = \
+                        _write_trace_artifacts(
+                            r, f"dyn_{sname}_W{W}", con.mesh,
+                            STRATS[sname], taus[0], trace_dir,
+                            trace_assert_complete)
                 emit(f"bench_sim_dyn/{sname}/W={W}/orbits={orbits}",
                      wall * 1e6,
                      f"ticks={r.ticks};events={r.events};"
@@ -208,13 +249,18 @@ def run(workers=(100, 640, 2500), strategies=("global", "neighbor", "adaptive"),
             cap = TICK_CAPS.get(W, 20_000)
             if quick:
                 cap = min(cap, 4_000)
+        tcfg = _trace_cfg(cap, trace_ring, trace_bins) if trace else None
         for sname in strategies:
             for tau in taus:
                 per = {}
+                trace_info = None
                 modes = ("leap",) if leap_only else ("leap", "tick")
                 for mode in modes:
+                    # when tracing, BOTH modes carry the recorder so the
+                    # tick-vs-leap speedup stays like-for-like
                     r, wall, cwall = _run(wl, mesh, STRATS[sname], mode,
-                                          cap, tau, capacity, deque_backend)
+                                          cap, tau, capacity, deque_backend,
+                                          trace_cfg=tcfg)
                     per[mode] = dict(ticks=r.ticks, events=r.events, wall=wall,
                                      compile_wall=cwall,
                                      tps=r.ticks / max(wall, 1e-9),
@@ -222,12 +268,19 @@ def run(workers=(100, 640, 2500), strategies=("global", "neighbor", "adaptive"),
                                      util=r.utilization,
                                      overflow=r.overflow,
                                      hiwater=int(r.per_worker_hiwater.max()))
+                    if trace and mode == "leap":
+                        trace_info = _write_trace_artifacts(
+                            r, f"{sname}_W{W}_tau{tau}", mesh,
+                            STRATS[sname], tau, trace_dir,
+                            trace_assert_complete)
                 leap = per["leap"]
                 leap_factor = leap["ticks"] / max(leap["events"], 1)
                 bpw = _bytes_per_worker(capacity)
                 extra = dict(W=W, leap_factor=leap_factor,
                              bytes_per_worker=bpw,
                              deque_backend=deque_backend or "auto")
+                if trace_info is not None:
+                    extra["trace"] = trace_info
                 derived = (f"ticks={leap['ticks']};events={leap['events']};"
                            f"leap_factor={leap_factor:.1f}x;"
                            f"leap_tps={leap['tps']:.0f};"
@@ -304,6 +357,21 @@ def main():
     ap.add_argument("--json", default=None,
                     help="write consolidated results JSON here "
                          "(e.g. BENCH_sim.json)")
+    ap.add_argument("--trace", action="store_true",
+                    help="run with the flight recorder on and write Perfetto "
+                         "JSON + per-attempt RTT histogram artifacts per "
+                         "leap run (tick runs also carry the recorder so "
+                         "the speedup ratio stays like-for-like)")
+    ap.add_argument("--trace-dir", default=".",
+                    help="directory for TRACE_*.perfetto.json / *.hist.json")
+    ap.add_argument("--trace-ring", type=int, default=65536,
+                    help="event-ring capacity; size it from the reported "
+                         "drop counter (0 dropped = complete trace)")
+    ap.add_argument("--trace-bins", type=int, default=256,
+                    help="time-series bins; bin width = horizon / bins")
+    ap.add_argument("--trace-assert-complete", action="store_true",
+                    help="fail if any traced run drops ring events "
+                         "(the CI smoke pins drop counter == 0)")
     args = ap.parse_args()
     workers = tuple(args.workers) if args.workers else (
         (100,) if args.quick else (100, 640, 2500))
@@ -317,7 +385,10 @@ def main():
         capacity=args.capacity, max_ticks=args.max_ticks,
         deque_backend=args.deque_backend, routing=args.routing_backend,
         dynamic=args.dynamic, orbits=args.orbits,
-        rss_budget_mb=args.rss_budget_mb)
+        rss_budget_mb=args.rss_budget_mb, trace=args.trace,
+        trace_dir=args.trace_dir, trace_ring=args.trace_ring,
+        trace_bins=args.trace_bins,
+        trace_assert_complete=args.trace_assert_complete)
 
 
 if __name__ == "__main__":

@@ -30,12 +30,13 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import json
+import os
 import time
 
 import numpy as np
 
 from repro.configs import paper_mesh
-from repro.core import constellation, simulator, stealing, tasks
+from repro.core import constellation, simulator, stealing, tasks, tracing
 from .common import emit
 
 STRATS = {
@@ -50,7 +51,9 @@ def _workload(quick: bool) -> tasks.FibWorkload:
             else tasks.FibWorkload(n=30, cutoff=13, max_leaf_cost=48))
 
 
-def run(quick: bool = False, json_path: str | None = None, orbits: int = 1):
+def run(quick: bool = False, json_path: str | None = None, orbits: int = 1,
+        trace: bool = False, trace_dir: str = ".",
+        trace_ring: int = 65536, trace_bins: int = 256):
     ccfg = (paper_mesh.CONFIG.orbit_quick if quick
             else paper_mesh.CONFIG.orbit)
     wl = _workload(quick)
@@ -70,10 +73,16 @@ def run(quick: bool = False, json_path: str | None = None, orbits: int = 1):
         n_woken = int((sched.wake_time >= 0).sum())
         for dynamic in (False, True):
             for sname, strat in STRATS.items():
+                max_ticks = max(20 * horizon, 200_000)
+                tcfg = tracing.TraceConfig(
+                    ring_capacity=trace_ring, bins=trace_bins,
+                    bin_ticks=max(1, -(-max_ticks // trace_bins))
+                ).validate() if trace else None
                 cfg = simulator.SimConfig(
                     strategy=strat, hop_ticks=static_tau, capacity=1024,
-                    max_ticks=max(20 * horizon, 200_000),
-                    preshed=eclipse, warn_ticks=cc.warn_ticks if eclipse else 0)
+                    max_ticks=max_ticks,
+                    preshed=eclipse, warn_ticks=cc.warn_ticks if eclipse else 0,
+                    trace=tcfg)
                 t0 = time.perf_counter()
                 r = simulator.simulate(
                     wl, con.mesh, cfg, fail_time=pred_fail if eclipse else None,
@@ -92,6 +101,23 @@ def run(quick: bool = False, json_path: str | None = None, orbits: int = 1):
                     epochs=ls.num_epochs, woken=n_woken if eclipse else 0,
                     periodic=int((sched.fail_period > 0).sum()) if eclipse else 0,
                     wall_s=round(wall, 3))
+                if trace:
+                    os.makedirs(trace_dir, exist_ok=True)
+                    tag = f"orbit_{sname}_dyn{int(dynamic)}_ecl{int(eclipse)}"
+                    pj = os.path.join(trace_dir, f"TRACE_{tag}.perfetto.json")
+                    hj = os.path.join(trace_dir, f"TRACE_{tag}.hist.json")
+                    tracing.write_chrome_trace(
+                        pj, r.trace, mesh_rows=con.mesh.rows,
+                        mesh_cols=con.mesh.cols, timeseries=r.timeseries)
+                    tracing.write_attempt_latency_hist(
+                        hj, r.trace, strategy=strat,
+                        num_workers=con.mesh.num_workers,
+                        tau=float(static_tau))
+                    row["trace"] = dict(emitted=r.trace.emitted,
+                                        dropped=r.trace.dropped,
+                                        perfetto=pj, hist=hj)
+                    print(f"trace[{tag}]: emitted={r.trace.emitted} "
+                          f"dropped={r.trace.dropped}")
                 rows.append(row)
                 emit(f"orbit/{sname}/dyn={int(dynamic)}/ecl={int(eclipse)}",
                      wall * 1e6,
@@ -115,9 +141,20 @@ def main():
                     help="orbital periods in the horizon (> 1 exercises the "
                          "periodic eclipse schedules)")
     ap.add_argument("--json", default=None, help="write results JSON here")
+    ap.add_argument("--trace", action="store_true",
+                    help="flight-recorder on: write Perfetto JSON + RTT "
+                         "histogram artifacts per strategy × scenario")
+    ap.add_argument("--trace-dir", default=".",
+                    help="directory for TRACE_*.json artifacts")
+    ap.add_argument("--trace-ring", type=int, default=65536,
+                    help="event-ring capacity (resize on reported drops)")
+    ap.add_argument("--trace-bins", type=int, default=256,
+                    help="time-series bins over the tick horizon")
     args = ap.parse_args()
     print("name,us_per_call,derived")
-    run(quick=args.quick, json_path=args.json, orbits=args.orbits)
+    run(quick=args.quick, json_path=args.json, orbits=args.orbits,
+        trace=args.trace, trace_dir=args.trace_dir,
+        trace_ring=args.trace_ring, trace_bins=args.trace_bins)
 
 
 if __name__ == "__main__":

@@ -11,9 +11,12 @@
 #   linkstate     — piecewise-constant time-varying link latency/availability
 #   constellation — LEO orbital model (planes, ISL variation, eclipses)
 #   balancer      — neighbor-only rebalancing of serving/training work items
+#   tracing       — in-loop flight recorder: event ring, binned time series,
+#                   Perfetto export, analytic-latency histogram overlays
 
 from . import (balancer, constellation, deque, latency, linkstate, scheduler,
-               simulator, stealing, tasks, topology)
+               simulator, stealing, tasks, topology, tracing)
 
 __all__ = ["balancer", "constellation", "deque", "latency", "linkstate",
-           "scheduler", "simulator", "stealing", "tasks", "topology"]
+           "scheduler", "simulator", "stealing", "tasks", "topology",
+           "tracing"]

@@ -46,9 +46,17 @@ def threshold(n):
 
 
 def expected_time_to_task(round_trip, p_success):
-    """Eq. 1: E[T] = per-attempt cost / success probability."""
+    """Eq. 1: E[T] = per-attempt cost / success probability.
+
+    A strategy that never succeeds has infinite expected time-to-task:
+    p_success == 0 returns exact inf (elementwise), never a NaN or an
+    arbitrary 1e-12-scaled blow-up value."""
     p = np.asarray(p_success, dtype=np.float64)
-    return np.asarray(round_trip, dtype=np.float64) / np.maximum(p, 1e-12)
+    rt = np.asarray(round_trip, dtype=np.float64)
+    rt, p = np.broadcast_arrays(rt, p)
+    out = np.full(p.shape, np.inf)
+    np.divide(rt, p, out=out, where=p > 0)
+    return out
 
 
 def neighbor_expected_time(p_neighbor, tau: float = DEFAULT_TAU_S):
@@ -60,10 +68,16 @@ def global_expected_time(n, p_global, tau: float = DEFAULT_TAU_S):
 
 
 def neighbor_wins(n, p_global, p_neighbor) -> np.ndarray:
-    """Ineq. 2: neighbor-only faster ⇔ P_g/P_n < (2/3)√N."""
-    ratio = np.asarray(p_global, dtype=np.float64) / np.maximum(
-        np.asarray(p_neighbor, dtype=np.float64), 1e-12
-    )
+    """Ineq. 2: neighbor-only faster ⇔ P_g/P_n < (2/3)√N.
+
+    p_neighbor == 0 means neighbor-only never finds work (E[T_n] = inf):
+    it cannot win, regardless of p_global — the ratio is +inf, below no
+    finite threshold (division guarded, no NaN warnings)."""
+    pg = np.asarray(p_global, dtype=np.float64)
+    pn = np.asarray(p_neighbor, dtype=np.float64)
+    pg, pn = np.broadcast_arrays(pg, pn)
+    ratio = np.full(pn.shape, np.inf)
+    np.divide(pg, pn, out=ratio, where=pn > 0)
     return ratio < threshold(n)
 
 

@@ -186,6 +186,7 @@ from . import deque as dq
 from . import linkstate as lstate
 from . import stealing, tasks
 from . import topology as topo
+from . import tracing
 
 PHASE_RUN = 0
 PHASE_REQ = 1   # steal request in flight (thief → victim)
@@ -247,6 +248,14 @@ class SimConfig:
     supervision_slots: int = 64
     warn_ticks: int = 0                # malleability: pre-shed lead time
     preshed: bool = False
+    # flight recorder (core/tracing.py): None = off — statically branched,
+    # so the disabled path compiles to exactly the untraced step graph
+    # (asserted by the zero-overhead jaxpr test). A `tracing.TraceConfig`
+    # turns on the in-loop event ring + binned time series; leap mode then
+    # emits a trace elementwise identical to the tick oracle's (bin
+    # boundaries join the leap horizons; the famine replay re-emits the
+    # failed-attempt events of the ticks it collapses).
+    trace: "tracing.TraceConfig | None" = None
 
 
 class SimState(NamedTuple):
@@ -318,6 +327,16 @@ class SimResult(NamedTuple):
     # before grants export within a tick), so the actual certificate for
     # a chosen capacity is the re-run reporting overflow == 0
     per_worker_hiwater: np.ndarray | None = None
+    # (W,) per-worker ledgers behind the scalar `attempts` / `successes`:
+    # steal attempts launched by each thief (counted at request departure)
+    # and granted-loot deliveries received (counted at response delivery).
+    # Cross-checked against trace-ring sums in tests when tracing is on.
+    per_worker_attempts: np.ndarray | None = None
+    per_worker_successes: np.ndarray | None = None
+    # flight recorder output (None unless cfg.trace is set): the finalized
+    # event ring and the (bins, channels) binned time series
+    trace: "tracing.Trace | None" = None
+    timeseries: "tracing.TimeSeries | None" = None
 
 
 def _mesh_tables(mesh: topo.MeshTopology, strategy: stealing.Strategy):
@@ -702,6 +721,22 @@ def _scheduled_horizons(ne, t, alive, fail_time, wake_time, fail_period,
     # an epoch boundary (τ, link availability, and speed all switch there)
     if ls is not None:
         ne = jnp.minimum(ne, lstate.next_change(ls.epoch_starts, t, _NEVER))
+        if cfg.trace is not None:
+            # the EPOCH ring event is stamped by tick_fn at the flip tick
+            # itself, so under tracing a window may never *start* at an
+            # epoch boundary the stepper didn't execute: clip inclusively
+            # (>= t, vs next_change's strictly-after), matching the
+            # inclusive `_next_fire` semantics deaths and wakes already
+            # have. When t is a boundary this yields a delta-0 leap and the
+            # next iteration runs tick_fn there — one extra loop iteration
+            # per flip, traced runs only.
+            ne = jnp.minimum(ne, jnp.min(jnp.where(
+                ls.epoch_starts >= t, ls.epoch_starts, _NEVER)))
+    # flight recorder: a window's bulk time-series contribution is scattered
+    # into ONE bin, so windows may never straddle a bin boundary (static
+    # branch — untraced runs compile without this term)
+    if cfg.trace is not None:
+        ne = jnp.minimum(ne, tracing.next_bin_boundary(cfg.trace, t, _NEVER))
     return ne
 
 
@@ -859,8 +894,19 @@ def _sim_core(workload, mesh: topo.MeshTopology, cfg: SimConfig, key0,
         ckpt_count=jnp.int32(0), overflow=z, stolen_from=z,
         hiwater=deques.size)
 
+    # flight recorder: () when disabled — every emission site below sits
+    # behind a static `if trc is not None`, so the untraced while_loop body
+    # is exactly the pre-trace graph. The recorder rides the loop carry
+    # OUTSIDE SimState: TC rollbacks restore the snapshot, but the trace is
+    # an observability layer (like `hiwater`) and must keep the discarded
+    # timeline.
+    trc = cfg.trace
+    tr0 = (tracing.init(trc, W, jnp.sum(deques.size) == 0)
+           if trc is not None else ())
+
     def tick_fn(carry):
-        state, snap, t = carry
+        state, snap, tr, t = carry
+        st_in = state  # entry state: the tick's time-series deltas baseline
         key = jax.random.fold_in(key0, t)
         alive = state.alive
         if ls is None:
@@ -1028,14 +1074,16 @@ def _sim_core(workload, mesh: topo.MeshTopology, cfg: SimConfig, key0,
         idle = running & (~burning) & (~popped) & (ses.size == 0)
         # retired workers (warned of shutdown) must not pull work back in
         idle = idle & ~_retired_mask(cfg, fail_time, fail_period, t, W)
-        victim_new = _select(cfg, tbl, key, idle, state.fails, W, link)
+        fails_sel = state.fails  # fails row the draw (and its gate) sees
+        victim_new = _select(cfg, tbl, key, idle, fails_sel, W, link)
         has_victim = victim_new >= 0
+        reach = None
         if ls is not None:
             # route-around: a victim with no live route (other component)
             # is unreachable — the flight never departs, no attempt is
             # counted, and the thief redraws at its next active tick.
-            has_victim = has_victim & lstate.same_component(
-                ls, eidx, jnp.arange(W), victim_new)
+            reach = lstate.same_component(ls, eidx, jnp.arange(W), victim_new)
+            has_victim = has_victim & reach
         vhops = jnp.where(has_victim,
                           _hop_dist(mesh, tbl["coords"], victim_new), 0)
         if ls is None:
@@ -1131,6 +1179,76 @@ def _sim_core(workload, mesh: topo.MeshTopology, cfg: SimConfig, key0,
         # the ONE fused commit of every staged deque mutation this tick
         # (loop backend: already-committed state, a no-op here)
         deque_ = ses.finish()
+
+        # ------------- flight recorder: canonical per-tick emission -------- #
+        # Fixed order (so leap-mode rings compare elementwise against the
+        # oracle's): DEATH, WAKE, EPOCH, NO_LIVE_VICTIM, attempt
+        # resolutions, OVERFLOW, FAMINE transitions — then the tick's
+        # time-series deltas against the entry state.
+        if trc is not None:
+            warr = jnp.arange(W)
+            ep_lane = eidx if ls is not None else jnp.int32(0)
+            tr = tracing.emit(tr, trc, dying_now, tick=t,
+                              kind=tracing.EV_DEATH, worker=warr, victim=-1,
+                              epoch=ep_lane)
+            tr = tracing.emit(tr, trc, waking, tick=t, kind=tracing.EV_WAKE,
+                              worker=warr, victim=-1, epoch=ep_lane)
+            if ls is not None:
+                tr = tracing.emit1(
+                    tr, trc, (t > 0) & jnp.any(ls.epoch_starts == t),
+                    tick=t, kind=tracing.EV_EPOCH, epoch=ep_lane)
+                # a comp-gated draw never departs — but emit only for
+                # workers that COULD attempt under this epoch's link state:
+                # a fully victimless worker re-draws every oracle tick, and
+                # those ticks are provably eventless (the leap skips them;
+                # `_can_attempt` is the shared predicate, with the same
+                # fails row the draw itself saw)
+                can_try = _can_attempt(cfg, tbl, ls, eidx, fails_sel, W)
+                no_live = idle & (victim_new >= 0) & ~reach & can_try
+                tr = tracing.emit(
+                    tr, trc, no_live, tick=t, kind=tracing.EV_NO_LIVE_VICTIM,
+                    worker=warr, victim=victim_new,
+                    hops=_hop_dist(mesh, tbl["coords"],
+                                   jnp.clip(victim_new, 0, W - 1)),
+                    epoch=ep_lane)
+            # attempt resolution at request arrival: the request leg was
+            # banked in the (W,) req_ticks lane at departure, so the rtt
+            # lane prices the full round trip (incl. route-around detours)
+            req_lane = jnp.where(start_req, req_ticks, tr.req_ticks)
+            tr = tr._replace(req_ticks=req_lane)
+            kind_arr = jnp.where(
+                ~valid_victim, tracing.EV_SEVERED_DENIAL,
+                jnp.where(got, tracing.EV_GRANTED, tracing.EV_EMPTY_VICTIM))
+            tr = tracing.emit(tr, trc, arriving, tick=t, kind=kind_arr,
+                              worker=warr, victim=victim, hops=back_hops,
+                              rtt=req_lane + back_ticks, epoch=ep_lane)
+            # net per-tick overflow increase (a TC rollback can rewind the
+            # counter — the trace keeps the discarded timeline, so only
+            # fresh drops re-emit)
+            ovf_delta = overflow - st_in.overflow
+            tr = tracing.emit(tr, trc, ovf_delta > 0, tick=t,
+                              kind=tracing.EV_OVERFLOW, worker=warr,
+                              victim=-1, rtt=jnp.maximum(ovf_delta, 0),
+                              epoch=ep_lane)
+            # famine flag: end-of-tick total stealable supply == 0. Sizes
+            # only change at deque-op ticks — always tick_fn-executed in
+            # both modes — so the flag provably cannot toggle at skipped or
+            # replayed ticks.
+            famine_now = jnp.sum(deque_.size) == 0
+            tr = tracing.emit1(tr, trc, famine_now & ~tr.famine, tick=t,
+                               kind=tracing.EV_FAMINE_ENTER, epoch=ep_lane)
+            tr = tracing.emit1(tr, trc, ~famine_now & tr.famine, tick=t,
+                               kind=tracing.EV_FAMINE_EXIT, epoch=ep_lane)
+            tr = tr._replace(famine=famine_now)
+            tr = tracing.ts_add(
+                tr, trc, t,
+                busy=jnp.sum(busy) - jnp.sum(st_in.busy),
+                queue=jnp.sum(deque_.size),
+                inflight=jnp.sum(steal_wait) - jnp.sum(st_in.steal_wait),
+                attempts=jnp.sum(attempts) - jnp.sum(st_in.attempts),
+                successes=jnp.sum(successes) - jnp.sum(st_in.successes),
+                alive=jnp.sum(alive.astype(jnp.int32)))
+
         new_state = state._replace(
             deque=deque_, acc=acc, work=work, fails=fails, phase=phase,
             timer=timer, victim=victim, loot=loot, got=got_flight & ~delivered,
@@ -1140,9 +1258,9 @@ def _sim_core(workload, mesh: topo.MeshTopology, cfg: SimConfig, key0,
             hiwater=jnp.maximum(state.hiwater, deque_.size))
         live = (jnp.sum(deque_.size) + jnp.sum(work)
                 + jnp.sum((got_flight & ~delivered).astype(jnp.int32))) > 0
-        return new_state, snap, t + 1, live
+        return new_state, snap, tr, t + 1, live
 
-    def leap(state: SimState, t, live, ne):
+    def leap(state: SimState, tr, t, live, ne):
         """Fused fast-forward over the dead ticks in [t, ne) — `ne` is the
         caller-supplied `_next_event` horizon for the current state.
 
@@ -1174,17 +1292,27 @@ def _sim_core(workload, mesh: topo.MeshTopology, cfg: SimConfig, key0,
         # in-flight messages: timers tick down, thieves accumulate wait
         flight = (state.phase != PHASE_RUN) & state.alive
         dflt = jnp.where(flight, delta, 0)
+        if trc is not None:
+            # bulk window contribution [t, t+delta): sizes and liveness are
+            # frozen over a leap window, and `_scheduled_horizons` clipped
+            # delta at the next bin boundary, so the whole window lands in
+            # tick t's bin — identical to the oracle's per-tick adds
+            tr = tracing.ts_add(
+                tr, trc, t, busy=jnp.sum(nact),
+                queue=jnp.sum(state.deque.size) * delta,
+                inflight=jnp.sum(dflt), attempts=0, successes=0,
+                alive=jnp.sum(state.alive.astype(jnp.int32)) * delta)
         return state._replace(
             timer=state.timer - dflt,
             steal_wait=state.steal_wait + dflt,
             work=state.work - nact,
-            busy=state.busy + nact), t + delta, live & ~drained
+            busy=state.busy + nact), tr, t + delta, live & ~drained
 
     FB = cfg.famine_batch
     famine_on = (cfg.step_mode == "leap" and FB > 0
                  and cfg.strategy is not stealing.Strategy.LIFELINE)
 
-    def famine_ff(state: SimState, t, live, ne_all):
+    def famine_ff(state: SimState, tr, t, live, ne_all):
         """Collapse up to FB ticks of deterministically failing probe cycles
         into this loop iteration (the famine-churn fast path).
 
@@ -1207,7 +1335,7 @@ def _sim_core(workload, mesh: topo.MeshTopology, cfg: SimConfig, key0,
         # otherwise the plain leap jumps the stretch for free
         pred = live & (delta > 0) & (ne_all < jnp.minimum(hi, t + FB))
 
-        def fast(state, t, live):
+        def fast(state, tr, t, live):
             if ls is None:
                 eidx0, sp0 = None, speed
                 nbr_tab, tau_row = tbl["neighbors"], None
@@ -1222,13 +1350,19 @@ def _sim_core(workload, mesh: topo.MeshTopology, cfg: SimConfig, key0,
             empty0 = state.deque.size == 0
             alive0 = state.alive
             got0 = state.got
+            ep0 = eidx0 if ls is not None else jnp.int32(0)
             frozen_supply = (jnp.sum(state.deque.size)
                              + jnp.sum(got0.astype(jnp.int32)))
             warr = jnp.arange(W)
 
             def step(carry, xs):
-                (phase, timer, victim, fails, work, loot, attempts, busy,
-                 steal_wait, hops_lo, hops_hi, t_c, live_c) = carry
+                if trc is not None:
+                    (phase, timer, victim, fails, work, loot, attempts, busy,
+                     steal_wait, hops_lo, hops_hi, t_c, live_c,
+                     ev, n, req_lane) = carry
+                else:
+                    (phase, timer, victim, fails, work, loot, attempts, busy,
+                     steal_wait, hops_lo, hops_hi, t_c, live_c) = carry
                 j, near_j, far_j = xs
                 act = live_c & (j < delta)
                 tj = t + j
@@ -1252,8 +1386,24 @@ def _sim_core(workload, mesh: topo.MeshTopology, cfg: SimConfig, key0,
                     # mirror the tick path's departure gate: a draw in a
                     # different live-link component never launches (only
                     # GLOBAL can draw one — near/far tables are masked)
-                    start_req = start_req & (
-                        comp0[jnp.clip(victim_new, 0, W - 1)] == comp0)
+                    same_c = comp0[jnp.clip(victim_new, 0, W - 1)] == comp0
+                    start_req = start_req & same_c
+                    if trc is not None:
+                        # re-emit the gated-draw events the collapsed ticks
+                        # would have produced, under the identical
+                        # attempt-capability gate the oracle applies (fails
+                        # from the replay carry — deliveries inside the
+                        # window do advance it)
+                        no_live = (idle & (victim_new >= 0) & ~same_c
+                                   & _can_attempt(cfg, tbl, ls, eidx0,
+                                                  fails, W))
+                        ev, n = tracing.emit_raw(
+                            ev, n, trc.ring_capacity, no_live, tick=tj,
+                            kind=tracing.EV_NO_LIVE_VICTIM, worker=warr,
+                            victim=victim_new,
+                            hops=_hop_dist(mesh, tbl["coords"],
+                                           jnp.clip(victim_new, 0, W - 1)),
+                            epoch=ep0)
                 vhops = jnp.where(start_req,
                                   _hop_dist(mesh, tbl["coords"], victim_new), 0)
                 if ls is None:
@@ -1267,6 +1417,10 @@ def _sim_core(workload, mesh: topo.MeshTopology, cfg: SimConfig, key0,
                 victim = jnp.where(start_req, victim_new, victim)
                 attempts = attempts + start_req.astype(jnp.int32)
                 hop_units = jnp.sum(jnp.where(start_req, vhops, 0))
+                if trc is not None:
+                    # bank the request leg for the rtt lane, as the oracle
+                    # tick does at departure
+                    req_lane = jnp.where(start_req, req_ticks, req_lane)
                 # ---- phase REQ: flight / arrival (grant always fails) --- #
                 in_req = (phase == PHASE_REQ) & alive0 & act
                 timer = jnp.where(in_req, jnp.maximum(timer - 1, 0), timer)
@@ -1279,6 +1433,24 @@ def _sim_core(workload, mesh: topo.MeshTopology, cfg: SimConfig, key0,
                     back_ticks = jnp.where(resp_start, lstate.flight_ticks(
                         ls, eidx0, victim, warr,
                         mesh.rows, mesh.cols, torus_full), 0)
+                if trc is not None:
+                    # every arrival in a certified famine window fails; the
+                    # oracle's classification needs only window-frozen state
+                    # (alive + component rows): a dead or severed victim is
+                    # the nominal-RTT timeout denial, a live reachable one
+                    # the empty-victim miss. GRANTED is impossible here by
+                    # the window certificate.
+                    v_c = jnp.clip(victim, 0, W - 1)
+                    valid0 = alive0[v_c]
+                    if comp0 is not None:
+                        valid0 = valid0 & (comp0[v_c] == comp0)
+                    kind_a = jnp.where(valid0, tracing.EV_EMPTY_VICTIM,
+                                       tracing.EV_SEVERED_DENIAL)
+                    ev, n = tracing.emit_raw(
+                        ev, n, trc.ring_capacity, resp_start, tick=tj,
+                        kind=kind_a, worker=warr, victim=victim,
+                        hops=back_hops, rtt=req_lane + back_ticks,
+                        epoch=ep0)
                 phase = jnp.where(resp_start, PHASE_RESP, phase)
                 timer = jnp.where(resp_start, back_ticks, timer)
                 hop_units = hop_units + jnp.sum(jnp.where(resp_start,
@@ -1297,47 +1469,86 @@ def _sim_core(workload, mesh: topo.MeshTopology, cfg: SimConfig, key0,
                 live_c = jnp.where(act,
                                    (jnp.sum(work) + frozen_supply) > 0, live_c)
                 t_c = t_c + act.astype(jnp.int32)
-                return (phase, timer, victim, fails, work, loot, attempts,
-                        busy, steal_wait, hops_lo, hops_hi, t_c, live_c), None
+                out = (phase, timer, victim, fails, work, loot, attempts,
+                       busy, steal_wait, hops_lo, hops_hi, t_c, live_c)
+                if trc is not None:
+                    out = out + (ev, n, req_lane)
+                return out, None
 
             carry0 = (state.phase, state.timer, state.victim, state.fails,
                       state.work, state.loot, state.attempts, state.busy,
                       state.steal_wait, state.hops_lo, state.hops_hi, t, live)
+            if trc is not None:
+                carry0 = carry0 + (tr.ev, tr.n, tr.req_ticks)
             xs = (jnp.arange(FB), near, far if far is not None else near)
+            out, _ = jax.lax.scan(step, carry0, xs)
             (phase, timer, victim, fails, work, loot, attempts, busy,
-             steal_wait, hops_lo, hops_hi, t_out, live_out), _ = jax.lax.scan(
-                 step, carry0, xs)
+             steal_wait, hops_lo, hops_hi, t_out, live_out) = out[:13]
             new_state = state._replace(
                 phase=phase, timer=timer, victim=victim, fails=fails,
                 work=work, loot=loot, attempts=attempts, busy=busy,
                 steal_wait=steal_wait, hops_lo=hops_lo, hops_hi=hops_hi)
-            return new_state, t_out, live_out, _next_event(
+            if trc is not None:
+                ev_out, n_out, req_out = out[13:]
+                tr = tr._replace(ev=ev_out, n=n_out, req_ticks=req_out)
+                # bulk time-series contribution of the replayed stretch —
+                # sizes, liveness, and (by the window certificate)
+                # successes are frozen, and `_famine_horizon` was clipped
+                # at the next bin boundary, so the whole window lands in
+                # tick t's bin
+                executed = t_out - t
+                tr = tracing.ts_add(
+                    tr, trc, t,
+                    busy=jnp.sum(busy) - jnp.sum(state.busy),
+                    queue=jnp.sum(state.deque.size) * executed,
+                    inflight=(jnp.sum(steal_wait)
+                              - jnp.sum(state.steal_wait)),
+                    attempts=jnp.sum(attempts) - jnp.sum(state.attempts),
+                    successes=0,
+                    alive=jnp.sum(alive0.astype(jnp.int32)) * executed)
+            return new_state, tr, t_out, live_out, _next_event(
                 new_state, t_out, speed, fail_time, wake_time, fail_period,
                 cfg, W, tbl, ls)
 
-        return jax.lax.cond(pred, fast, lambda s, tt, lv: (s, tt, lv, ne_all),
-                            state, t, live)
+        return jax.lax.cond(pred, fast,
+                            lambda s, r, tt, lv: (s, r, tt, lv, ne_all),
+                            state, tr, t, live)
 
     def cond(carry):
-        state, snap, t, live, iters = carry
+        state, snap, tr, t, live, iters = carry
         return live & (t < cfg.max_ticks)
 
     def body(carry):
-        state, snap, t, _, iters = carry
-        state, snap, t, live = tick_fn((state, snap, t))
+        state, snap, tr, t, _, iters = carry
+        state, snap, tr, t, live = tick_fn((state, snap, tr, t))
         if cfg.step_mode == "leap":
             ne = _next_event(state, t, speed, fail_time, wake_time,
                              fail_period, cfg, W, tbl, ls)
             if famine_on:
-                state, t, live, ne = famine_ff(state, t, live, ne)
-            state, t, live = leap(state, t, live, ne)
-        return state, snap, t, live, iters + 1
+                state, tr, t, live, ne = famine_ff(state, tr, t, live, ne)
+            state, tr, t, live = leap(state, tr, t, live, ne)
+        return state, snap, tr, t, live, iters + 1
 
     # non-TC modes don't carry the (W, C, T) snapshot copy through the loop
     snap0 = state0 if cfg.recovery == Recovery.TC else ()
-    state, _, ticks, _, iters = jax.lax.while_loop(
-        cond, body, (state0, snap0, jnp.int32(0), jnp.bool_(True), jnp.int32(0)))
-    return state, ticks, iters
+    state, _, tr, ticks, _, iters = jax.lax.while_loop(
+        cond, body, (state0, snap0, tr0, jnp.int32(0), jnp.bool_(True),
+                     jnp.int32(0)))
+    if trc is not None:
+        # attempts still in their request flight when the run ended: both
+        # step modes reach the identical final state, so the flush (and its
+        # ring slots) is identical too. The rtt lane carries the banked
+        # request leg — the outcome is unknown by construction.
+        pend = (state.phase == PHASE_REQ) & state.alive
+        ep_end = (lstate.epoch_index(ls.epoch_starts, ticks)
+                  if ls is not None else jnp.int32(0))
+        tr = tracing.emit(
+            tr, trc, pend, tick=ticks, kind=tracing.EV_PENDING,
+            worker=jnp.arange(W), victim=state.victim,
+            hops=_hop_dist(mesh, tbl["coords"],
+                           jnp.clip(state.victim, 0, W - 1)),
+            rtt=tr.req_ticks, epoch=ep_end)
+    return state, tr, ticks, iters
 
 
 _sim_jit = partial(jax.jit, static_argnames=("workload", "mesh", "cfg"))(_sim_core)
@@ -1363,19 +1574,24 @@ def _check_cfg(cfg: SimConfig):
         raise ValueError(f"max_ticks must stay below {int(_NEVER)}")
     if cfg.famine_batch < 0:
         raise ValueError("famine_batch must be >= 0 (0 disables the fast path)")
+    if cfg.trace is not None:
+        cfg.trace.validate()
 
 
 def _ckpt_state_bytes(mesh: topo.MeshTopology, cfg: SimConfig) -> int:
     return mesh.num_workers * cfg.capacity * 4 * 4 + mesh.num_workers * 4
 
 
-def _finalize(state, ticks, iters, mesh: topo.MeshTopology,
+def _finalize(state, tr, ticks, iters, mesh: topo.MeshTopology,
               cfg: SimConfig) -> SimResult:
     att, suc = int(state.attempts.sum()), int(state.successes.sum())
     busy = int(np.asarray(state.busy, np.int64).sum())
     t = int(ticks)
     alive_n = int(state.alive.sum())
     hop_units = (int(state.hops_hi) << _HOP_LANE_BITS) + int(state.hops_lo)
+    trace = timeseries = None
+    if cfg.trace is not None:
+        trace, timeseries = tracing.finalize(tr, cfg.trace)
     return SimResult(
         result=int(np.asarray(state.acc, np.int64).sum() % int(tasks.RESULT_MOD)),
         ticks=t, nodes=int(state.nodes.sum()), attempts=att, successes=suc,
@@ -1389,7 +1605,10 @@ def _finalize(state, ticks, iters, mesh: topo.MeshTopology,
         events=int(iters),
         per_worker_overflow=np.asarray(state.overflow),
         per_worker_stolen=np.asarray(state.stolen_from),
-        per_worker_hiwater=np.asarray(state.hiwater))
+        per_worker_hiwater=np.asarray(state.hiwater),
+        per_worker_attempts=np.asarray(state.attempts),
+        per_worker_successes=np.asarray(state.successes),
+        trace=trace, timeseries=timeseries)
 
 
 def _fail_speed_arrays(W, fail_time, speed, wake_time=None, fail_period=None):
@@ -1465,10 +1684,11 @@ def simulate(workload, mesh: topo.MeshTopology, cfg: SimConfig | None = None,
     ls = _linkstate_tables(linkstate, mesh, speed, routing_backend)
     ft, wt, fp, sp = _fail_speed_arrays(mesh.num_workers, fail_time, speed,
                                         wake_time, fail_period)
-    state, ticks, iters = _sim_jit(workload, mesh, cfg,
-                                   jax.random.PRNGKey(cfg.seed), ft, wt, fp,
-                                   sp, ls)
-    return _finalize(jax.device_get(state), ticks, iters, mesh, cfg)
+    state, tr, ticks, iters = _sim_jit(workload, mesh, cfg,
+                                       jax.random.PRNGKey(cfg.seed), ft, wt,
+                                       fp, sp, ls)
+    state, tr = jax.device_get((state, tr))
+    return _finalize(state, tr, ticks, iters, mesh, cfg)
 
 
 def simulate_batch(workload, mesh: topo.MeshTopology,
@@ -1502,11 +1722,12 @@ def simulate_batch(workload, mesh: topo.MeshTopology,
     wts = jnp.broadcast_to(wt[None], (B, W))
     fps = jnp.broadcast_to(fp[None], (B, W))
     sps = jnp.broadcast_to(sp[None], (B, W))
-    states, ticks, iters = _sim_batch_jit(workload, mesh, cfg, keys, fts,
-                                          wts, fps, sps, ls)
-    states, ticks, iters = jax.device_get((states, ticks, iters))
+    states, trs, ticks, iters = _sim_batch_jit(workload, mesh, cfg, keys, fts,
+                                               wts, fps, sps, ls)
+    states, trs, ticks, iters = jax.device_get((states, trs, ticks, iters))
     return [
-        _finalize(jax.tree.map(lambda x: x[i], states), ticks[i], iters[i],
+        _finalize(jax.tree.map(lambda x: x[i], states),
+                  jax.tree.map(lambda x: x[i], trs), ticks[i], iters[i],
                   mesh, cfg)
         for i in range(B)
     ]

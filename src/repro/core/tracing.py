@@ -1,0 +1,442 @@
+"""Flight recorder: on-device steal-attempt tracing + binned time series.
+
+The simulator's end-of-run scalars (`attempts`, `successes`, total wait
+ticks) say *how much* stealing happened, never *when* famine hit, *which*
+links priced an attempt, or how imbalance evolved across eclipse / seam
+epochs — yet per-attempt steal latency is the paper's central quantity
+(§3.3 Eq. 1 prices a strategy by the distribution of attempt round trips).
+This module records both views inside the simulator's `lax.while_loop`:
+
+  * an **event ring** — a fixed-capacity SoA buffer of int32 lanes
+    ``(tick, kind, worker, victim, hops, rtt_ticks, epoch)`` capturing every
+    steal attempt with an outcome code plus the lifecycle events around
+    them (deaths, wake-ups, link-state epoch flips, famine-window
+    enter/exit, overflow drops). The emit counter `n` is monotonic and
+    counts every event *including* the ones a full ring rejects, so
+    ``dropped = max(n - capacity, 0)`` — truncation is never silent, and
+    the drop counter is the ring-sizing guidance (re-run with a bigger
+    ring until it reads 0);
+  * a **binned time series** — a ``(bins, NUM_CHANNELS)`` scatter-add of
+    per-interval busy worker-ticks, end-of-tick total queue depth,
+    in-flight flight-ticks, attempts, successes, and alive worker-ticks
+    (the busy-fraction denominator).
+
+Leap ≡ tick trace equality
+--------------------------
+``step_mode="leap"`` must emit the **same trace** as the one-tick oracle —
+elementwise on the ring — which constrains what may be an event:
+
+  * every emitting tick is an *event tick*: attempt resolutions happen at
+    flight arrivals, deaths / wake-ups / epoch flips are scheduled
+    horizons, and the famine flag / overflow counters only change at
+    deque-op ticks — all of which the leap stepper executes via the
+    unmodified one-tick code;
+  * the famine fast path replays the probe cycles it collapses, so the
+    failed-attempt events those ticks would have emitted (unreachable
+    draws, empty-victim and severed-denial arrivals) are re-emitted from
+    the batched replay with identical lane values;
+  * an unreachable-draw event (`EV_NO_LIVE_VICTIM`) is emitted only for
+    workers that *could* attempt under the current link state
+    (`simulator._can_attempt`) — a fully victimless worker re-draws every
+    tick in the oracle but those ticks are provably eventless and the
+    leap skips them, so they must not (and do not) emit;
+  * time-series bins join the leap horizons: a leap or famine window never
+    crosses a bin boundary, so each window's bulk contribution lands in
+    exactly one bin, identical to the oracle's per-tick adds.
+
+Per-tick emission order (fixed, so rings compare elementwise): DEATH,
+WAKE, EPOCH, NO_LIVE_VICTIM, attempt resolutions (SEVERED / EMPTY /
+GRANTED), OVERFLOW, FAMINE_ENTER / FAMINE_EXIT. After the loop, attempts
+still in their request flight emit one `EV_PENDING` each, making
+``attempts == #resolved + #pending`` exact on runs without mid-flight
+deaths (a death voids its thief's in-flight attempt — the DEATH event
+marks it).
+
+Under `Recovery.TC` the trace does NOT roll back with the snapshot (it is
+an observability layer, like `hiwater`): the timeline keeps both the
+discarded and the replayed attempts, and a rollback tick can contribute
+*negative* busy/attempt deltas to its bin — that is the honest recording
+of the rewind, identical in both step modes.
+
+``SimConfig.trace`` is statically branched: with ``trace=None`` the
+simulator never calls into this module and the compiled step graph is
+bit-for-bit today's (asserted by the zero-overhead jaxpr test).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import latency
+from . import stealing
+
+# --------------------------------------------------------------------------- #
+# Event schema
+# --------------------------------------------------------------------------- #
+# Steal-attempt outcome codes (one event per attempt, stamped at the tick
+# the outcome is decided):
+EV_NO_LIVE_VICTIM = 0   # drawn victim has no live route (other component):
+                        # the flight never departs, no attempt is counted.
+                        # Stamped at the draw tick; rtt = 0.
+EV_EMPTY_VICTIM = 1     # request arrived, victim alive & reachable, but its
+                        # deque was empty (or the per-round grant budget was
+                        # exhausted). Stamped at the arrival tick.
+EV_SEVERED_DENIAL = 2   # request arrived but no grant is possible: the
+                        # victim died, or an epoch flip severed the reply
+                        # path mid-flight (the thief waits out the nominal
+                        # RTT as a timeout). Stamped at the arrival tick.
+EV_GRANTED = 3          # request arrived and a bottom task was granted.
+                        # Stamped at the arrival tick.
+EV_PENDING = 4          # attempt still in its request flight when the run
+                        # ended (counted in `attempts`, outcome unknown);
+                        # rtt lane holds the request leg only.
+# Lifecycle events (worker = the subject, victim = -1 unless noted):
+EV_DEATH = 5            # scheduled failure / shutdown fired
+EV_WAKE = 6             # eclipse exit: dead worker rejoined
+EV_EPOCH = 7            # link-state epoch flip (worker = -1, epoch = new)
+EV_FAMINE_ENTER = 8     # total stealable supply hit 0 (worker = -1)
+EV_FAMINE_EXIT = 9      # supply became nonzero again (worker = -1)
+EV_OVERFLOW = 10        # worker's deque rejected pushes this tick;
+                        # rtt lane = number of records dropped
+
+NUM_KINDS = 11
+KIND_NAMES = {
+    EV_NO_LIVE_VICTIM: "no_live_victim",
+    EV_EMPTY_VICTIM: "empty_victim",
+    EV_SEVERED_DENIAL: "severed_denial",
+    EV_GRANTED: "granted",
+    EV_PENDING: "pending",
+    EV_DEATH: "death",
+    EV_WAKE: "wake",
+    EV_EPOCH: "epoch",
+    EV_FAMINE_ENTER: "famine_enter",
+    EV_FAMINE_EXIT: "famine_exit",
+    EV_OVERFLOW: "overflow",
+}
+# attempt-kind events: one per steal attempt the thief resolved (or left
+# pending); NO_LIVE_VICTIM draws never departed, so they are *not* part of
+# the `attempts` counter reconciliation
+RESOLVED_ATTEMPT_KINDS = (EV_EMPTY_VICTIM, EV_SEVERED_DENIAL, EV_GRANTED)
+ATTEMPT_KINDS = RESOLVED_ATTEMPT_KINDS + (EV_PENDING,)
+
+# Ring lanes (SoA columns of the (capacity, NUM_LANES) int32 buffer)
+LANE_TICK = 0
+LANE_KIND = 1
+LANE_WORKER = 2   # the acting worker (thief for attempts)
+LANE_VICTIM = 3   # attempt victim; -1 for lifecycle events
+LANE_HOPS = 4     # nominal thief↔victim Manhattan hops (one-way); for
+                  # EV_OVERFLOW: 0
+LANE_RTT = 5      # priced round-trip ticks (request + response leg, incl.
+                  # route-around detours); EV_OVERFLOW: records dropped
+LANE_EPOCH = 6    # link-state epoch index at the stamp tick (0 if static)
+NUM_LANES = 7
+
+# Time-series channels
+CH_BUSY = 0        # busy worker-ticks (burn or expand) per bin
+CH_QUEUE = 1       # sum over ticks of end-of-tick total queue depth
+CH_INFLIGHT = 2    # worker-ticks spent in REQ/RESP flights per bin
+CH_ATTEMPTS = 3    # steal attempts launched per bin
+CH_SUCCESSES = 4   # granted-loot deliveries per bin
+CH_ALIVE = 5       # alive worker-ticks per bin (busy-fraction denominator)
+NUM_CHANNELS = 6
+CHANNEL_NAMES = ("busy", "queue_depth", "inflight", "attempts", "successes",
+                 "alive")
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceConfig:
+    """Static flight-recorder shape (part of the jit cache key via
+    `SimConfig.trace`). `ring_capacity` bounds the event ring — size it
+    from the reported drop counter (0 drops = complete trace). `bins` ×
+    `bin_ticks` is the covered horizon; later ticks clamp into the last
+    bin (int32 channels: keep `bin_ticks · W · capacity` < 2^31 so the
+    queue-depth channel cannot wrap)."""
+    ring_capacity: int = 4096
+    bins: int = 256
+    bin_ticks: int = 64
+
+    def validate(self) -> "TraceConfig":
+        if self.ring_capacity <= 0:
+            raise ValueError("trace ring_capacity must be positive")
+        if self.bins <= 0 or self.bin_ticks <= 0:
+            raise ValueError("trace bins and bin_ticks must be positive")
+        return self
+
+
+class TraceState(NamedTuple):
+    """Device-side recorder state, threaded through the simulator loop
+    (OUTSIDE `SimState`, so TC snapshots never roll it back)."""
+    ev: jax.Array         # (ring_capacity, NUM_LANES) int32 event ring
+    n: jax.Array          # () int32 events emitted, incl. ring-dropped ones
+    req_ticks: jax.Array  # (W,) int32 request-leg flight ticks of each
+                          # worker's in-flight attempt (for the rtt lane)
+    ts: jax.Array         # (bins, NUM_CHANNELS) int32 time series
+    famine: jax.Array     # () bool end-of-tick famine flag (supply == 0)
+
+
+def init(tcfg: TraceConfig, num_workers: int, famine0) -> TraceState:
+    return TraceState(
+        ev=jnp.full((tcfg.ring_capacity, NUM_LANES), -1, jnp.int32),
+        n=jnp.int32(0),
+        req_ticks=jnp.zeros((num_workers,), jnp.int32),
+        ts=jnp.zeros((tcfg.bins, NUM_CHANNELS), jnp.int32),
+        famine=jnp.asarray(famine0, bool))
+
+
+def _rows(mask, tick, kind, worker, victim, hops, rtt, epoch):
+    """Broadcast scalar-or-(K,) lanes to a (K, NUM_LANES) int32 block."""
+    K = mask.shape[0]
+    lanes = [tick, kind, worker, victim, hops, rtt, epoch]
+    cols = [jnp.broadcast_to(jnp.asarray(x, jnp.int32), (K,)) for x in lanes]
+    return jnp.stack(cols, axis=1)
+
+
+def emit_raw(ev, n, capacity: int, mask, *, tick, kind, worker, victim,
+             hops=0, rtt=0, epoch=0):
+    """Core append on a bare (ring, counter) pair — the famine-replay scan
+    carries these directly. One event per True lane of `mask` (worker-id
+    order); events past `capacity` are counted but not written (their
+    scatter rows are routed out of bounds, which XLA drops)."""
+    mask = jnp.asarray(mask, bool)
+    m32 = mask.astype(jnp.int32)
+    slot = n + jnp.cumsum(m32) - m32                   # exclusive rank
+    idx = jnp.where(mask & (slot < capacity), slot, capacity)
+    ev = ev.at[idx].set(_rows(mask, tick, kind, worker, victim, hops,
+                              rtt, epoch), mode="drop")
+    return ev, n + jnp.sum(m32)
+
+
+def emit(tr: TraceState, tcfg: TraceConfig, mask, *, tick, kind, worker,
+         victim, hops=0, rtt=0, epoch=0) -> TraceState:
+    """Append one event per True lane of `mask`, bumping the monotonic
+    counter (drops counted, never silent)."""
+    ev, n = emit_raw(tr.ev, tr.n, tcfg.ring_capacity, mask, tick=tick,
+                     kind=kind, worker=worker, victim=victim, hops=hops,
+                     rtt=rtt, epoch=epoch)
+    return tr._replace(ev=ev, n=n)
+
+
+def emit1(tr: TraceState, tcfg: TraceConfig, pred, *, tick, kind,
+          worker=-1, victim=-1, hops=0, rtt=0, epoch=0) -> TraceState:
+    """Append a single global event when `pred` holds (epoch flips, famine
+    transitions)."""
+    return emit(tr, tcfg, jnp.reshape(jnp.asarray(pred, bool), (1,)),
+                tick=tick, kind=kind, worker=worker, victim=victim,
+                hops=hops, rtt=rtt, epoch=epoch)
+
+
+def ts_add(tr: TraceState, tcfg: TraceConfig, t, *, busy, queue, inflight,
+           attempts, successes, alive) -> TraceState:
+    """Scatter-add one contribution into the bin containing tick `t`. The
+    simulator guarantees every bulk window lies inside one bin (bin
+    boundaries are leap horizons), so callers pass whole-window sums."""
+    b = jnp.minimum(t // tcfg.bin_ticks, tcfg.bins - 1)
+    row = jnp.stack([jnp.asarray(x, jnp.int32) for x in
+                     (busy, queue, inflight, attempts, successes, alive)])
+    return tr._replace(ts=tr.ts.at[b].add(row))
+
+
+def next_bin_boundary(tcfg: TraceConfig, t, never):
+    """First bin boundary > t, or `never` once every later tick clamps into
+    the last bin (no more horizons needed). Leap and famine windows clip
+    here so window contributions stay within one bin."""
+    bt = tcfg.bin_ticks
+    nb = (t // bt + 1) * bt
+    return jnp.where(nb <= (tcfg.bins - 1) * bt, nb, never)
+
+
+# --------------------------------------------------------------------------- #
+# Host-side views
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class Trace:
+    """Finalized event ring: `events` is the (n_written, NUM_LANES) int32
+    array in emission order; `emitted` counts every event including the
+    `dropped` ones a full ring rejected (size the ring until dropped == 0)."""
+    events: np.ndarray
+    emitted: int
+    dropped: int
+    ring_capacity: int
+
+    def lane(self, lane: int) -> np.ndarray:
+        return self.events[:, lane]
+
+    def of_kind(self, *kinds: int) -> np.ndarray:
+        sel = np.isin(self.events[:, LANE_KIND], kinds)
+        return self.events[sel]
+
+    def counts(self) -> dict[str, int]:
+        k = self.events[:, LANE_KIND]
+        return {name: int((k == kind).sum())
+                for kind, name in KIND_NAMES.items()}
+
+
+@dataclasses.dataclass(frozen=True)
+class TimeSeries:
+    """Finalized (bins, NUM_CHANNELS) time series (int64 host copy)."""
+    data: np.ndarray
+    bin_ticks: int
+
+    def channel(self, ch: int) -> np.ndarray:
+        return self.data[:, ch]
+
+    def busy_fraction(self) -> np.ndarray:
+        alive = np.maximum(self.data[:, CH_ALIVE], 1)
+        return self.data[:, CH_BUSY] / alive
+
+    def mean_queue_depth(self) -> np.ndarray:
+        """Per-bin mean end-of-tick total queue depth. The queue channel
+        sums one constellation-wide total per simulated tick; dividing by
+        `bin_ticks` gives the per-tick mean (edge bins of a run that ends
+        mid-bin read proportionally low)."""
+        return self.data[:, CH_QUEUE] / float(self.bin_ticks)
+
+
+def finalize(tr, tcfg: TraceConfig) -> tuple[Trace, TimeSeries]:
+    """Build host-side views from a device-fetched `TraceState`."""
+    emitted = int(tr.n)
+    written = min(emitted, tcfg.ring_capacity)
+    events = np.asarray(tr.ev)[:written]
+    return (Trace(events=events, emitted=emitted,
+                  dropped=max(emitted - tcfg.ring_capacity, 0),
+                  ring_capacity=tcfg.ring_capacity),
+            TimeSeries(data=np.asarray(tr.ts, np.int64),
+                       bin_ticks=tcfg.bin_ticks))
+
+
+# --------------------------------------------------------------------------- #
+# Perfetto / Chrome-trace export
+# --------------------------------------------------------------------------- #
+def to_chrome_trace(trace: Trace, *, mesh_rows: int, mesh_cols: int,
+                    row_block: int = 1,
+                    timeseries: TimeSeries | None = None,
+                    tick_us: float = 1.0) -> dict:
+    """Render the ring as Chrome-trace JSON (load in Perfetto / chrome://
+    tracing). One process ("track") per block of `row_block` mesh rows with
+    one thread per worker, a separate process for link-state epochs, and —
+    when `timeseries` is given — counter tracks for busy fraction, queue
+    depth, and in-flight flights. Attempt events draw as complete spans at
+    their resolution tick with the priced round trip as the duration;
+    lifecycle events draw as instants. One simulated tick maps to
+    `tick_us` microseconds of trace time."""
+    ev = trace.events
+    out: list[dict] = []
+    pid_of = lambda w: 1 + (w // mesh_cols) // max(row_block, 1)
+    seen_pids: set[int] = set()
+
+    def meta(pid, tid, name, kind):
+        out.append(dict(ph="M", pid=pid, tid=tid, name=kind,
+                        args=dict(name=name)))
+
+    for row in ev:
+        t, kind, w, v, hops, rtt, ep = (int(x) for x in row)
+        ts = t * tick_us
+        if kind in (EV_EPOCH, EV_FAMINE_ENTER, EV_FAMINE_EXIT):
+            out.append(dict(ph="i", pid=0, tid=0, ts=ts, s="g",
+                            name=KIND_NAMES[kind], args=dict(epoch=ep)))
+            continue
+        pid = pid_of(w)
+        if pid not in seen_pids:
+            seen_pids.add(pid)
+            blk = (w // mesh_cols) // max(row_block, 1)
+            meta(pid, 0, f"mesh rows {blk * row_block}-"
+                         f"{min((blk + 1) * row_block, mesh_rows) - 1}",
+                 "process_name")
+        if kind in ATTEMPT_KINDS:
+            # span ends at the stamp (resolution) tick: start it rtt ago
+            dur = max(rtt, 1) * tick_us
+            out.append(dict(ph="X", pid=pid, tid=w, ts=ts - dur, dur=dur,
+                            name=f"steal:{KIND_NAMES[kind]}",
+                            args=dict(victim=v, hops=hops, rtt_ticks=rtt,
+                                      epoch=ep)))
+        else:
+            out.append(dict(ph="i", pid=pid, tid=w, ts=ts, s="t",
+                            name=KIND_NAMES[kind],
+                            args=dict(epoch=ep, count=rtt)))
+    # link-state epoch track: spans between consecutive flips
+    flips = [(int(r[LANE_TICK]), int(r[LANE_EPOCH]))
+             for r in ev if int(r[LANE_KIND]) == EV_EPOCH]
+    meta(0, 0, "link-state epochs / constellation", "process_name")
+    for i, (t, ep) in enumerate(flips):
+        end = flips[i + 1][0] if i + 1 < len(flips) else t
+        out.append(dict(ph="X", pid=0, tid=1, ts=t * tick_us,
+                        dur=max(end - t, 1) * tick_us, name=f"epoch {ep}"))
+    if timeseries is not None:
+        bt = timeseries.bin_ticks
+        frac = timeseries.busy_fraction()
+        for b in range(timeseries.data.shape[0]):
+            ts = b * bt * tick_us
+            out.append(dict(ph="C", pid=0, tid=0, ts=ts, name="busy_fraction",
+                            args=dict(value=float(frac[b]))))
+            out.append(dict(ph="C", pid=0, tid=0, ts=ts, name="queue_depth",
+                            args=dict(value=int(timeseries.data[b, CH_QUEUE])
+                                      // max(bt, 1))))
+            out.append(dict(ph="C", pid=0, tid=0, ts=ts, name="inflight",
+                            args=dict(value=int(
+                                timeseries.data[b, CH_INFLIGHT]) // max(bt, 1))))
+    return dict(traceEvents=out, displayTimeUnit="ms",
+                otherData=dict(emitted=trace.emitted, dropped=trace.dropped,
+                               ring_capacity=trace.ring_capacity))
+
+
+def write_chrome_trace(path: str, trace: Trace, **kw) -> None:
+    with open(path, "w") as f:
+        json.dump(to_chrome_trace(trace, **kw), f)
+
+
+# --------------------------------------------------------------------------- #
+# Measured attempt-latency histogram vs the paper's analytic model
+# --------------------------------------------------------------------------- #
+def analytic_round_trip(strategy, num_workers: int, tau: float) -> float:
+    """The §3.3 expected per-attempt round trip in tick currency: 2τ for
+    neighbor-only strategies (ADAPTIVE's un-escalated steady state),
+    (4/3)·√N·τ for GLOBAL's uniform multi-hop draw."""
+    if strategy == stealing.Strategy.GLOBAL:
+        return float(latency.global_round_trip(num_workers, tau))
+    return float(latency.neighbor_round_trip(tau))
+
+
+def attempt_latency_hist(trace: Trace, *, strategy, num_workers: int,
+                         tau: float, bins: int = 32) -> dict:
+    """Per-attempt RTT histogram of every resolved attempt in the ring,
+    with the `core/latency.py` analytic expectation as the overlay — the
+    direct, measured check of the paper's model (Eq. 1) inside a run.
+
+    Returns a plain dict (JSON-ready): histogram counts/edges, measured
+    mean RTT and per-attempt success probability, the analytic expected
+    RTT for `strategy`, and both the measured and analytic expected
+    time-to-task E[T] = RTT / p."""
+    res = trace.of_kind(*RESOLVED_ATTEMPT_KINDS)
+    rtt = res[:, LANE_RTT].astype(np.float64)
+    granted = int((res[:, LANE_KIND] == EV_GRANTED).sum())
+    n = int(res.shape[0])
+    p = granted / n if n else 0.0
+    a_rtt = analytic_round_trip(strategy, num_workers, tau)
+    if n:
+        hi = max(float(rtt.max()), a_rtt, 1.0)
+        counts, edges = np.histogram(rtt, bins=bins, range=(0.0, hi))
+        measured_mean = float(rtt.mean())
+    else:
+        counts, edges = np.zeros(bins, np.int64), np.linspace(0, 1, bins + 1)
+        measured_mean = 0.0
+    strat_name = getattr(strategy, "value", str(strategy))
+    return dict(
+        strategy=strat_name, num_workers=num_workers, tau=float(tau),
+        resolved_attempts=n, granted=granted, p_success=p,
+        counts=counts.tolist(), edges=edges.tolist(),
+        measured_mean_rtt=measured_mean, analytic_rtt=a_rtt,
+        measured_expected_time_to_task=float(
+            latency.expected_time_to_task(measured_mean, p)),
+        analytic_expected_time_to_task=float(
+            latency.expected_time_to_task(a_rtt, p)))
+
+
+def write_attempt_latency_hist(path: str, trace: Trace, **kw) -> None:
+    with open(path, "w") as f:
+        json.dump(attempt_latency_hist(trace, **kw), f, indent=2)

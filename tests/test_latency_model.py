@@ -46,3 +46,26 @@ def test_monotone_in_n():
     rt = latency.global_round_trip(ns)
     assert (np.diff(rt) > 0).all()
     assert np.allclose(latency.neighbor_round_trip(), 0.01)
+
+
+def test_eq1_zero_success_probability_is_inf():
+    # a strategy that never succeeds has E[T] = inf — exactly, not NaN,
+    # and with no divide warning (the division is where-guarded)
+    with np.errstate(divide="raise", invalid="raise"):
+        assert latency.expected_time_to_task(0.01, 0.0) == np.inf
+        arr = latency.expected_time_to_task(
+            1.0, np.array([0.0, 0.5, 1.0]))
+        assert not np.isnan(arr).any()
+    np.testing.assert_array_equal(arr, [np.inf, 2.0, 1.0])
+    assert latency.neighbor_expected_time(0.0) == np.inf
+    assert latency.global_expected_time(400, 0.0) == np.inf
+
+
+def test_ineq2_zero_neighbor_probability_never_wins():
+    # P_n == 0 ⇒ E[T_n] = inf: neighbor-only cannot win at any N or P_g
+    with np.errstate(divide="raise", invalid="raise"):
+        assert not latency.neighbor_wins(400, p_global=0.9, p_neighbor=0.0)
+        wins = latency.neighbor_wins(
+            400, p_global=np.array([0.0, 0.9]),
+            p_neighbor=np.array([0.0, 0.3]))
+    np.testing.assert_array_equal(wins, [False, True])

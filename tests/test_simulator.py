@@ -413,9 +413,9 @@ def test_hiwater_at_least_final_occupancy_on_truncated_run():
     cfg = simulator.SimConfig(strategy=stealing.Strategy.NEIGHBOR,
                               hop_ticks=3, capacity=256, max_ticks=40)
     ft, wt, fp, sp = simulator._fail_speed_arrays(MESH.num_workers, None, None)
-    state, ticks, _ = simulator._sim_jit(FIB, MESH, cfg,
-                                         jax.random.PRNGKey(cfg.seed),
-                                         ft, wt, fp, sp, None)
+    state, _tr, ticks, _ = simulator._sim_jit(FIB, MESH, cfg,
+                                              jax.random.PRNGKey(cfg.seed),
+                                              ft, wt, fp, sp, None)
     assert int(ticks) == 40
     final = np.asarray(state.deque.size)
     assert final.sum() > 0      # truly truncated mid-run

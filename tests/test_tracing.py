@@ -1,0 +1,297 @@
+"""Flight-recorder tests: trace ≡ counters invariants, leap ≡ tick ring
+equality (incl. the famine fast path), ring-overflow accounting, the
+zero-overhead-when-disabled guarantee, and the export surfaces."""
+
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import latency, linkstate, simulator, stealing, tracing
+from test_simulator import (CONF_SCENARIOS, EQ_FIB, EQ_MESH, FAMINE_WL,
+                            _dynamic_schedule, _famine_linkstate)
+
+STRATEGIES = [stealing.Strategy.NEIGHBOR, stealing.Strategy.GLOBAL,
+              stealing.Strategy.ADAPTIVE]
+
+TC = tracing.TraceConfig(ring_capacity=8192, bins=128, bin_ticks=32)
+
+
+def _run(strategy, mode, trace=TC, dynamic=True, **kw):
+    if dynamic:
+        ls, ft = _dynamic_schedule()
+        kw.setdefault("linkstate", ls)
+        kw.setdefault("fail_time", ft)
+        preshed, warn = True, 8
+    else:
+        preshed, warn = False, 0
+    cfg = simulator.SimConfig(strategy=strategy, capacity=128,
+                              max_ticks=200_000, step_mode=mode,
+                              preshed=preshed, warn_ticks=warn, trace=trace)
+    return simulator.simulate(EQ_FIB, EQ_MESH, cfg, **kw)
+
+
+# ---------------------------------------------------------------- invariants
+
+@pytest.mark.parametrize("strategy", STRATEGIES)
+@pytest.mark.parametrize("mode", ["tick", "leap"])
+def test_trace_counters_invariants_dynamic(strategy, mode):
+    """Satellite: the ring is a lossless decomposition of the scalar stats —
+    every attempt-kind event sums back to `attempts`, granted events to
+    `successes`, per-worker ledgers to the per-thief bincount, and every
+    stamp carries the epoch index its tick actually falls in."""
+    r = _run(strategy, mode)
+    tr = r.trace
+    assert tr.dropped == 0 and tr.emitted == len(tr.events)
+
+    att = tr.of_kind(*tracing.ATTEMPT_KINDS)
+    got = tr.of_kind(tracing.EV_GRANTED)
+    assert len(att) == r.attempts
+    assert len(got) == r.successes
+    W = EQ_MESH.num_workers
+    assert r.per_worker_attempts.shape == (W,)
+    assert r.per_worker_attempts.sum() == r.attempts
+    assert r.per_worker_successes.sum() == r.successes
+    np.testing.assert_array_equal(
+        r.per_worker_attempts,
+        np.bincount(att[:, tracing.LANE_WORKER], minlength=W))
+    np.testing.assert_array_equal(
+        r.per_worker_successes,
+        np.bincount(got[:, tracing.LANE_WORKER], minlength=W))
+
+    # epoch lane == epoch of the stamp tick, for every event
+    ls, _ = _dynamic_schedule()
+    starts = np.asarray(ls.epoch_starts)
+    ticks = tr.events[:, tracing.LANE_TICK]
+    want = np.maximum((starts[None, :] <= ticks[:, None]).sum(1) - 1, 0)
+    np.testing.assert_array_equal(tr.events[:, tracing.LANE_EPOCH], want)
+
+    # lifecycle events from the schedule: one death (worker 4 @ t=60),
+    # one EPOCH stamp per post-t0 flip that fires before the run ends
+    death = tr.of_kind(tracing.EV_DEATH)
+    assert len(death) == 1 and death[0, tracing.LANE_WORKER] == 4
+    assert death[0, tracing.LANE_TICK] == 60
+    flips = tr.of_kind(tracing.EV_EPOCH)
+    fired = starts[(starts > 0) & (starts <= r.ticks)]
+    np.testing.assert_array_equal(flips[:, tracing.LANE_TICK], fired)
+
+    # ring is stamped in nondecreasing tick order
+    assert (np.diff(ticks) >= 0).all()
+
+
+@pytest.mark.parametrize("strategy", STRATEGIES)
+def test_timeseries_channels_sum_to_totals(strategy):
+    r = _run(strategy, "leap")
+    ts = r.timeseries
+    assert ts.channel(tracing.CH_BUSY).sum() == r.per_worker_busy.sum()
+    assert ts.channel(tracing.CH_ATTEMPTS).sum() == r.attempts
+    assert ts.channel(tracing.CH_SUCCESSES).sum() == r.successes
+    alive = ts.channel(tracing.CH_ALIVE).sum()
+    W = EQ_MESH.num_workers
+    assert 0 < alive <= W * r.ticks  # one worker dies mid-run
+    assert (ts.channel(tracing.CH_QUEUE) >= 0).all()
+    assert np.isfinite(ts.busy_fraction()).all()
+    assert (ts.busy_fraction() <= 1.0).all()
+
+
+# ------------------------------------------------------- leap ≡ tick (rings)
+
+def _assert_traces_equal(a, b):
+    np.testing.assert_array_equal(a.trace.events, b.trace.events)
+    assert a.trace.emitted == b.trace.emitted
+    assert a.trace.dropped == b.trace.dropped
+    np.testing.assert_array_equal(a.timeseries.data, b.timeseries.data)
+
+
+@pytest.mark.parametrize("strategy", STRATEGIES)
+def test_trace_equality_leap_vs_tick_dynamic(strategy):
+    """Acceptance: leap-mode ring + time series elementwise identical to the
+    tick oracle under the dynamic schedule (oscillating τ, outage epoch,
+    eclipse death, speed epochs)."""
+    _assert_traces_equal(_run(strategy, "tick"), _run(strategy, "leap"))
+
+
+@pytest.mark.parametrize("strategy",
+                         [stealing.Strategy.NEIGHBOR,
+                          stealing.Strategy.ADAPTIVE])
+@pytest.mark.parametrize("famine_batch", [0, 7, 64])
+def test_trace_equality_famine_fast_path(strategy, famine_batch):
+    """Acceptance: the famine_ff replay scan emits the exact events the
+    skipped ticks would have — the ring stays elementwise identical for
+    every batch size, while iterations still collapse below tick count."""
+    W = EQ_MESH.num_workers
+    ft = -np.ones(W, np.int32)
+    ft[5] = 70
+    ls = _famine_linkstate(5)
+    res = {}
+    for mode in ("tick", "leap"):
+        cfg = simulator.SimConfig(strategy=strategy, capacity=64,
+                                  max_ticks=100_000, step_mode=mode,
+                                  famine_batch=famine_batch, trace=TC)
+        res[mode] = simulator.simulate(FAMINE_WL, EQ_MESH, cfg,
+                                       fail_time=ft, linkstate=ls)
+    _assert_traces_equal(res["tick"], res["leap"])
+    if famine_batch:
+        assert res["leap"].events < res["leap"].ticks // 2
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("strategy", STRATEGIES)
+@pytest.mark.parametrize("scenario", list(CONF_SCENARIOS))
+@pytest.mark.parametrize("tau", [1, 5])
+def test_trace_equality_conformance_matrix(strategy, scenario, tau):
+    """Acceptance: trace-equality joins the slow conformance matrix — the
+    leap ring is elementwise identical to the tick oracle's on every
+    route-around / eclipse / mid-famine-wake scenario."""
+    mesh, wl, ls, ft, wt = CONF_SCENARIOS[scenario](tau)
+    preshed = ft is not None
+    res = {}
+    for mode in ("tick", "leap"):
+        cfg = simulator.SimConfig(strategy=strategy, capacity=128,
+                                  max_ticks=200_000, step_mode=mode,
+                                  preshed=preshed,
+                                  warn_ticks=2 if preshed else 0,
+                                  trace=tracing.TraceConfig(
+                                      ring_capacity=16384, bins=128,
+                                      bin_ticks=64))
+        res[mode] = simulator.simulate(wl, mesh, cfg, fail_time=ft,
+                                       linkstate=ls, wake_time=wt)
+    _assert_traces_equal(res["tick"], res["leap"])
+    if scenario == "midfamine_wake":
+        assert res["leap"].events < res["leap"].ticks
+
+
+# ------------------------------------------------------------ ring overflow
+
+def test_ring_overflow_is_counted_never_silent():
+    """A too-small ring keeps the earliest events verbatim, reports the rest
+    in the drop counter, and `emitted` still counts every event."""
+    small = tracing.TraceConfig(ring_capacity=16, bins=TC.bins,
+                                bin_ticks=TC.bin_ticks)
+    big = _run(stealing.Strategy.NEIGHBOR, "leap")
+    lim = _run(stealing.Strategy.NEIGHBOR, "leap", trace=small)
+    assert big.trace.dropped == 0
+    assert lim.trace.dropped == big.trace.emitted - 16 > 0
+    assert lim.trace.emitted == big.trace.emitted
+    assert len(lim.trace.events) == 16
+    np.testing.assert_array_equal(lim.trace.events, big.trace.events[:16])
+    # time series is scatter-add, not ring-bound: unaffected by the overflow
+    np.testing.assert_array_equal(lim.timeseries.data, big.timeseries.data)
+
+
+def test_trace_config_validate_rejects_bad_shapes():
+    with pytest.raises(ValueError):
+        tracing.TraceConfig(ring_capacity=0).validate()
+    with pytest.raises(ValueError):
+        tracing.TraceConfig(bins=0).validate()
+    with pytest.raises(ValueError):
+        tracing.TraceConfig(bin_ticks=-1).validate()
+
+
+# ------------------------------------------------- zero overhead when off
+
+def test_trace_none_is_statically_branched_out(monkeypatch):
+    """Acceptance: `trace=None` compiles to the identical graph — no tracing
+    function is even *called* during jax tracing, proven by making every
+    entry point explode and rebuilding the exact same jaxpr."""
+    cfg = simulator.SimConfig(strategy=stealing.Strategy.NEIGHBOR,
+                              capacity=64, max_ticks=50_000, trace=None)
+    ft, wt, fp, sp = simulator._fail_speed_arrays(
+        EQ_MESH.num_workers, None, None, None, None)
+
+    def jaxpr():
+        return str(jax.make_jaxpr(
+            lambda key: simulator._sim_core(EQ_FIB, EQ_MESH, cfg, key,
+                                            ft, wt, fp, sp, None)
+        )(jax.random.PRNGKey(0)))
+
+    base = jaxpr()
+    for fn in ("init", "emit_raw", "emit", "emit1", "ts_add",
+               "next_bin_boundary"):
+        monkeypatch.setattr(tracing, fn, lambda *a, **k: pytest.fail(
+            f"tracing.{fn} reached with trace=None"))
+    assert jaxpr() == base
+
+    # and the enabled path really does grow the graph (ring + time series)
+    monkeypatch.undo()
+    cfg_on = simulator.SimConfig(strategy=stealing.Strategy.NEIGHBOR,
+                                 capacity=64, max_ticks=50_000, trace=TC)
+    on = str(jax.make_jaxpr(
+        lambda key: simulator._sim_core(EQ_FIB, EQ_MESH, cfg_on, key,
+                                        ft, wt, fp, sp, None)
+    )(jax.random.PRNGKey(0)))
+    assert on != base
+    assert f"{TC.ring_capacity},{tracing.NUM_LANES}" in on.replace(" ", "")
+
+
+def test_untraced_result_has_no_trace_but_keeps_ledgers():
+    r = _run(stealing.Strategy.NEIGHBOR, "leap", trace=None, dynamic=False)
+    assert r.trace is None and r.timeseries is None
+    assert r.per_worker_attempts.sum() == r.attempts
+    assert r.per_worker_successes.sum() == r.successes
+
+
+# ------------------------------------------------------------------ exports
+
+def test_neighbor_static_rtt_is_exactly_2tau():
+    """The paper's RT_n = 2τ, measured: every resolved neighbor attempt on a
+    static uniform mesh prices exactly one request leg + one response leg."""
+    tau = 5
+    cfg = simulator.SimConfig(strategy=stealing.Strategy.NEIGHBOR,
+                              hop_ticks=tau, capacity=128,
+                              max_ticks=100_000, trace=TC)
+    r = simulator.simulate(EQ_FIB, EQ_MESH, cfg)
+    res = r.trace.of_kind(*tracing.RESOLVED_ATTEMPT_KINDS)
+    assert len(res) > 0
+    assert (res[:, tracing.LANE_RTT] == 2 * tau).all()
+    assert (res[:, tracing.LANE_HOPS] == 1).all()
+
+    h = tracing.attempt_latency_hist(r.trace, strategy=cfg.strategy,
+                                     num_workers=EQ_MESH.num_workers,
+                                     tau=float(tau))
+    assert h["analytic_rtt"] == 2.0 * tau
+    assert h["measured_mean_rtt"] == pytest.approx(2.0 * tau)
+    assert h["resolved_attempts"] == len(res)
+    assert h["granted"] == r.successes
+    assert h["p_success"] == pytest.approx(r.successes / len(res))
+    # Eq. 1 overlay: measured == analytic when the RTT matches exactly
+    assert h["measured_expected_time_to_task"] == pytest.approx(
+        h["analytic_expected_time_to_task"])
+    assert sum(h["counts"]) == len(res)
+    json.dumps(h)  # artifact-ready
+
+
+def test_chrome_trace_export_structure(tmp_path):
+    r = _run(stealing.Strategy.GLOBAL, "leap")
+    ct = tracing.to_chrome_trace(r.trace, mesh_rows=EQ_MESH.rows,
+                                 mesh_cols=EQ_MESH.cols,
+                                 timeseries=r.timeseries)
+    evs = ct["traceEvents"]
+    spans = [e for e in evs if e.get("ph") == "X"]
+    # every resolved attempt renders as a span with its RTT as duration
+    assert len(spans) == len(r.trace.of_kind(*tracing.ATTEMPT_KINDS))
+    assert all(e["dur"] >= 1 for e in spans)
+    assert any(e.get("ph") == "i" for e in evs)      # lifecycle instants
+    assert any(e.get("ph") == "C" for e in evs)      # time-series counters
+    assert ct["otherData"]["dropped"] == 0
+    p = tmp_path / "trace.perfetto.json"
+    tracing.write_chrome_trace(str(p), r.trace, mesh_rows=EQ_MESH.rows,
+                               mesh_cols=EQ_MESH.cols,
+                               timeseries=r.timeseries)
+    json.loads(p.read_text())
+
+
+def test_batch_traces_are_per_seed():
+    tc = tracing.TraceConfig(ring_capacity=2048, bins=32, bin_ticks=32)
+    cfg = simulator.SimConfig(strategy=stealing.Strategy.NEIGHBOR,
+                              capacity=64, max_ticks=50_000, trace=tc)
+    rs = simulator.simulate_batch(EQ_FIB, EQ_MESH, cfg, seeds=[0, 1, 2])
+    for r in rs:
+        assert r.trace is not None
+        assert len(r.trace.of_kind(*tracing.ATTEMPT_KINDS)) == r.attempts
+    ref = simulator.simulate(
+        EQ_FIB, EQ_MESH,
+        simulator.SimConfig(strategy=stealing.Strategy.NEIGHBOR, capacity=64,
+                            max_ticks=50_000, trace=tc, seed=1))
+    np.testing.assert_array_equal(rs[1].trace.events, ref.trace.events)
