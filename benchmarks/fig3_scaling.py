@@ -34,27 +34,25 @@ QUICK_WORKERS = (25, 49, 100)
 FULL_WORKERS = (25, 49, 100, 160, 320, 640)
 
 
-def run_seeds(workload, workers: int, strategy, runs: int, expansions: int,
-              capacity: int = 4096):
-    """All seeds in one vmapped compilation (vs one while_loop per seed)."""
-    mesh = topology.MeshTopology.square(workers)
-    cfg = scheduler.SchedulerConfig(strategy=strategy, capacity=capacity,
-                                    max_rounds=2_000_000,
-                                    expansions_per_round=expansions)
-    rs = scheduler.run_vectorized_batch(workload, mesh, cfg,
-                                        seeds=range(runs))
-    for r in rs:
-        assert r.overflow == 0
-    return rs
-
-
 def run(worker_counts=QUICK_WORKERS, runs: int = 3, small: bool = True):
     results = {}
+    strategies = (stealing.Strategy.GLOBAL, stealing.Strategy.NEIGHBOR)
     for wl_name, wl in (("FIB", FIB_QUICK), ("UTS", UTS_QUICK)):
         for workers in worker_counts:
+            mesh = topology.MeshTopology.square(workers)
+            cfg = scheduler.SchedulerConfig(
+                capacity=4096, max_rounds=2_000_000,
+                expansions_per_round=EXPANSIONS[wl_name])
+            # every (strategy × seed) point in ONE compiled call
+            pts = [cfg.params._replace(strategy=stealing.strategy_code(st),
+                                       seed=s)
+                   for st in strategies for s in range(runs)]
+            all_rs = scheduler.run_sweep(wl, mesh, cfg, pts)
             per = {}
-            for strat in (stealing.Strategy.GLOBAL, stealing.Strategy.NEIGHBOR):
-                rs = run_seeds(wl, workers, strat, runs, EXPANSIONS[wl_name])
+            for i, strat in enumerate(strategies):
+                rs = all_rs[i * runs:(i + 1) * runs]
+                for r in rs:
+                    assert r.overflow == 0
                 if wl_name == "FIB":
                     assert all(r.result == wl.expected_result() for r in rs)
                 rounds = [r.rounds for r in rs]

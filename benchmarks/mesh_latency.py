@@ -16,6 +16,7 @@ import numpy as np
 
 from repro.core import latency, simulator, stealing, tasks, topology
 from .common import emit
+from .sweep import run_grid
 
 STRATS = {
     "neighbor": stealing.Strategy.NEIGHBOR,
@@ -45,18 +46,23 @@ def run(sizes=(25, 64, 100, 196), hop_ticks=(2, 5, 10), small: bool = False,
     uts = tasks.UtsWorkload(b0=3.5 if not small else 3.0,
                             d_max=10 if not small else 8, root_seed=19)
     results = {}
+    codes = {s: stealing.strategy_code(STRATS[s]) for s in strategies}
     for wl_name, wl in (("FIB", fib), ("UTS", uts)):
         for n in sizes:
             mesh = topology.MeshTopology.square(n)
+            cfg = simulator.SimConfig(capacity=2048, max_ticks=5_000_000)
+            # the whole (τ × strategy × seed) factorial for this size in
+            # ONE compiled call (sweep engine; sharded across devices)
+            grid = run_grid(wl, mesh, cfg, dict(
+                hop_ticks=list(hop_ticks),
+                strategy=[codes[s] for s in strategies],
+                seed=range(runs)))
             for tau in hop_ticks:
                 per = {}
                 for sname in strategies:
-                    cfg = simulator.SimConfig(
-                        strategy=STRATS[sname], hop_ticks=tau, capacity=2048,
-                        max_ticks=5_000_000)
-                    # all seeds in one vmapped compilation
-                    rs = simulator.simulate_batch(wl, mesh, cfg,
-                                                  seeds=range(runs))
+                    rs = [g["result"] for g in grid
+                          if g["hop_ticks"] == tau
+                          and g["strategy"] == codes[sname]]
                     assert all(r.overflow == 0 for r in rs)
                     per[sname] = _mean_result(rs)
                 rn, rg = per["neighbor"], per["global"]

@@ -86,6 +86,68 @@ class SchedulerConfig:
     # neighbor-only wave depends on.
     expansions_per_round: int = 8
 
+    @property
+    def static(self) -> "SchedStatic":
+        """The static (shape/loop-structure) half — the jit cache key."""
+        return SchedStatic(capacity=self.capacity, max_rounds=self.max_rounds,
+                           steal_subrounds=self.steal_subrounds,
+                           expansions_per_round=self.expansions_per_round)
+
+    @property
+    def params(self) -> "SchedParams":
+        """The traced half — the sweep axes (strategy travels as its
+        `stealing.*_CODE` int, dispatched with `lax.switch`)."""
+        return SchedParams(strategy=stealing.strategy_code(self.strategy),
+                           escalate_after=self.escalate_after,
+                           max_grants_per_victim=self.max_grants_per_victim,
+                           seed=self.seed)
+
+    def split(self) -> "tuple[SchedStatic, SchedParams]":
+        return self.static, self.params
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedStatic:
+    """Static half of a `SchedulerConfig` for the vectorized executor: only
+    fields that set array shapes or unrolled-loop counts, so ONE compile
+    serves every (strategy × seed × grants) sweep point. The shard_map
+    executor keeps the full static `SchedulerConfig` — its strategy picks
+    the collectives, which is program structure there."""
+    capacity: int = 1024
+    max_rounds: int = 1_000_000
+    steal_subrounds: int = 8
+    expansions_per_round: int = 8
+
+
+class SchedParams(NamedTuple):
+    """Traced half of a `SchedulerConfig`: int32 leaves, (G,)-stackable via
+    `stack_sched_params` for `run_sweep`."""
+    strategy: int = stealing.NEIGHBOR_CODE
+    escalate_after: int = 4
+    max_grants_per_victim: int = 4
+    seed: int = 0
+
+
+def stack_sched_params(params_list) -> SchedParams:
+    params_list = list(params_list)
+    if not params_list:
+        raise ValueError("stack_sched_params needs at least one point")
+    return jax.tree.map(
+        lambda *xs: jnp.stack([jnp.asarray(x, jnp.int32) for x in xs]),
+        *params_list)
+
+
+def _check_sched_params(p: SchedParams):
+    if int(p.max_grants_per_victim) > stealing.GRANT_WIDTH:
+        raise ValueError(
+            f"max_grants_per_victim={int(p.max_grants_per_victim)} exceeds "
+            f"the grant/export staging width GRANT_WIDTH="
+            f"{stealing.GRANT_WIDTH}: thieves ranked beyond the staging "
+            "block would receive duplicate records while the victim loses "
+            "the real tasks")
+    if not 0 <= int(p.strategy) < len(stealing.CODE_STRATEGIES):
+        raise ValueError(f"unknown strategy code {int(p.strategy)}")
+
 
 def _init_state(workload, num_workers: int, capacity: int) -> WorkerState:
     deques = dq.make(num_workers, capacity)
@@ -97,22 +159,26 @@ def _init_state(workload, num_workers: int, capacity: int) -> WorkerState:
                        successes=z, nodes=z, busy=z, overflow=jnp.int32(0))
 
 
-def _select_victims(cfg: SchedulerConfig, mesh_tables, key, is_thief, fails, W):
-    s = cfg.strategy
-    if s == stealing.Strategy.GLOBAL:
-        return stealing.choose_global(key, W, is_thief)
-    if s == stealing.Strategy.NEIGHBOR:
-        return stealing.choose_neighbor(key, mesh_tables["neighbors"], is_thief)
-    if s == stealing.Strategy.LIFELINE:
-        return stealing.choose_lifeline(key, mesh_tables["lifelines"], fails, W, is_thief)
-    if s == stealing.Strategy.ADAPTIVE:
-        return stealing.choose_adaptive(key, mesh_tables["neighbors"],
-                                        mesh_tables["radius2"], fails, is_thief,
-                                        cfg.escalate_after)
-    raise ValueError(f"unknown strategy {s}")
+def _select_victims(code, escalate_after, mesh_tables, key, is_thief, fails,
+                    W):
+    """Victim selection dispatched over the traced strategy `code` with
+    `lax.switch` (branch order == the `stealing.*_CODE` order); each branch
+    calls the same `choose_*`, with the same key usage, as the old
+    per-strategy Python dispatch — draw sequences are bit-identical."""
+    return jax.lax.switch(code, [
+        lambda _: stealing.choose_global(key, W, is_thief),
+        lambda _: stealing.choose_neighbor(key, mesh_tables["neighbors"],
+                                           is_thief),
+        lambda _: stealing.choose_lifeline(key, mesh_tables["lifelines"],
+                                           fails, W, is_thief),
+        lambda _: stealing.choose_adaptive(key, mesh_tables["neighbors"],
+                                           mesh_tables["radius2"], fails,
+                                           is_thief, escalate_after),
+    ], None)
 
 
-def _round(state: WorkerState, key, tables, mesh_tables, cfg: SchedulerConfig):
+def _round(state: WorkerState, key, tables, mesh_tables, cfg: SchedStatic,
+           p: SchedParams):
     """One bulk-synchronous round. Returns (state, any_live)."""
     W = state.acc.shape[0]
 
@@ -149,9 +215,10 @@ def _round(state: WorkerState, key, tables, mesh_tables, cfg: SchedulerConfig):
     for sub in range(max(cfg.steal_subrounds, 1)):
         subkey = jax.random.fold_in(key, sub)
         is_thief = can_thieve & (deque_.size == 0)
-        victim = _select_victims(cfg, mesh_tables, subkey, is_thief, fails, W)
+        victim = _select_victims(p.strategy, p.escalate_after, mesh_tables,
+                                 subkey, is_thief, fails, W)
         plan = stealing.resolve_grants(victim, deque_.size,
-                                       cfg.max_grants_per_victim)
+                                       p.max_grants_per_victim)
         # victims export their granted bottom records as a dense staging
         # block (same grant path as the latency simulator) and advance
         v = jnp.clip(plan.victim, 0, W - 1)
@@ -172,13 +239,11 @@ def _round(state: WorkerState, key, tables, mesh_tables, cfg: SchedulerConfig):
     return new_state, any_live
 
 
-def _run_core(workload, mesh: topo.MeshTopology, cfg: SchedulerConfig, key0,
-              link_up=None):
-    assert cfg.max_grants_per_victim <= stealing.GRANT_WIDTH, (
-        f"max_grants_per_victim={cfg.max_grants_per_victim} exceeds the "
-        f"grant/export staging width GRANT_WIDTH={stealing.GRANT_WIDTH}: "
-        "thieves ranked beyond the staging block would receive duplicate "
-        "records while the victim loses the real tasks")
+def _run_core(workload, mesh: topo.MeshTopology, cfg: SchedStatic,
+              p: SchedParams, link_up=None):
+    global _RUN_TRACE_COUNT
+    _RUN_TRACE_COUNT += 1
+    key0 = jax.random.PRNGKey(p.seed)
     tables = workload.tables()
     neighbors = jnp.asarray(stealing.neighbor_list(mesh))
     if link_up is not None:
@@ -202,7 +267,7 @@ def _run_core(workload, mesh: topo.MeshTopology, cfg: SchedulerConfig, key0,
     def body(carry):
         state, rounds, _ = carry
         key = jax.random.fold_in(key0, rounds)
-        state, live = _round(state, key, tables, mesh_tables, cfg)
+        state, live = _round(state, key, tables, mesh_tables, cfg, p)
         return state, rounds + 1, live
 
     state, rounds, _ = jax.lax.while_loop(
@@ -210,12 +275,21 @@ def _run_core(workload, mesh: topo.MeshTopology, cfg: SchedulerConfig, key0,
     return state, rounds
 
 
+# Bumped once per jax TRACE of `_run_core`; read via `run_trace_count()` —
+# lets sweeps assert the whole grid compiled exactly once.
+_RUN_TRACE_COUNT = 0
+
+
+def run_trace_count() -> int:
+    return _RUN_TRACE_COUNT
+
+
 _run_jit = partial(jax.jit, static_argnames=("workload", "mesh", "cfg"))(_run_core)
 
 
 @partial(jax.jit, static_argnames=("workload", "mesh", "cfg"))
-def _run_batch_jit(workload, mesh, cfg, keys, link_up):
-    return jax.vmap(lambda k: _run_core(workload, mesh, cfg, k, link_up))(keys)
+def _run_batch_jit(workload, mesh, cfg, params, link_up):
+    return jax.vmap(lambda p: _run_core(workload, mesh, cfg, p, link_up))(params)
 
 
 def _finalize_run(state, rounds) -> RunResult:
@@ -244,9 +318,10 @@ def run_vectorized(workload, mesh: topo.MeshTopology,
     epoch of a `linkstate.LinkStateSchedule`); down links are removed from
     radius-1 victim selection for the whole run."""
     cfg = cfg or SchedulerConfig()
-    key0 = jax.random.PRNGKey(cfg.seed)
+    scfg, p = cfg.split()
+    _check_sched_params(p)
     lu = None if link_up is None else jnp.asarray(link_up)
-    state, rounds = _run_jit(workload, mesh, cfg, key0, lu)
+    state, rounds = _run_jit(workload, mesh, scfg, p, lu)
     return _finalize_run(jax.device_get(state), rounds)
 
 
@@ -259,14 +334,40 @@ def run_vectorized_batch(workload, mesh: topo.MeshTopology,
     serial `run_vectorized` calls with that seed (benchmark sweeps run all
     their seeds in one compilation instead of one while_loop per seed)."""
     cfg = cfg or SchedulerConfig()
+    scfg, p = cfg.split()
+    _check_sched_params(p)
     seeds = list(seeds)
-    keys = jnp.stack([jax.random.PRNGKey(int(s)) for s in seeds])
+    pstack = stack_sched_params([p._replace(seed=int(s)) for s in seeds])
     lu = None if link_up is None else jnp.asarray(link_up)
-    states, rounds = jax.device_get(_run_batch_jit(workload, mesh, cfg, keys,
-                                                   lu))
+    states, rounds = jax.device_get(_run_batch_jit(workload, mesh, scfg,
+                                                   pstack, lu))
     return [
         _finalize_run(jax.tree.map(lambda x: x[i], states), rounds[i])
         for i in range(len(seeds))
+    ]
+
+
+def run_sweep(workload, mesh: topo.MeshTopology, cfg,
+              params_list, link_up=None) -> list[RunResult]:
+    """Run a whole grid of `SchedParams` points (strategy × grants × seed ×
+    ...) in ONE compiled, vmapped call — one `_run_core` trace per distinct
+    `SchedStatic`. `cfg` supplies the static half (a `SchedStatic`, or a
+    `SchedulerConfig` whose traced fields are ignored); results are
+    identical to per-point `run_vectorized` calls, in `params_list` order."""
+    scfg = cfg.static if isinstance(cfg, SchedulerConfig) else cfg
+    pts = [p.params if isinstance(p, SchedulerConfig) else p
+           for p in params_list]
+    if not pts:
+        return []
+    for p in pts:
+        _check_sched_params(p)
+    pstack = stack_sched_params(pts)
+    lu = None if link_up is None else jnp.asarray(link_up)
+    states, rounds = jax.device_get(_run_batch_jit(workload, mesh, scfg,
+                                                   pstack, lu))
+    return [
+        _finalize_run(jax.tree.map(lambda x: x[i], states), rounds[i])
+        for i in range(len(pts))
     ]
 
 

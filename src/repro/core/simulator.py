@@ -116,6 +116,26 @@ where per-element scatters don't vectorize and the one VMEM-resident
 kernel commit per tick is the right shape (TPU validation pending, like
 `steal_compact`'s).
 
+One compile, whole grid (static/traced `SimConfig` split)
+---------------------------------------------------------
+`SimConfig` is the user-facing knob set, but it is NOT the jit cache key.
+`cfg.split()` separates it into a `StaticConfig` — the fields that change
+program *structure* (capacity, step mode, famine batch, deque/routing
+backends, recovery, supervision slots, trace shape) — and a `SimParams`
+pytree of int32 leaves for everything that is just *data* to the compiled
+graph: the strategy (a `lax.switch` code over `stealing.*_CODE` branch
+tables), `hop_ticks` τ, escalation threshold, grant cap, warn/ckpt
+scalars, and the PRNG seed. Sweeping any `SimParams` axis therefore
+costs ZERO retraces: `simulate_batch` vmaps stacked params through one
+compilation, and `simulate_sweep` runs a whole factorial grid
+(strategy × τ × seed × …) in ONE compiled call — vmapped on a single
+device, `shard_map`-sharded over a 1D "grid" device axis when several
+are visible (points padded to a device multiple, trimmed on return).
+Results are bit-identical to per-point `simulate()` calls (vmap's
+while_loop batching freezes finished points), and `trace_count()` lets
+tests pin the one-trace invariant. `benchmarks/sweep.py` builds the
+crossover study on top.
+
 Beyond the paper's model, the simulator also covers the SEC failure modes the
 paper lists in §2.1/§5, each as an orthogonal, testable mechanism:
 
@@ -257,6 +277,76 @@ class SimConfig:
     # failed-attempt events of the ticks it collapses).
     trace: "tracing.TraceConfig | None" = None
 
+    @property
+    def static(self) -> "StaticConfig":
+        """The static (shape/program-structure) half — the jit cache key."""
+        return StaticConfig(
+            capacity=self.capacity, max_ticks=self.max_ticks,
+            step_mode=self.step_mode, famine_batch=self.famine_batch,
+            use_steal_kernel=self.use_steal_kernel,
+            deque_backend=self.deque_backend, recovery=self.recovery,
+            supervision_slots=self.supervision_slots, preshed=self.preshed,
+            trace=self.trace)
+
+    @property
+    def params(self) -> "SimParams":
+        """The traced half — the sweep axes, as an int32-leaved pytree."""
+        return SimParams(
+            strategy=stealing.strategy_code(self.strategy),
+            hop_ticks=self.hop_ticks, escalate_after=self.escalate_after,
+            max_grants_per_victim=self.max_grants_per_victim,
+            warn_ticks=self.warn_ticks, ckpt_interval=self.ckpt_interval,
+            seed=self.seed)
+
+    def split(self) -> "tuple[StaticConfig, SimParams]":
+        return self.static, self.params
+
+
+@dataclasses.dataclass(frozen=True)
+class StaticConfig:
+    """The static half of a `SimConfig`: only fields that determine array
+    shapes or program structure. Hashable — the jit static argument — so
+    ONE XLA compilation per distinct `StaticConfig` serves every `SimParams`
+    point of a sweep grid (compile-count pinned in tests). Field semantics
+    are documented on `SimConfig`, the user-facing combined view."""
+    capacity: int = 1024
+    max_ticks: int = 2_000_000
+    step_mode: str = "leap"
+    famine_batch: int = 64
+    use_steal_kernel: bool | None = None
+    deque_backend: str | None = None
+    recovery: Recovery = Recovery.NONE
+    supervision_slots: int = 64
+    preshed: bool = False
+    trace: "tracing.TraceConfig | None" = None
+
+
+class SimParams(NamedTuple):
+    """The traced half of a `SimConfig`: the sweep axes. Every leaf is an
+    int (or int32 scalar array; (G,)-stacked vectors in grid runs — see
+    `stack_params` / `simulate_sweep`). Changing any leaf re-EXECUTES the
+    compiled simulator; it never retraces it. The strategy travels as its
+    `stealing.*_CODE` int, dispatched inside the core with `lax.switch`."""
+    strategy: int = stealing.NEIGHBOR_CODE
+    hop_ticks: int = 5
+    escalate_after: int = 4
+    max_grants_per_victim: int = 4
+    warn_ticks: int = 0
+    ckpt_interval: int = 0
+    seed: int = 0
+
+
+def stack_params(params_list) -> SimParams:
+    """Stack `SimParams` points into one (G,)-leaved `SimParams` pytree —
+    the grid argument of `simulate_sweep` (and, with a leading seed axis,
+    of `_sim_batch_jit`)."""
+    params_list = list(params_list)
+    if not params_list:
+        raise ValueError("stack_params needs at least one SimParams point")
+    return jax.tree.map(
+        lambda *xs: jnp.stack([jnp.asarray(x, jnp.int32) for x in xs]),
+        *params_list)
+
 
 class SimState(NamedTuple):
     deque: dq.DequeState
@@ -339,22 +429,21 @@ class SimResult(NamedTuple):
     timeseries: "tracing.TimeSeries | None" = None
 
 
-def _mesh_tables(mesh: topo.MeshTopology, strategy: stealing.Strategy):
-    """Static lookup tables, built only for what `strategy` needs.
+def _mesh_tables(mesh: topo.MeshTopology):
+    """Static lookup tables for EVERY strategy — the strategy is a traced
+    `SimParams` leaf, so the compiled program must be able to select any of
+    them. All tables are (W, ≤12ish) int32 — a few hundred KB at W=16384.
 
     Hop distances are computed on the fly from (W, 2) coordinates — the
     dense (W, W) hop matrix is never built, so W >= 4k meshes don't embed
     multi-MB constants in the graph.
     """
-    tbl = {
+    return {
         "neighbors": jnp.asarray(stealing.neighbor_list(mesh)),
         "coords": jnp.asarray(mesh.coords),
+        "radius2": jnp.asarray(stealing.radius2_list(mesh)),
+        "lifelines": jnp.asarray(stealing.lifeline_list(mesh.num_workers)),
     }
-    if strategy == stealing.Strategy.ADAPTIVE:
-        tbl["radius2"] = jnp.asarray(stealing.radius2_list(mesh))
-    if strategy == stealing.Strategy.LIFELINE:
-        tbl["lifelines"] = jnp.asarray(stealing.lifeline_list(mesh.num_workers))
-    return tbl
 
 
 # Per-worker hop distances are priced from coordinates (topology.hop_dist);
@@ -376,35 +465,44 @@ def _masked_radius2(tbl, ls, eidx):
     return stealing.mask_reachable(r2, ls.comp[eidx])
 
 
-def _select(cfg: SimConfig, tbl, key, is_thief, fails, W, link=None):
-    """Victim selection; `link = (up_row, tau_row, r2_masked)` masks
-    radius-1 victim sets with the active epoch's link state and restricts
-    ADAPTIVE's escalated set to reachable (same live-link component)
-    victims. GLOBAL / LIFELINE draw over all workers; the caller gates
-    their flight *departures* on reachability instead (an unreachable draw
-    never launches — see linkstate module docstring)."""
-    s = cfg.strategy
-    if s == stealing.Strategy.GLOBAL:
-        return stealing.choose_global(key, W, is_thief)
-    if s == stealing.Strategy.LIFELINE:
-        return stealing.choose_lifeline(key, tbl["lifelines"], fails, W, is_thief)
+def _select(code, escalate_after, tbl, key, is_thief, fails, W, link=None):
+    """Victim selection, dispatched over the traced strategy `code` with
+    `lax.switch` (branch order == the `stealing.*_CODE` order). Each branch
+    calls the same `choose_*` function, with the same key usage, as the
+    per-strategy path always did — a sweep-grid run therefore draws the
+    exact victim sequence of a dedicated compile. `link = (up_row, tau_row,
+    r2_masked)` masks radius-1 victim sets with the active epoch's link
+    state and restricts ADAPTIVE's escalated set to reachable (same
+    live-link component) victims. GLOBAL / LIFELINE draw over all workers;
+    the caller gates their flight *departures* on reachability instead (an
+    unreachable draw never launches — see linkstate module docstring)."""
     if link is None:
-        if s == stealing.Strategy.NEIGHBOR:
-            return stealing.choose_neighbor(key, tbl["neighbors"], is_thief)
-        if s == stealing.Strategy.ADAPTIVE:
-            return stealing.choose_adaptive(key, tbl["neighbors"], tbl["radius2"],
-                                            fails, is_thief, cfg.escalate_after)
-        raise ValueError(s)
-    up_row, tau_row, r2m = link
-    nbrs = jnp.where(up_row & (tbl["neighbors"] >= 0), tbl["neighbors"],
-                     topo.NO_NEIGHBOR)
-    if s == stealing.Strategy.NEIGHBOR:
+        nbrs, tau_row, r2m = tbl["neighbors"], None, tbl["radius2"]
+    else:
+        up_row, tau_row, r2m = link
+        nbrs = jnp.where(up_row & (tbl["neighbors"] >= 0), tbl["neighbors"],
+                         topo.NO_NEIGHBOR)
+
+    def b_global(_):
+        return stealing.choose_global(key, W, is_thief)
+
+    def b_neighbor(_):
         return stealing.choose_neighbor(key, nbrs, is_thief)
-    if s == stealing.Strategy.ADAPTIVE:
-        return stealing.choose_adaptive_linkaware(key, nbrs, r2m,
-                                                  tau_row, fails, is_thief,
-                                                  cfg.escalate_after)
-    raise ValueError(s)
+
+    def b_lifeline(_):
+        return stealing.choose_lifeline(key, tbl["lifelines"], fails, W,
+                                        is_thief)
+
+    def b_adaptive(_):
+        if link is None:
+            return stealing.choose_adaptive(key, nbrs, r2m, fails, is_thief,
+                                            escalate_after)
+        return stealing.choose_adaptive_linkaware(key, nbrs, r2m, tau_row,
+                                                  fails, is_thief,
+                                                  escalate_after)
+
+    return jax.lax.switch(code, [b_global, b_neighbor, b_lifeline,
+                                 b_adaptive], None)
 
 
 def _nearest_alive_neighbor(tbl, alive, w_dead):
@@ -496,7 +594,7 @@ def _stage_transplant(ops: dq.DequeOps, acc, src_mask, heir, overflow):
     return ops, _transplant_acc(acc, src_mask, heir), overflow
 
 
-def _lane_budget(cfg: "SimConfig") -> int:
+def _lane_budget(cfg: StaticConfig) -> int:
     """Static push-log width of the staged backend: an upper bound on the
     staged pushes any single worker can *accept* in one tick. Accepted
     pushes are bounded by free room plus slots freed mid-tick (one
@@ -612,7 +710,7 @@ def _epoch_view(ls, t):
     return eidx, ls.speed[eidx]
 
 
-def _can_attempt(cfg: SimConfig, tbl, ls, eidx, fails, W: int):
+def _can_attempt(code, escalate_after, tbl, ls, eidx, fails, W: int):
     """Per-worker: could an idle thief launch a steal flight right now?
 
     Radius-1 strategies lose victims when every adjacent link is down
@@ -620,24 +718,32 @@ def _can_attempt(cfg: SimConfig, tbl, ls, eidx, fails, W: int):
     no *reachable* other worker exists (live-link partition — their draws
     toward other components never depart). Must never be False when
     `_select` + the departure gate could produce a flight — the leap
-    stepper skips idle workers for which this is False.
+    stepper skips idle workers for which this is False. The strategy is a
+    traced `code`: every variant is computed (cheap row reductions) and the
+    code-selected one returned, each matching its dedicated-strategy
+    formula bit-for-bit.
     """
-    if cfg.strategy in (stealing.Strategy.GLOBAL, stealing.Strategy.LIFELINE):
-        if ls is None or not lstate.has_outage_tables(ls):
-            return jnp.broadcast_to(jnp.bool_(W > 1), (W,))
+    if ls is None or not lstate.has_outage_tables(ls):
+        # multi-hop (GLOBAL / LIFELINE) capability without outage epochs:
+        # any other worker will do
+        multi = jnp.broadcast_to(jnp.bool_(W > 1), (W,))
+    else:
         c = ls.comp[eidx]
         comp_size = jnp.zeros((W,), jnp.int32).at[c].add(1)
-        return comp_size[c] > 1
+        multi = comp_size[c] > 1
     if ls is None:
-        return jnp.broadcast_to(jnp.bool_(W > 1), (W,))
+        # no schedule: radius-1 sets are never masked, so every strategy
+        # reduces to "another worker exists"
+        return multi
     nbr_live = (ls.link_up[eidx] & (tbl["neighbors"] >= 0)).any(axis=1)
-    if cfg.strategy == stealing.Strategy.NEIGHBOR:
-        return nbr_live
     # ADAPTIVE: escalated thieves fall back to the reachability-masked
     # radius-2 set (all entries masked away ⇒ no escalated victim either)
     r2m = _masked_radius2(tbl, ls, eidx)
     r2_any = (r2m != topo.NO_NEIGHBOR).any(axis=1)
-    return nbr_live | (r2_any & (fails >= cfg.escalate_after))
+    adaptive = nbr_live | (r2_any & (fails >= escalate_after))
+    return jnp.where(code == stealing.NEIGHBOR_CODE, nbr_live,
+                     jnp.where(code == stealing.ADAPTIVE_CODE, adaptive,
+                               multi))
 
 
 def _epoch_link_tables(tbl, ls, eidx):
@@ -678,7 +784,8 @@ def _next_fire(base, period, t):
                      jnp.where(period > 0, periodic, one_shot))
 
 
-def _retired_mask(cfg: SimConfig, fail_time, fail_period, t, W: int):
+def _retired_mask(cfg: StaticConfig, warn_ticks, fail_time, fail_period, t,
+                  W: int):
     """Pre-shed retirement: a warned worker idles from `fail - warn_ticks`
     until its (predictable) death and must not pull work back in. Phrased
     on the NEXT pending death: an alive worker is retired iff a death fire
@@ -691,11 +798,11 @@ def _retired_mask(cfg: SimConfig, fail_time, fail_period, t, W: int):
     if not cfg.preshed:
         return jnp.zeros((W,), bool)
     nf = _next_fire(fail_time, fail_period, t)
-    return (nf < _NEVER) & (t >= nf - cfg.warn_ticks)
+    return (nf < _NEVER) & (t >= nf - warn_ticks)
 
 
 def _scheduled_horizons(ne, t, alive, fail_time, wake_time, fail_period,
-                        cfg: SimConfig, ls):
+                        cfg: StaticConfig, p: SimParams, ls):
     """Clip `ne` at every scheduled global event: deaths (and pre-shed
     warnings) of still-alive workers, wake-ups of dead ones, periodic
     checkpoints, and link-state epoch boundaries. Periodic (fail, wake)
@@ -710,13 +817,15 @@ def _scheduled_horizons(ne, t, alive, fail_time, wake_time, fail_period,
     # eclipse exits: a dead worker with a pending wake rejoins mid-horizon
     ne = jnp.minimum(ne, jnp.min(jnp.where(~alive, nw, _NEVER)))
     if cfg.preshed:
-        warn_at = nf - cfg.warn_ticks
+        warn_at = nf - p.warn_ticks
         ne = jnp.minimum(ne, jnp.min(
             jnp.where(alive & (nf < _NEVER) & (warn_at >= t),
                       warn_at, _NEVER)))
-    if cfg.ckpt_interval > 0:
-        ck = cfg.ckpt_interval
-        ne = jnp.minimum(ne, t + ((ck - t % ck) % ck))
+    # ckpt_interval is a traced sweep axis: the term is always in the graph,
+    # neutralized (`_NEVER`) when the interval is 0
+    ck = jnp.maximum(p.ckpt_interval, 1)
+    ne = jnp.minimum(ne, jnp.where(p.ckpt_interval > 0,
+                                   t + ((ck - t % ck) % ck), _NEVER))
     # next link-state change: a leap or famine window must never jump across
     # an epoch boundary (τ, link availability, and speed all switch there)
     if ls is not None:
@@ -741,7 +850,7 @@ def _scheduled_horizons(ne, t, alive, fail_time, wake_time, fail_period,
 
 
 def _next_event(state: SimState, t, speed, fail_time, wake_time, fail_period,
-                cfg: SimConfig, W: int, tbl, ls):
+                cfg: StaticConfig, p: SimParams, W: int, tbl, ls):
     """First tick >= t at which any worker does more than a bulk decrement.
 
     Conservative (may return a tick with no visible state change — that
@@ -762,8 +871,9 @@ def _next_event(state: SimState, t, speed, fail_time, wake_time, fail_period,
     # work-exhausted workers expand (deque nonempty) or start a steal (if a
     # victim is reachable under the current link state) at their next active
     # tick — unless retired by a pre-shed warning (they idle until death).
-    retired = _retired_mask(cfg, fail_time, fail_period, t, W)
-    can_try = _can_attempt(cfg, tbl, ls, eidx, state.fails, W)
+    retired = _retired_mask(cfg, p.warn_ticks, fail_time, fail_period, t, W)
+    can_try = _can_attempt(p.strategy, p.escalate_after, tbl, ls, eidx,
+                           state.fails, W)
     idle_acts = (state.deque.size > 0) | (can_try & ~retired)
     run_ev = jnp.where(state.work > 0, burn_ev,
                        jnp.where(idle_acts, t0, _NEVER))
@@ -772,11 +882,11 @@ def _next_event(state: SimState, t, speed, fail_time, wake_time, fail_period,
     flight = (state.phase != PHASE_RUN) & alive
     ev = jnp.where(flight, t + jnp.maximum(state.timer - 1, 0), ev)
     return _scheduled_horizons(jnp.min(ev), t, alive, fail_time, wake_time,
-                               fail_period, cfg, ls)
+                               fail_period, cfg, p, ls)
 
 
 def _famine_horizon(state: SimState, t, speed, fail_time, wake_time,
-                    fail_period, cfg: SimConfig, W: int,
+                    fail_period, cfg: StaticConfig, p: SimParams, W: int,
                     mesh: topo.MeshTopology, tbl, ls):
     """First tick >= t at which any deque size can change (or a recovery /
     checkpoint / epoch event fires) — the famine-window horizon.
@@ -797,9 +907,9 @@ def _famine_horizon(state: SimState, t, speed, fail_time, wake_time,
     if ls is None:
         eidx, sp = None, speed
         nbr_tab = tbl["neighbors"]
-        r2_tab, comp_row = tbl.get("radius2"), None
+        r2_tab, comp_row = tbl["radius2"], None
         # a probe cycle always costs >= 1 tick, even at hop_ticks=0
-        min_cycle = max(2 * cfg.hop_ticks - 1, 1)
+        min_cycle = jnp.maximum(2 * p.hop_ticks - 1, 1)
     else:
         eidx, sp = _epoch_view(ls, t)
         nbr_tab, r2_tab, comp_row = _epoch_link_tables(tbl, ls, eidx)
@@ -808,10 +918,10 @@ def _famine_horizon(state: SimState, t, speed, fail_time, wake_time,
     t0 = t + ((sp - t % sp) % sp)
     run = (state.phase == PHASE_RUN) & alive
     burn_ev = t0 + state.work * sp
-    retired = _retired_mask(cfg, fail_time, fail_period, t, W)
-    risky = stealing.probe_may_succeed(
-        cfg.strategy, nonempty, state.fails, nbr_tab, r2_tab,
-        escalate_after=cfg.escalate_after, window=cfg.famine_batch,
+    retired = _retired_mask(cfg, p.warn_ticks, fail_time, fail_period, t, W)
+    risky = stealing.probe_may_succeed_code(
+        p.strategy, nonempty, state.fails, nbr_tab, r2_tab,
+        escalate_after=p.escalate_after, window=cfg.famine_batch,
         min_cycle=min_cycle, num_workers=W, comp_row=comp_row)
     # holders expand when their burn ends; risky thieves (a drawable victim
     # may be nonempty) end the window at their next probe opportunity
@@ -836,7 +946,7 @@ def _famine_horizon(state: SimState, t, speed, fail_time, wake_time,
     # deliver at arrival + (response flight − 1); RESP at timer expiry; the
     # probe follows at their first straggler-active tick after delivery.
     if ls is None:
-        back = topo.hop_dist(mesh, tbl["coords"], v) * cfg.hop_ticks
+        back = topo.hop_dist(mesh, tbl["coords"], v) * p.hop_ticks
     else:
         back = lstate.flight_ticks(ls, eidx, state.victim, jnp.arange(W),
                                    mesh.rows, mesh.cols, mesh.torus_full())
@@ -849,21 +959,35 @@ def _famine_horizon(state: SimState, t, speed, fail_time, wake_time,
                                                  next_probe, _NEVER))
     ev = jnp.where(flight, flight_ev, ev)
     return _scheduled_horizons(jnp.min(ev), t, alive, fail_time, wake_time,
-                               fail_period, cfg, ls)
+                               fail_period, cfg, p, ls)
 
 
-def _sim_core(workload, mesh: topo.MeshTopology, cfg: SimConfig, key0,
-              fail_time, wake_time, fail_period, speed, ls=None):
+# Bumped once per jax TRACE of `_sim_core` (i.e. per jit cache miss of
+# `_sim_jit` / `_sim_batch_jit` / the sharded sweep entry). Read via
+# `trace_count()` — the compile-count regression tests and the sweep
+# engine's single-compile assertion diff it around a grid run.
+_TRACE_COUNT = 0
+
+
+def trace_count() -> int:
+    """Number of times `_sim_core` has been traced in this process."""
+    return _TRACE_COUNT
+
+
+def _sim_core(workload, mesh: topo.MeshTopology, cfg: StaticConfig,
+              p: SimParams, fail_time, wake_time, fail_period, speed,
+              ls=None):
+    global _TRACE_COUNT
+    _TRACE_COUNT += 1
     W = mesh.num_workers
     torus_full = mesh.torus_full()
-    tbl = _mesh_tables(mesh, cfg.strategy)
+    tbl = _mesh_tables(mesh)
     tables = workload.tables()
     S = cfg.supervision_slots
+    code, escalate_after = p.strategy, p.escalate_after
+    key0 = jax.random.PRNGKey(p.seed)
     use_kernel = (cfg.use_steal_kernel if cfg.use_steal_kernel is not None
                   else jax.default_backend() == "tpu")
-    assert cfg.max_grants_per_victim <= stealing.GRANT_WIDTH, (
-        f"max_grants_per_victim={cfg.max_grants_per_victim} exceeds the "
-        f"shared grant/export staging width GRANT_WIDTH={stealing.GRANT_WIDTH}")
 
     deques = dq.make(W, cfg.capacity)
     T = deques.buf.shape[2]  # task record width — single source of truth
@@ -919,8 +1043,9 @@ def _sim_core(workload, mesh: topo.MeshTopology, cfg: SimConfig, key0,
         # ------------- scheduled failures / shutdowns --------------------- #
         # periodic schedules fire at base + k·period (one-shot: base == t)
         dying_now = alive & _fires_now(fail_time, fail_period, t)
-        warned = (alive & cfg.preshed
-                  & _fires_now(fail_time, fail_period, t + cfg.warn_ticks))
+        warned = (alive & _fires_now(fail_time, fail_period,
+                                     t + p.warn_ticks)
+                  if cfg.preshed else jnp.zeros((W,), bool))
 
         # every deque mutation below goes through the session: the staged
         # backend accumulates them into one end-of-tick apply, the loop
@@ -955,7 +1080,7 @@ def _sim_core(workload, mesh: topo.MeshTopology, cfg: SimConfig, key0,
             # it and is restored verbatim), then transplant the dead
             # worker's snapshot deque + accumulator + in-flight loot onto
             # its heir. Exactly-once for arbitrary failure schedules.
-            rb = dying_now.any() & (cfg.ckpt_interval > 0)
+            rb = dying_now.any() & (p.ckpt_interval > 0)
             # the session owns the live deque: on rollback it discards
             # everything staged (incl. this tick's pre-shed moves) and
             # resets to the snapshot, mirroring the wholesale merge below
@@ -1040,7 +1165,8 @@ def _sim_core(workload, mesh: topo.MeshTopology, cfg: SimConfig, key0,
             sup_n=jnp.where(waking, 0, state.sup_n))
 
         # ------------- periodic checkpoint (TC) ---------------------------- #
-        take_ckpt = (cfg.ckpt_interval > 0) & (t % max(cfg.ckpt_interval, 1) == 0)
+        take_ckpt = ((p.ckpt_interval > 0)
+                     & (t % jnp.maximum(p.ckpt_interval, 1) == 0))
         if cfg.recovery == Recovery.TC:
             # only TC consumes snapshots — other modes don't carry one. The
             # snapshot cut must see the post-recovery deque, so the staged
@@ -1073,9 +1199,11 @@ def _sim_core(workload, mesh: topo.MeshTopology, cfg: SimConfig, key0,
         # idle workers become thieves: request departs now, arrives in h·τ
         idle = running & (~burning) & (~popped) & (ses.size == 0)
         # retired workers (warned of shutdown) must not pull work back in
-        idle = idle & ~_retired_mask(cfg, fail_time, fail_period, t, W)
+        idle = idle & ~_retired_mask(cfg, p.warn_ticks, fail_time,
+                                     fail_period, t, W)
         fails_sel = state.fails  # fails row the draw (and its gate) sees
-        victim_new = _select(cfg, tbl, key, idle, fails_sel, W, link)
+        victim_new = _select(code, escalate_after, tbl, key, idle, fails_sel,
+                             W, link)
         has_victim = victim_new >= 0
         reach = None
         if ls is not None:
@@ -1087,7 +1215,7 @@ def _sim_core(workload, mesh: topo.MeshTopology, cfg: SimConfig, key0,
         vhops = jnp.where(has_victim,
                           _hop_dist(mesh, tbl["coords"], victim_new), 0)
         if ls is None:
-            req_ticks = vhops * cfg.hop_ticks
+            req_ticks = vhops * p.hop_ticks
         else:
             # flight latency sampled from the departure epoch's link state
             req_ticks = jnp.where(has_victim, lstate.flight_ticks(
@@ -1114,7 +1242,7 @@ def _sim_core(workload, mesh: topo.MeshTopology, cfg: SimConfig, key0,
             valid_victim = valid_victim & lstate.same_component(
                 ls, eidx, victim, jnp.arange(W))
         plan = stealing.resolve_grants(jnp.where(valid_victim, victim, -1),
-                                       ses.size, cfg.max_grants_per_victim)
+                                       ses.size, p.max_grants_per_victim)
         v = jnp.clip(plan.victim, 0, W - 1)
         stolen_blk = ses.export(plan.taken, stealing.GRANT_WIDTH)
         stolen = stolen_blk[v, jnp.clip(plan.rank, 0, stealing.GRANT_WIDTH - 1)]
@@ -1143,7 +1271,7 @@ def _sim_core(workload, mesh: topo.MeshTopology, cfg: SimConfig, key0,
         back_hops = jnp.where(resp_start,
                               _hop_dist(mesh, tbl["coords"], victim), 0)
         if ls is None:
-            back_ticks = back_hops * cfg.hop_ticks
+            back_ticks = back_hops * p.hop_ticks
         else:
             # reply priced on the victim→thief path at the *arrival* epoch
             # (which may differ from the request's departure epoch)
@@ -1203,7 +1331,8 @@ def _sim_core(workload, mesh: topo.MeshTopology, cfg: SimConfig, key0,
                 # those ticks are provably eventless (the leap skips them;
                 # `_can_attempt` is the shared predicate, with the same
                 # fails row the draw itself saw)
-                can_try = _can_attempt(cfg, tbl, ls, eidx, fails_sel, W)
+                can_try = _can_attempt(code, escalate_after, tbl, ls, eidx,
+                                       fails_sel, W)
                 no_live = idle & (victim_new >= 0) & ~reach & can_try
                 tr = tracing.emit(
                     tr, trc, no_live, tick=t, kind=tracing.EV_NO_LIVE_VICTIM,
@@ -1309,8 +1438,7 @@ def _sim_core(workload, mesh: topo.MeshTopology, cfg: SimConfig, key0,
             busy=state.busy + nact), tr, t + delta, live & ~drained
 
     FB = cfg.famine_batch
-    famine_on = (cfg.step_mode == "leap" and FB > 0
-                 and cfg.strategy is not stealing.Strategy.LIFELINE)
+    famine_on = cfg.step_mode == "leap" and FB > 0
 
     def famine_ff(state: SimState, tr, t, live, ne_all):
         """Collapse up to FB ticks of deterministically failing probe cycles
@@ -1327,25 +1455,28 @@ def _sim_core(workload, mesh: topo.MeshTopology, cfg: SimConfig, key0,
         trailing leap never recomputes it.
         """
         ne_risky = _famine_horizon(state, t, speed, fail_time, wake_time,
-                                   fail_period, cfg, W, mesh, tbl, ls)
+                                   fail_period, cfg, p, W, mesh, tbl, ls)
         hi = jnp.minimum(ne_risky, cfg.max_ticks)
         delta = jnp.clip(hi - t, 0, FB)
         # profitable only when probe-cycle events (counted by _next_event but
         # not by the famine horizon) actually occur inside the batch range;
-        # otherwise the plain leap jumps the stretch for free
-        pred = live & (delta > 0) & (ne_all < jnp.minimum(hi, t + FB))
+        # otherwise the plain leap jumps the stretch for free. LIFELINE has
+        # no probe churn to collapse — its thieves park on lifelines — so
+        # the fast path is predicate-gated off for that strategy code.
+        pred = (live & (delta > 0) & (ne_all < jnp.minimum(hi, t + FB))
+                & (code != stealing.LIFELINE_CODE))
 
         def fast(state, tr, t, live):
             if ls is None:
                 eidx0, sp0 = None, speed
                 nbr_tab, tau_row = tbl["neighbors"], None
-                r2_tab, comp0 = tbl.get("radius2"), None
+                r2_tab, comp0 = tbl["radius2"], None
             else:
                 eidx0, sp0 = _epoch_view(ls, t)
                 nbr_tab, r2_tab, comp0 = _epoch_link_tables(tbl, ls, eidx0)
                 tau_row = ls.link_tau[eidx0]
-            near, far = stealing.batched_victim_draws(
-                cfg.strategy, key0, t, FB, nbr_tab, r2_tab,
+            near, far = stealing.batched_victim_draws_code(
+                code, key0, t, FB, nbr_tab, r2_tab,
                 num_workers=W, link_tau_row=tau_row)
             empty0 = state.deque.size == 0
             alive0 = state.alive
@@ -1373,13 +1504,11 @@ def _sim_core(workload, mesh: topo.MeshTopology, cfg: SimConfig, key0,
                 work = work - burning.astype(jnp.int32)
                 busy = busy + burning.astype(jnp.int32)
                 idle = running & ~burning & empty0 & act
-                idle = idle & ~_retired_mask(cfg, fail_time, fail_period, tj,
-                                             W)
-                if cfg.strategy is stealing.Strategy.ADAPTIVE:
-                    chosen = jnp.where(fails >= cfg.escalate_after,
-                                       far_j, near_j)
-                else:
-                    chosen = near_j
+                idle = idle & ~_retired_mask(cfg, p.warn_ticks, fail_time,
+                                             fail_period, tj, W)
+                chosen = jnp.where(
+                    (code == stealing.ADAPTIVE_CODE)
+                    & (fails >= escalate_after), far_j, near_j)
                 victim_new = jnp.where(idle, chosen, topo.NO_NEIGHBOR)
                 start_req = idle & (victim_new >= 0)
                 if comp0 is not None:
@@ -1395,8 +1524,8 @@ def _sim_core(workload, mesh: topo.MeshTopology, cfg: SimConfig, key0,
                         # from the replay carry — deliveries inside the
                         # window do advance it)
                         no_live = (idle & (victim_new >= 0) & ~same_c
-                                   & _can_attempt(cfg, tbl, ls, eidx0,
-                                                  fails, W))
+                                   & _can_attempt(code, escalate_after, tbl,
+                                                  ls, eidx0, fails, W))
                         ev, n = tracing.emit_raw(
                             ev, n, trc.ring_capacity, no_live, tick=tj,
                             kind=tracing.EV_NO_LIVE_VICTIM, worker=warr,
@@ -1407,7 +1536,7 @@ def _sim_core(workload, mesh: topo.MeshTopology, cfg: SimConfig, key0,
                 vhops = jnp.where(start_req,
                                   _hop_dist(mesh, tbl["coords"], victim_new), 0)
                 if ls is None:
-                    req_ticks = vhops * cfg.hop_ticks
+                    req_ticks = vhops * p.hop_ticks
                 else:
                     req_ticks = jnp.where(start_req, lstate.flight_ticks(
                         ls, eidx0, warr, victim_new,
@@ -1428,7 +1557,7 @@ def _sim_core(workload, mesh: topo.MeshTopology, cfg: SimConfig, key0,
                 back_hops = jnp.where(resp_start,
                                       _hop_dist(mesh, tbl["coords"], victim), 0)
                 if ls is None:
-                    back_ticks = back_hops * cfg.hop_ticks
+                    back_ticks = back_hops * p.hop_ticks
                 else:
                     back_ticks = jnp.where(resp_start, lstate.flight_ticks(
                         ls, eidx0, victim, warr,
@@ -1480,7 +1609,7 @@ def _sim_core(workload, mesh: topo.MeshTopology, cfg: SimConfig, key0,
                       state.steal_wait, state.hops_lo, state.hops_hi, t, live)
             if trc is not None:
                 carry0 = carry0 + (tr.ev, tr.n, tr.req_ticks)
-            xs = (jnp.arange(FB), near, far if far is not None else near)
+            xs = (jnp.arange(FB), near, far)
             out, _ = jax.lax.scan(step, carry0, xs)
             (phase, timer, victim, fails, work, loot, attempts, busy,
              steal_wait, hops_lo, hops_hi, t_out, live_out) = out[:13]
@@ -1508,7 +1637,7 @@ def _sim_core(workload, mesh: topo.MeshTopology, cfg: SimConfig, key0,
                     alive=jnp.sum(alive0.astype(jnp.int32)) * executed)
             return new_state, tr, t_out, live_out, _next_event(
                 new_state, t_out, speed, fail_time, wake_time, fail_period,
-                cfg, W, tbl, ls)
+                cfg, p, W, tbl, ls)
 
         return jax.lax.cond(pred, fast,
                             lambda s, r, tt, lv: (s, r, tt, lv, ne_all),
@@ -1523,7 +1652,7 @@ def _sim_core(workload, mesh: topo.MeshTopology, cfg: SimConfig, key0,
         state, snap, tr, t, live = tick_fn((state, snap, tr, t))
         if cfg.step_mode == "leap":
             ne = _next_event(state, t, speed, fail_time, wake_time,
-                             fail_period, cfg, W, tbl, ls)
+                             fail_period, cfg, p, W, tbl, ls)
             if famine_on:
                 state, tr, t, live, ne = famine_ff(state, tr, t, live, ne)
             state, tr, t, live = leap(state, tr, t, live, ne)
@@ -1555,12 +1684,52 @@ _sim_jit = partial(jax.jit, static_argnames=("workload", "mesh", "cfg"))(_sim_co
 
 
 @partial(jax.jit, static_argnames=("workload", "mesh", "cfg"))
-def _sim_batch_jit(workload, mesh, cfg, keys, fail_time, wake_time,
+def _sim_batch_jit(workload, mesh, cfg, params, fail_time, wake_time,
                    fail_period, speed, ls):
+    """vmap of `_sim_core` over a (B,)-stacked `SimParams` pytree (plus
+    per-point schedules). `cfg` is the static half only — every grid of
+    params points with the same `StaticConfig` reuses ONE compilation, and
+    `simulate_batch` / the single-device `simulate_sweep` path share this
+    cache entry."""
     return jax.vmap(
-        lambda k, ft, wt, fp, sp: _sim_core(workload, mesh, cfg, k, ft, wt,
+        lambda p, ft, wt, fp, sp: _sim_core(workload, mesh, cfg, p, ft, wt,
                                             fp, sp, ls)
-    )(keys, fail_time, wake_time, fail_period, speed)
+    )(params, fail_time, wake_time, fail_period, speed)
+
+
+# (workload, mesh, StaticConfig, devices) -> jitted shard_map'd sweep fn.
+# jax.jit would key on these statics anyway; the dict just skips rebuilding
+# the shard_map wrapper object so repeated sweeps hit the XLA cache.
+_SWEEP_SHARD_CACHE: dict = {}
+
+
+def _sharded_sweep_fn(workload, mesh, cfg: StaticConfig, devs):
+    key = (workload, mesh, cfg, devs)
+    fn = _SWEEP_SHARD_CACHE.get(key)
+    if fn is None:
+        from jax.sharding import Mesh as DeviceMesh
+        from jax.sharding import PartitionSpec as P
+        try:  # jax >= 0.6 exposes shard_map at top level (check_vma spelling)
+            from jax import shard_map
+            sm_kwargs = {"check_vma": False}
+        except ImportError:  # older jax: experimental API, check_rep spelling
+            from jax.experimental.shard_map import shard_map
+            sm_kwargs = {"check_rep": False}
+        dmesh = DeviceMesh(np.array(devs), ("grid",))
+
+        def shard_body(params, ft, wt, fp, sp, ls):
+            # per-device slice of the grid; vmap the points inside the shard
+            return jax.vmap(
+                lambda p, a, b, c, d: _sim_core(workload, mesh, cfg, p, a,
+                                                b, c, d, ls)
+            )(params, ft, wt, fp, sp)
+
+        fn = jax.jit(shard_map(
+            shard_body, mesh=dmesh,
+            in_specs=(P("grid"),) * 5 + (P(),),   # ls replicated
+            out_specs=P("grid"), **sm_kwargs))
+        _SWEEP_SHARD_CACHE[key] = fn
+    return fn
 
 
 def _check_cfg(cfg: SimConfig):
@@ -1574,16 +1743,31 @@ def _check_cfg(cfg: SimConfig):
         raise ValueError(f"max_ticks must stay below {int(_NEVER)}")
     if cfg.famine_batch < 0:
         raise ValueError("famine_batch must be >= 0 (0 disables the fast path)")
+    _check_params(cfg.params)
     if cfg.trace is not None:
         cfg.trace.validate()
 
 
-def _ckpt_state_bytes(mesh: topo.MeshTopology, cfg: SimConfig) -> int:
+def _check_params(p: SimParams):
+    """Host-side validation of one (unstacked) `SimParams` point — the
+    checks that used to live as trace-time asserts before these fields
+    became traced values."""
+    if int(p.max_grants_per_victim) > stealing.GRANT_WIDTH:
+        raise ValueError(
+            "max_grants_per_victim must be <= stealing.GRANT_WIDTH "
+            f"({stealing.GRANT_WIDTH}), got {int(p.max_grants_per_victim)}")
+    if not 0 <= int(p.strategy) < len(stealing.CODE_STRATEGIES):
+        raise ValueError(f"unknown strategy code {int(p.strategy)}")
+    if int(p.hop_ticks) < 0:
+        raise ValueError("hop_ticks must be >= 0")
+
+
+def _ckpt_state_bytes(mesh: topo.MeshTopology, cfg: StaticConfig) -> int:
     return mesh.num_workers * cfg.capacity * 4 * 4 + mesh.num_workers * 4
 
 
 def _finalize(state, tr, ticks, iters, mesh: topo.MeshTopology,
-              cfg: SimConfig) -> SimResult:
+              cfg: StaticConfig) -> SimResult:
     att, suc = int(state.attempts.sum()), int(state.successes.sum())
     busy = int(np.asarray(state.busy, np.int64).sum())
     t = int(ticks)
@@ -1681,14 +1865,14 @@ def simulate(workload, mesh: topo.MeshTopology, cfg: SimConfig | None = None,
     'auto' — sparse at W >= linkstate.SPARSE_AUTO_MIN_WORKERS)."""
     cfg = cfg or SimConfig()
     _check_cfg(cfg)
+    scfg, params = cfg.split()
     ls = _linkstate_tables(linkstate, mesh, speed, routing_backend)
     ft, wt, fp, sp = _fail_speed_arrays(mesh.num_workers, fail_time, speed,
                                         wake_time, fail_period)
-    state, tr, ticks, iters = _sim_jit(workload, mesh, cfg,
-                                       jax.random.PRNGKey(cfg.seed), ft, wt,
+    state, tr, ticks, iters = _sim_jit(workload, mesh, scfg, params, ft, wt,
                                        fp, sp, ls)
     state, tr = jax.device_get((state, tr))
-    return _finalize(state, tr, ticks, iters, mesh, cfg)
+    return _finalize(state, tr, ticks, iters, mesh, scfg)
 
 
 def simulate_batch(workload, mesh: topo.MeshTopology,
@@ -1711,10 +1895,11 @@ def simulate_batch(workload, mesh: topo.MeshTopology,
     """
     cfg = cfg or SimConfig()
     _check_cfg(cfg)
+    scfg, params = cfg.split()
     ls = _linkstate_tables(linkstate, mesh, speed, routing_backend)
     W = mesh.num_workers
     seeds = list(seeds)
-    keys = jnp.stack([jax.random.PRNGKey(int(s)) for s in seeds])
+    pstack = stack_params([params._replace(seed=int(s)) for s in seeds])
     ft, wt, fp, sp = _fail_speed_arrays(W, fail_time, speed, wake_time,
                                         fail_period)
     B = len(seeds)
@@ -1722,12 +1907,80 @@ def simulate_batch(workload, mesh: topo.MeshTopology,
     wts = jnp.broadcast_to(wt[None], (B, W))
     fps = jnp.broadcast_to(fp[None], (B, W))
     sps = jnp.broadcast_to(sp[None], (B, W))
-    states, trs, ticks, iters = _sim_batch_jit(workload, mesh, cfg, keys, fts,
-                                               wts, fps, sps, ls)
+    states, trs, ticks, iters = _sim_batch_jit(workload, mesh, scfg, pstack,
+                                               fts, wts, fps, sps, ls)
     states, trs, ticks, iters = jax.device_get((states, trs, ticks, iters))
     return [
         _finalize(jax.tree.map(lambda x: x[i], states),
                   jax.tree.map(lambda x: x[i], trs), ticks[i], iters[i],
-                  mesh, cfg)
+                  mesh, scfg)
         for i in range(B)
+    ]
+
+
+def simulate_sweep(workload, mesh: topo.MeshTopology, cfg,
+                   params_list,
+                   fail_time: np.ndarray | None = None,
+                   speed: np.ndarray | None = None,
+                   linkstate=None,
+                   wake_time: np.ndarray | None = None,
+                   fail_period: np.ndarray | None = None,
+                   routing_backend: str = "auto",
+                   devices=None) -> list[SimResult]:
+    """Run a whole grid of `SimParams` points in ONE compiled call.
+
+    `cfg` supplies the static half (a `StaticConfig`, or a `SimConfig`
+    whose traced fields are ignored); `params_list` is the grid — a
+    sequence of `SimParams` (or `SimConfig`s, split on the fly). Every
+    point shares the workload, mesh, failure/wake schedules, straggler
+    speeds, and link-state schedule; sweep those by calling again (they
+    are shapes/schedules, not scalar axes).
+
+    On one local device the grid is vmapped through the same jit cache
+    entry `simulate_batch` uses; on multiple devices it is sharded across
+    them with `shard_map` over a 1D "grid" device axis (the grid is padded
+    to a device multiple by repeating the last point, trimmed on return).
+    Either way the whole grid costs ONE `_sim_core` trace per distinct
+    `StaticConfig` (pinned by `trace_count()` tests), and results are
+    bit-identical to per-point `simulate()` calls — vmap's while_loop
+    batching freezes finished points while the rest run on.
+
+    Returns one `SimResult` per point, in `params_list` order.
+    """
+    scfg = cfg.static if isinstance(cfg, SimConfig) else cfg
+    pts = [p.params if isinstance(p, SimConfig) else p for p in params_list]
+    if not pts:
+        return []
+    for p in pts:
+        _check_params(p)
+    if scfg.trace is not None:
+        scfg.trace.validate()
+    G = len(pts)
+    W = mesh.num_workers
+    ls = _linkstate_tables(linkstate, mesh, speed, routing_backend)
+    ft, wt, fp, sp = _fail_speed_arrays(W, fail_time, speed, wake_time,
+                                        fail_period)
+    devs = tuple(devices) if devices is not None else tuple(jax.local_devices())
+    sharded = len(devs) > 1
+    if sharded:  # pad the grid to a device multiple (trimmed below)
+        pts = pts + [pts[-1]] * ((-G) % len(devs))
+    pstack = stack_params(pts)
+    B = len(pts)
+    fts = jnp.broadcast_to(ft[None], (B, W))
+    wts = jnp.broadcast_to(wt[None], (B, W))
+    fps = jnp.broadcast_to(fp[None], (B, W))
+    sps = jnp.broadcast_to(sp[None], (B, W))
+    if sharded:
+        fn = _sharded_sweep_fn(workload, mesh, scfg, devs)
+        states, trs, ticks, iters = fn(pstack, fts, wts, fps, sps, ls)
+    else:
+        states, trs, ticks, iters = _sim_batch_jit(workload, mesh, scfg,
+                                                   pstack, fts, wts, fps,
+                                                   sps, ls)
+    states, trs, ticks, iters = jax.device_get((states, trs, ticks, iters))
+    return [
+        _finalize(jax.tree.map(lambda x: x[i], states),
+                  jax.tree.map(lambda x: x[i], trs), ticks[i], iters[i],
+                  mesh, scfg)
+        for i in range(G)
     ]

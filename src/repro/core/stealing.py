@@ -43,6 +43,31 @@ class Strategy(enum.Enum):
     ADAPTIVE = "adaptive"
 
 
+# Traced strategy codes: `simulator.SimParams` / `scheduler.SchedParams`
+# carry the strategy as an int32 so ONE compiled program serves every
+# strategy of a sweep grid, dispatched with `lax.switch`. The code order IS
+# the dispatch-table order — every switch branch list below and in the
+# executors must follow it.
+GLOBAL_CODE, NEIGHBOR_CODE, LIFELINE_CODE, ADAPTIVE_CODE = range(4)
+STRATEGY_CODES = {
+    Strategy.GLOBAL: GLOBAL_CODE,
+    Strategy.NEIGHBOR: NEIGHBOR_CODE,
+    Strategy.LIFELINE: LIFELINE_CODE,
+    Strategy.ADAPTIVE: ADAPTIVE_CODE,
+}
+CODE_STRATEGIES = {c: s for s, c in STRATEGY_CODES.items()}
+
+
+def strategy_code(strategy) -> int:
+    """Dispatch code of `strategy` (a Strategy, its value string, or an
+    already-encoded int, passed through)."""
+    if isinstance(strategy, Strategy):
+        return STRATEGY_CODES[strategy]
+    if isinstance(strategy, str):
+        return STRATEGY_CODES[Strategy(strategy)]
+    return int(strategy)
+
+
 # Staging width of the grant/export path: the maximum number of bottom tasks
 # a victim can hand out in one steal round. Single source of truth shared by
 # `resolve_grants` callers, both deque backends' export (`deque.export_bottom`
@@ -386,6 +411,82 @@ def probe_may_succeed(strategy: Strategy, nonempty: jax.Array,
         may_escalate = (to_go - 1) * min_cycle < window
         return near | (_any_nonempty(radius2_table, nonempty) & may_escalate)
     raise ValueError(strategy)
+
+
+def probe_may_succeed_code(code, nonempty: jax.Array, fails: jax.Array,
+                           neighbor_table: jax.Array,
+                           radius2_table: jax.Array, *,
+                           escalate_after, window: int, min_cycle,
+                           num_workers: int,
+                           comp_row: jax.Array | None = None) -> jax.Array:
+    """Traced-strategy `probe_may_succeed`: `code` is an int32 strategy code
+    and `escalate_after` / `min_cycle` may be traced scalars, so one compiled
+    famine horizon serves a whole sweep grid. Every strategy's predicate is
+    computed (cheap row reductions) and the code-selected one returned —
+    bit-identical to the enum version per strategy (asserted in tests).
+    `radius2_table` is required (the grid program can always select
+    ADAPTIVE); LIFELINE still answers all-True, keeping it off the fast
+    path."""
+    W = num_workers
+    if comp_row is None:
+        glob = jnp.broadcast_to(nonempty.any() & (W > 1), (W,))
+    else:
+        in_comp = jnp.zeros((W,), jnp.int32).at[comp_row].add(
+            nonempty.astype(jnp.int32))
+        glob = (in_comp[comp_row] - nonempty.astype(jnp.int32)) > 0
+    near = _any_nonempty(neighbor_table, nonempty)
+    to_go = escalate_after - fails
+    may_escalate = (to_go - 1) * min_cycle < window
+    adapt = near | (_any_nonempty(radius2_table, nonempty) & may_escalate)
+    return jnp.where(code == GLOBAL_CODE, glob,
+                     jnp.where(code == NEIGHBOR_CODE, near,
+                               jnp.where(code == ADAPTIVE_CODE, adapt,
+                                         jnp.ones((W,), bool))))
+
+
+def batched_victim_draws_code(code, key0: jax.Array, t0, count: int,
+                              neighbor_table: jax.Array,
+                              radius2_table: jax.Array, *,
+                              num_workers: int,
+                              link_tau_row: jax.Array | None = None):
+    """Traced-strategy `batched_victim_draws`: dispatches over an int32
+    strategy code with `lax.switch` and always returns ``(near, far)`` of
+    shape (count, W) — `far` duplicates `near` for the single-draw
+    strategies, so the caller's escalation select reduces to the near draw.
+    Each branch uses the key exactly as its per-tick `_select` counterpart
+    (same splits, same `fold_in(key0, t)` schedule), preserving the
+    bit-identity of the famine replay. The LIFELINE branch returns global
+    draws as a placeholder: the simulator's famine path is predicate-gated
+    off for LIFELINE, so the branch output can only be produced — and then
+    discarded — under vmapped-switch execute-all-branches semantics."""
+    W = num_workers
+    all_thieves = jnp.ones((W,), bool)
+    ticks = t0 + jnp.arange(count)
+    keys = jax.vmap(lambda t: jax.random.fold_in(key0, t))(ticks)
+
+    def b_global(_):
+        near = jax.vmap(lambda k: choose_global(k, W, all_thieves))(keys)
+        return near, near
+
+    def b_neighbor(_):
+        near = jax.vmap(
+            lambda k: choose_neighbor(k, neighbor_table, all_thieves))(keys)
+        return near, near
+
+    def b_adaptive(_):
+        near_tab = (neighbor_table if link_tau_row is None
+                    else cheapest_live_table(neighbor_table, link_tau_row))
+
+        def draw(k):
+            k1, k2 = jax.random.split(k)
+            return (_pick_from_list(k1, near_tab, all_thieves),
+                    _pick_from_list(k2, radius2_table, all_thieves))
+
+        return jax.vmap(draw)(keys)
+
+    # dispatch-table order == the strategy code order
+    return jax.lax.switch(code, [b_global, b_neighbor, b_global, b_adaptive],
+                          None)
 
 
 def batched_victim_draws(strategy: Strategy, key0: jax.Array, t0, count: int,

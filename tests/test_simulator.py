@@ -413,8 +413,8 @@ def test_hiwater_at_least_final_occupancy_on_truncated_run():
     cfg = simulator.SimConfig(strategy=stealing.Strategy.NEIGHBOR,
                               hop_ticks=3, capacity=256, max_ticks=40)
     ft, wt, fp, sp = simulator._fail_speed_arrays(MESH.num_workers, None, None)
-    state, _tr, ticks, _ = simulator._sim_jit(FIB, MESH, cfg,
-                                              jax.random.PRNGKey(cfg.seed),
+    state, _tr, ticks, _ = simulator._sim_jit(FIB, MESH, cfg.static,
+                                              cfg.params,
                                               ft, wt, fp, sp, None)
     assert int(ticks) == 40
     final = np.asarray(state.deque.size)

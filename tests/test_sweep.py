@@ -1,0 +1,280 @@
+"""One compile, whole grid: the static/traced `SimConfig` split and the
+sweep engines.
+
+Pins the PR's hard invariants: (a) an N-point (strategy × τ × seed) grid
+costs exactly ONE `_sim_core` trace per static config — `simulate_batch`
+and `simulate_sweep` never retrace when only `SimParams` fields differ;
+(b) stacked-params runs are bit-identical to per-config `simulate()`
+calls (deterministic grids, property-based random grids, and the
+existing leap≡tick conformance scenarios); (c) the factorial engine in
+`benchmarks/sweep.py` preserves grid order and coordinates; (d) the
+multi-device `shard_map` path returns the same bits (subprocess with
+forced host devices)."""
+
+import dataclasses
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from hypothesis_compat import given, settings, st  # degrades to skips without hypothesis
+from repro.core import scheduler, simulator, stealing, tasks, topology
+
+WL = tasks.FibWorkload(n=20, cutoff=12, max_leaf_cost=8)
+MESH = topology.MeshTopology.grid(3, 3)
+
+SCALAR_FIELDS = ("result", "ticks", "nodes", "attempts", "successes",
+                 "busy_ticks", "steal_wait_ticks", "bytes_hops",
+                 "ckpt_bytes", "overflow", "events")
+ARRAY_FIELDS = ("per_worker_busy", "per_worker_overflow",
+                "per_worker_stolen", "per_worker_attempts")
+
+ALL_CODES = [stealing.strategy_code(s) for s in stealing.Strategy]
+
+
+def _assert_same(stacked, sequential, ctx):
+    for f in SCALAR_FIELDS:
+        assert getattr(stacked, f) == getattr(sequential, f), (ctx, f)
+    for f in ARRAY_FIELDS:
+        a, b = getattr(stacked, f), getattr(sequential, f)
+        assert np.array_equal(a, b), (ctx, f)
+
+
+def _sequential(cfg, p, **kw):
+    full = dataclasses.replace(
+        cfg, strategy=stealing.CODE_STRATEGIES[int(p.strategy)],
+        hop_ticks=int(p.hop_ticks), escalate_after=int(p.escalate_after),
+        max_grants_per_victim=int(p.max_grants_per_victim),
+        warn_ticks=int(p.warn_ticks), ckpt_interval=int(p.ckpt_interval),
+        seed=int(p.seed))
+    return simulator.simulate(WL, MESH, full, **kw)
+
+
+# --------------------------------------------------------------------------- #
+# Compile-count regression
+# --------------------------------------------------------------------------- #
+
+def test_sweep_grid_costs_exactly_one_trace():
+    """A 16-point (4 strategies × 2 τ × 2 seeds) grid triggers exactly ONE
+    `_sim_core` trace. (Distinctive capacity ⇒ fresh jit cache entry.)"""
+    cfg = simulator.SimConfig(capacity=96, max_ticks=200_000)
+    pts = [cfg.params._replace(strategy=c, hop_ticks=t, seed=s)
+           for c in ALL_CODES for t in (1, 5) for s in (0, 3)]
+    before = simulator.trace_count()
+    rs = simulator.simulate_sweep(WL, MESH, cfg, pts)
+    assert simulator.trace_count() - before == 1
+    assert len(rs) == len(pts)
+
+
+def test_simulate_batch_no_retrace_on_params_only_changes():
+    """`simulate_batch` calls that differ only in traced `SimParams` fields
+    (strategy, τ, escalation, warn/ckpt scalars, seeds) reuse the first
+    call's compilation — zero new traces."""
+    base = dict(capacity=80, max_ticks=200_000)
+    cfg_a = simulator.SimConfig(strategy=stealing.Strategy.NEIGHBOR,
+                                hop_ticks=2, **base)
+    simulator.simulate_batch(WL, MESH, cfg_a, seeds=(0, 1))
+    before = simulator.trace_count()
+    cfg_b = simulator.SimConfig(strategy=stealing.Strategy.GLOBAL,
+                                hop_ticks=7, escalate_after=2,
+                                ckpt_interval=64, seed=9, **base)
+    simulator.simulate_batch(WL, MESH, cfg_b, seeds=(4, 5))
+    cfg_c = dataclasses.replace(cfg_a, strategy=stealing.Strategy.ADAPTIVE,
+                                warn_ticks=0, hop_ticks=1)
+    simulator.simulate_batch(WL, MESH, cfg_c, seeds=(7, 8))  # same B
+    assert simulator.trace_count() - before == 0
+
+
+def test_static_change_does_retrace():
+    """Static fields (here: capacity) still key the jit cache — the split
+    must not under-cache program structure."""
+    cfg = simulator.SimConfig(capacity=112, max_ticks=200_000)
+    before = simulator.trace_count()
+    simulator.simulate_sweep(WL, MESH, cfg, [cfg.params])
+    simulator.simulate_sweep(WL, MESH, dataclasses.replace(cfg, capacity=104),
+                             [cfg.params])
+    assert simulator.trace_count() - before == 2
+
+
+def test_scheduler_sweep_single_trace_and_equivalence():
+    """`scheduler.run_sweep`: one `_run_core` trace for a mixed
+    (strategy × seed) grid, bit-identical to per-point `run_vectorized`."""
+    wl = tasks.FibWorkload(n=24, cutoff=18, max_leaf_cost=8)
+    mesh = topology.MeshTopology.grid(3, 3)
+    cfg = scheduler.SchedulerConfig(capacity=160, max_rounds=500_000)
+    pts = [cfg.params._replace(strategy=c, seed=s)
+           for c in ALL_CODES for s in (0, 2)]
+    before = scheduler.run_trace_count()
+    rs = scheduler.run_sweep(wl, mesh, cfg, pts)
+    assert scheduler.run_trace_count() - before == 1
+    for p, r in zip(pts, rs):
+        ref = scheduler.run_vectorized(wl, mesh, dataclasses.replace(
+            cfg, strategy=stealing.CODE_STRATEGIES[int(p.strategy)],
+            seed=int(p.seed)))
+        for f in ("result", "rounds", "nodes", "attempts", "successes",
+                  "overflow", "p_success"):
+            assert getattr(r, f) == getattr(ref, f), (p, f)
+        assert np.array_equal(r.per_worker_busy, ref.per_worker_busy)
+
+
+# --------------------------------------------------------------------------- #
+# Stacked ≡ sequential bit-exactness
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("step_mode", ["tick", "leap"])
+def test_stacked_equals_sequential_mixed_grid(step_mode):
+    """A mixed (strategy × τ × seed) stack returns exactly what per-config
+    `simulate()` calls return, elementwise per worker."""
+    cfg = simulator.SimConfig(capacity=128, max_ticks=200_000,
+                              step_mode=step_mode)
+    pts = [cfg.params._replace(strategy=c, hop_ticks=t, seed=s)
+           for c in ALL_CODES for t in (1, 4) for s in (0, 7)]
+    rs = simulator.simulate_sweep(WL, MESH, cfg, pts)
+    for p, r in zip(pts, rs):
+        _assert_same(r, _sequential(cfg, p), (step_mode, tuple(p)))
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.data())
+@pytest.mark.parametrize("step_mode", ["tick", "leap"])
+def test_property_random_grids_stacked_equals_sequential(step_mode, data):
+    """Property: ANY small random grid of SimParams — random strategies,
+    τ, escalation thresholds, grant caps, seeds — stacks bit-identically,
+    in both step modes. Skips when hypothesis is absent."""
+    npts = data.draw(st.integers(min_value=1, max_value=5), label="npts")
+    cfg = simulator.SimConfig(capacity=64, max_ticks=200_000,
+                              step_mode=step_mode)
+    pts = []
+    for i in range(npts):
+        pts.append(simulator.SimParams(
+            strategy=data.draw(st.sampled_from(ALL_CODES), label=f"strat{i}"),
+            hop_ticks=data.draw(st.integers(0, 6), label=f"tau{i}"),
+            escalate_after=data.draw(st.integers(1, 6), label=f"esc{i}"),
+            max_grants_per_victim=data.draw(st.integers(1, 4),
+                                            label=f"grants{i}"),
+            ckpt_interval=data.draw(st.sampled_from([0, 0, 37]),
+                                    label=f"ckpt{i}"),
+            seed=data.draw(st.integers(0, 2**20), label=f"seed{i}")))
+    rs = simulator.simulate_sweep(WL, MESH, cfg, pts)
+    for p, r in zip(pts, rs):
+        _assert_same(r, _sequential(cfg, p), (step_mode, tuple(p)))
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("scenario", ["seam_detour", "eclipse_cycle",
+                                      "midfamine_wake"])
+@pytest.mark.parametrize("step_mode", ["tick", "leap"])
+def test_stacked_conformance_matrix(scenario, step_mode):
+    """Acceptance: the stacked path joins the existing leap≡tick
+    conformance matrix — link-state detours, eclipse enter+exit with
+    pre-shed, and mid-famine wakes all return per-point bits identical
+    to `simulate()` when run as one (strategy × τ) stack."""
+    from test_simulator import CONF_SCENARIOS
+
+    mesh, wl, ls, ft, wt = CONF_SCENARIOS[scenario](3)
+    preshed = ft is not None
+    cfg = simulator.SimConfig(capacity=128, max_ticks=200_000,
+                              step_mode=step_mode, preshed=preshed,
+                              warn_ticks=2 if preshed else 0)
+    codes = [stealing.strategy_code(s) for s in (stealing.Strategy.NEIGHBOR,
+                                                 stealing.Strategy.GLOBAL,
+                                                 stealing.Strategy.ADAPTIVE)]
+    pts = [cfg.params._replace(strategy=c, hop_ticks=t)
+           for c in codes for t in (1, 5)]
+    rs = simulator.simulate_sweep(wl, mesh, cfg, pts, fail_time=ft,
+                                  wake_time=wt, linkstate=ls)
+    for p, r in zip(pts, rs):
+        full = dataclasses.replace(
+            cfg, strategy=stealing.CODE_STRATEGIES[int(p.strategy)],
+            hop_ticks=int(p.hop_ticks), warn_ticks=int(p.warn_ticks),
+            seed=int(p.seed))
+        ref = simulator.simulate(wl, mesh, full, fail_time=ft, wake_time=wt,
+                                 linkstate=ls)
+        for f in SCALAR_FIELDS:
+            assert getattr(r, f) == getattr(ref, f), (scenario, tuple(p), f)
+        for f in ARRAY_FIELDS:
+            assert np.array_equal(getattr(r, f), getattr(ref, f)), (
+                scenario, tuple(p), f)
+
+
+@pytest.mark.slow
+def test_sharded_sweep_matches_sequential_subprocess():
+    """The multi-device `shard_map` path (forced host devices in a child
+    process) returns the same bits as `simulate()`, including the
+    pad-to-device-multiple trim."""
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    code = """
+import numpy as np, jax
+assert len(jax.local_devices()) == 2, jax.local_devices()
+from repro.core import simulator, stealing, tasks, topology
+mesh = topology.MeshTopology.grid(3, 3)
+wl = tasks.FibWorkload(20, 12, 8)
+cfg = simulator.SimConfig(hop_ticks=3, capacity=128, max_ticks=200000)
+pts = [cfg.params._replace(strategy=c, seed=s)
+       for c in (stealing.GLOBAL_CODE, stealing.NEIGHBOR_CODE,
+                 stealing.ADAPTIVE_CODE) for s in (0, 1)][:5]  # odd: pads
+rs = simulator.simulate_sweep(wl, mesh, cfg, pts)
+import dataclasses
+for p, r in zip(pts, rs):
+    full = dataclasses.replace(cfg,
+        strategy=stealing.CODE_STRATEGIES[int(p.strategy)], seed=int(p.seed))
+    ref = simulator.simulate(wl, mesh, full)
+    assert r.result == ref.result and r.ticks == ref.ticks, p
+    assert np.array_equal(r.per_worker_busy, ref.per_worker_busy), p
+print("SHARDED_OK")
+"""
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=2",
+               JAX_PLATFORMS="cpu",
+               PYTHONPATH=os.path.join(root, "src"))
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, cwd=root, timeout=560)
+    assert out.returncode == 0, (out.stdout, out.stderr)
+    assert "SHARDED_OK" in out.stdout
+
+
+# --------------------------------------------------------------------------- #
+# Factorial engine (benchmarks/sweep.py)
+# --------------------------------------------------------------------------- #
+
+def test_param_grid_order_and_strategy_normalisation():
+    from benchmarks.sweep import param_grid
+
+    pts = param_grid(hop_ticks=(2, 5),
+                     strategy=("neighbor", stealing.Strategy.GLOBAL),
+                     seed=range(2))
+    assert len(pts) == 8
+    # row-major in axis order; strategy normalised to codes
+    assert [c["hop_ticks"] for c, _ in pts] == [2] * 4 + [5] * 4
+    assert pts[0][0]["strategy"] == stealing.NEIGHBOR_CODE
+    assert pts[2][0]["strategy"] == stealing.GLOBAL_CODE
+    for coords, p in pts:
+        assert int(p.hop_ticks) == coords["hop_ticks"]
+        assert int(p.seed) == coords["seed"]
+
+
+def test_run_grid_results_align_with_coords():
+    from benchmarks.sweep import run_grid
+
+    cfg = simulator.SimConfig(capacity=88, max_ticks=200_000)
+    rows = run_grid(WL, MESH, cfg,
+                    dict(strategy=("neighbor", "global"), seed=(0, 1)))
+    assert len(rows) == 4
+    for row in rows:
+        p = row["params"]
+        assert int(p.strategy) == row["strategy"]
+        _assert_same(row["result"], _sequential(cfg, p),
+                     (row["strategy"], row["seed"]))
+
+
+def test_sweep_validates_bad_params():
+    cfg = simulator.SimConfig(capacity=64, max_ticks=100_000)
+    with pytest.raises(ValueError):
+        simulator.simulate_sweep(WL, MESH, cfg,
+                                 [cfg.params._replace(strategy=17)])
+    with pytest.raises(ValueError):
+        simulator.simulate_sweep(
+            WL, MESH, cfg,
+            [cfg.params._replace(max_grants_per_victim=1000)])

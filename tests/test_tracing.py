@@ -202,9 +202,9 @@ def test_trace_none_is_statically_branched_out(monkeypatch):
 
     def jaxpr():
         return str(jax.make_jaxpr(
-            lambda key: simulator._sim_core(EQ_FIB, EQ_MESH, cfg, key,
-                                            ft, wt, fp, sp, None)
-        )(jax.random.PRNGKey(0)))
+            lambda p: simulator._sim_core(EQ_FIB, EQ_MESH, cfg.static, p,
+                                          ft, wt, fp, sp, None)
+        )(cfg.params))
 
     base = jaxpr()
     for fn in ("init", "emit_raw", "emit", "emit1", "ts_add",
@@ -218,9 +218,9 @@ def test_trace_none_is_statically_branched_out(monkeypatch):
     cfg_on = simulator.SimConfig(strategy=stealing.Strategy.NEIGHBOR,
                                  capacity=64, max_ticks=50_000, trace=TC)
     on = str(jax.make_jaxpr(
-        lambda key: simulator._sim_core(EQ_FIB, EQ_MESH, cfg_on, key,
-                                        ft, wt, fp, sp, None)
-    )(jax.random.PRNGKey(0)))
+        lambda p: simulator._sim_core(EQ_FIB, EQ_MESH, cfg_on.static, p,
+                                      ft, wt, fp, sp, None)
+    )(cfg_on.params))
     assert on != base
     assert f"{TC.ring_capacity},{tracing.NUM_LANES}" in on.replace(" ", "")
 
@@ -269,8 +269,13 @@ def test_chrome_trace_export_structure(tmp_path):
                                  timeseries=r.timeseries)
     evs = ct["traceEvents"]
     spans = [e for e in evs if e.get("ph") == "X"]
-    # every resolved attempt renders as a span with its RTT as duration
-    assert len(spans) == len(r.trace.of_kind(*tracing.ATTEMPT_KINDS))
+    # every attempt renders as a steal span with its RTT as duration (the
+    # link-state epoch track contributes its own ph="X" spans on pid 0)
+    steal_spans = [e for e in spans if e["name"].startswith("steal:")]
+    assert len(steal_spans) == len(r.trace.of_kind(*tracing.ATTEMPT_KINDS))
+    epoch_spans = [e for e in spans if e["name"].startswith("epoch ")]
+    assert len(epoch_spans) == len(r.trace.of_kind(tracing.EV_EPOCH))
+    assert len(spans) == len(steal_spans) + len(epoch_spans)
     assert all(e["dur"] >= 1 for e in spans)
     assert any(e.get("ph") == "i" for e in evs)      # lifecycle instants
     assert any(e.get("ph") == "C" for e in evs)      # time-series counters
