@@ -44,7 +44,6 @@ Usage:
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import resource
 import time
@@ -55,7 +54,7 @@ from repro.configs import paper_mesh
 from repro.core import constellation
 from repro.core import deque as dq
 from repro.core import linkstate
-from repro.core import simulator, stealing, topology, tracing
+from repro.core import jsonio, simulator, stealing, topology, tracing
 from .common import emit
 
 STRATS = {
@@ -304,11 +303,10 @@ def run(workers=(100, 640, 2500), strategies=("global", "neighbor", "adaptive"),
     peak_rss_mb = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024
     print(f"peak_rss_mb={peak_rss_mb:.0f}")
     if json_path:
-        with open(json_path, "w") as f:
-            json.dump(dict(
-                peak_rss_mb=round(peak_rss_mb, 1),
-                runs={f"strategy={s}/W={W}/tau={tau}": r
-                      for (W, s, tau), r in results.items()}), f, indent=2)
+        jsonio.write(json_path, dict(
+            peak_rss_mb=round(peak_rss_mb, 1),
+            runs={f"strategy={s}/W={W}/tau={tau}": r
+                  for (W, s, tau), r in results.items()}), indent=2)
     if rss_budget_mb is not None and peak_rss_mb > rss_budget_mb:
         raise SystemExit(
             f"peak RSS {peak_rss_mb:.0f} MB exceeds the "

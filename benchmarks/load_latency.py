@@ -1,0 +1,225 @@
+"""The load–latency curve: open-loop traffic, tail-latency SLOs, and the
+saturation knee per stealing strategy.
+
+A closed-system makespan says nothing about serving real traffic; the SEC
+question is "how much offered load can a strategy carry before tail
+latency blows up?". This bench drives the simulator's open-loop arrival
+stream (`core/arrivals.py`) across an offered-load axis and reports the
+sojourn-time percentiles (p50/p90/p99/p99.9, from the flight recorder's
+EV_SOJOURN ledger) per (strategy, load) cell, plus each strategy's
+*saturation knee* — the highest measured load whose median-across-seeds
+p99 stays within `--knee-factor`× of that strategy's light-load p99.
+
+The whole (strategy × load × seed) factorial runs in ONE
+`simulate_sweep` call per strategy set: the offered load is the traced
+`SimParams.arrival_gap_q8` leaf, so the load axis costs zero retraces
+(`--assert-single-compile` pins it, same contract as the crossover
+sweep). All headline numbers are tick counts — deterministic, immune to
+the container's ±30 % wall-clock jitter.
+
+Writes `BENCH_loadlat.json` (strict JSON via `core/jsonio.py`: no
+NaN/Infinity, ever) and a p99-vs-load figure with the knee marked.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from repro.core import arrivals, jsonio, simulator, stealing, tasks, topology
+from repro.core import tracing
+from .common import emit
+
+DEFAULT_LOADS = (0.05, 0.1, 0.2, 0.3, 0.45, 0.6, 0.8, 1.0, 1.25)
+QUICK_LOADS = (0.1, 0.4, 0.8)
+PCTS = ("p50", "p90", "p99", "p999")
+
+
+def run_curve(side: int = 6, taus=(3,), loads=DEFAULT_LOADS,
+              strategies=("neighbor", "global", "adaptive"), runs: int = 3,
+              task_cost: int = 64, num_stations: int = 0,
+              zipf_s: float = 0.0, horizon: int = 20_000,
+              ring_capacity: int = 1 << 17,
+              knee_factor: float = 3.0,
+              assert_single_compile: bool = False) -> dict:
+    """Sweep offered load per strategy and locate the saturation knee.
+
+    Offered load is in expected *work units per worker-tick*:
+    load = cost/(gap·W), so load 1.0 means arrivals alone demand every
+    worker's full capacity and the system must saturate just above it.
+    """
+    W = side * side
+    mesh = topology.MeshTopology.square(W)
+    wl = tasks.FibWorkload(n=8, cutoff=4, max_leaf_cost=4)  # tiny seed root
+    acfg = arrivals.ArrivalConfig(task_cost=task_cost,
+                                  num_stations=num_stations, zipf_s=zipf_s)
+    codes = [stealing.strategy_code(s) for s in strategies]
+    names = {c: stealing.CODE_STRATEGIES[c].value for c in codes}
+    # task rate (tasks/tick) delivering `load` work-units/worker-tick
+    gaps = {ld: arrivals.gap_q8_for_load(ld * W / task_cost) for ld in loads}
+    trc = tracing.TraceConfig(ring_capacity=ring_capacity, bins=128,
+                              bin_ticks=max(horizon // 128, 1))
+    cfg = simulator.SimConfig(max_ticks=horizon, trace=trc,
+                              capacity=4096, arrival_batch=1)
+    scfg, base = cfg.split()
+    pts, coords = [], []
+    for c in codes:
+        for ld in loads:
+            for tau in taus:
+                for s in range(runs):
+                    pts.append(base._replace(strategy=c, hop_ticks=tau,
+                                             seed=s,
+                                             arrival_gap_q8=gaps[ld]))
+                    coords.append((c, ld, tau, s))
+    before = simulator.trace_count()
+    results = simulator.simulate_sweep(wl, mesh, scfg, pts, arrivals=acfg)
+    traces = simulator.trace_count() - before
+    if assert_single_compile and traces > 1:
+        raise AssertionError(
+            f"expected <=1 _sim_core trace for the {len(pts)}-point "
+            f"load grid, got {traces}")
+    doc = {
+        "schema": "loadlat/v1",
+        "W": W, "taus": [int(t) for t in taus],
+        "strategies": [names[c] for c in codes],
+        "loads": [float(ld) for ld in loads], "runs": int(runs),
+        "task_cost": int(task_cost), "horizon": int(horizon),
+        "num_stations": int(num_stations), "zipf_s": float(zipf_s),
+        "knee_factor": float(knee_factor), "traces": int(traces),
+        "points": [], "knees": [],
+    }
+    cells = {}
+    for (c, ld, tau, s), r in zip(coords, results):
+        if r.trace is not None and r.trace.dropped:
+            raise AssertionError(
+                f"trace ring dropped {r.trace.dropped} events at "
+                f"(strategy={names[c]}, load={ld}, tau={tau}, seed={s}); "
+                f"raise --ring-capacity for exact percentiles")
+        soj = r.sojourn or {}
+        point = dict(
+            strategy=names[c], load=float(ld), tau=int(tau), seed=int(s),
+            gap_q8=int(gaps[ld]), ticks=int(r.ticks),
+            injected=int(r.arrivals_injected),
+            dropped=int(r.arrivals_dropped), done=int(r.requests_done),
+            utilization=float(r.utilization),
+            sojourn={k: soj.get(k) for k in
+                     ("count", "mean", "max") + PCTS} if soj else None)
+        doc["points"].append(point)
+        cells.setdefault((c, ld, tau), []).append(point)
+    for c in codes:
+        for tau in taus:
+            base_p99 = None
+            knee = None
+            for ld in loads:
+                sel = cells.get((c, ld, tau), [])
+                p99s = [p["sojourn"]["p99"] for p in sel
+                        if p["sojourn"] and p["sojourn"]["p99"] is not None]
+                if not p99s:
+                    continue
+                med = float(np.median(p99s))
+                if base_p99 is None:
+                    base_p99 = med
+                if med <= knee_factor * base_p99:
+                    knee = float(ld)
+                emit(f"loadlat/{names[c]}/tau={tau}/load={ld}", 0.0,
+                     f"p99={med:.0f};done={sum(p['done'] for p in sel)};"
+                     f"drop={sum(p['dropped'] for p in sel)}")
+            doc["knees"].append(dict(
+                strategy=names[c], tau=int(tau), knee_load=knee,
+                baseline_p99=base_p99))
+            emit(f"loadlat/{names[c]}/tau={tau}/knee", 0.0,
+                 f"knee_load={knee};baseline_p99={base_p99}")
+    return doc
+
+
+def plot_curve(doc: dict, path: str) -> bool:
+    """Median p99 sojourn vs offered load, one line per (strategy, τ),
+    knee marked. Returns False when matplotlib is unavailable."""
+    try:
+        import matplotlib
+        matplotlib.use("Agg")
+        import matplotlib.pyplot as plt
+    except ImportError:
+        return False
+    fig, ax = plt.subplots(figsize=(6.5, 4.2))
+    for knee in doc["knees"]:
+        sname, tau = knee["strategy"], knee["tau"]
+        pts = {}
+        for p in doc["points"]:
+            if (p["strategy"] == sname and p["tau"] == tau
+                    and p["sojourn"] and p["sojourn"]["p99"] is not None):
+                pts.setdefault(p["load"], []).append(p["sojourn"]["p99"])
+        if not pts:
+            continue
+        loads = sorted(pts)
+        med = [float(np.median(pts[ld])) for ld in loads]
+        line, = ax.plot(loads, med, "o-", label=f"{sname} τ={tau}")
+        if knee["knee_load"] is not None:
+            ax.axvline(knee["knee_load"], color=line.get_color(),
+                       ls=":", alpha=0.5)
+    ax.set_xlabel("offered load (work units / worker-tick)")
+    ax.set_ylabel("p99 sojourn (ticks, median over seeds)")
+    ax.set_yscale("log")
+    ax.set_title(f"Load–latency, W={doc['W']} (dotted: saturation knee)")
+    ax.legend(fontsize=8)
+    fig.tight_layout()
+    fig.savefig(path, dpi=130)
+    plt.close(fig)
+    return True
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--side", type=int, default=6,
+                    help="mesh side (W = side^2)")
+    ap.add_argument("--taus", type=int, nargs="+", default=[3])
+    ap.add_argument("--strategies", nargs="+",
+                    default=["neighbor", "global", "adaptive"])
+    ap.add_argument("--loads", type=float, nargs="+", default=None)
+    ap.add_argument("--runs", type=int, default=3, help="seeds per point")
+    ap.add_argument("--task-cost", type=int, default=64)
+    ap.add_argument("--num-stations", type=int, default=0,
+                    help="ground stations (0 = every worker)")
+    ap.add_argument("--zipf-s", type=float, default=0.0,
+                    help="station hot-spot skew (0 = uniform)")
+    ap.add_argument("--horizon", type=int, default=20_000)
+    ap.add_argument("--ring-capacity", type=int, default=1 << 17)
+    ap.add_argument("--knee-factor", type=float, default=3.0)
+    ap.add_argument("--quick", action="store_true",
+                    help="small mesh, 2 strategies x 3 loads (CI smoke)")
+    ap.add_argument("--out", default="BENCH_loadlat.json")
+    ap.add_argument("--plot", default="loadlat.png")
+    ap.add_argument("--no-plot", action="store_true")
+    ap.add_argument("--assert-single-compile", action="store_true")
+    args = ap.parse_args()
+    if args.quick:
+        side = 4
+        loads = tuple(args.loads) if args.loads else QUICK_LOADS
+        strategies = (args.strategies if args.strategies != [
+            "neighbor", "global", "adaptive"] else ["neighbor", "global"])
+        horizon = min(args.horizon, 4_000)
+        runs = min(args.runs, 2)
+    else:
+        side, loads = args.side, tuple(args.loads or DEFAULT_LOADS)
+        strategies, horizon, runs = args.strategies, args.horizon, args.runs
+    print(f"# load-latency sweep (one compile, "
+          f"{len(strategies)}x{len(loads)}x{len(args.taus)}x{runs} grid)")
+    doc = run_curve(side=side, taus=tuple(args.taus), loads=loads,
+                    strategies=tuple(strategies), runs=runs,
+                    task_cost=args.task_cost,
+                    num_stations=args.num_stations, zipf_s=args.zipf_s,
+                    horizon=horizon, ring_capacity=args.ring_capacity,
+                    knee_factor=args.knee_factor,
+                    assert_single_compile=args.assert_single_compile)
+    jsonio.write(args.out, doc, indent=2)
+    print(f"# wrote {args.out}")
+    if not args.no_plot:
+        if plot_curve(doc, args.plot):
+            print(f"# wrote {args.plot}")
+        else:
+            print("# matplotlib unavailable; plot skipped")
+
+
+if __name__ == "__main__":
+    main()

@@ -29,14 +29,14 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import json
 import os
 import time
 
 import numpy as np
 
 from repro.configs import paper_mesh
-from repro.core import constellation, simulator, stealing, tasks, tracing
+from repro.core import (constellation, jsonio, simulator, stealing,
+                        tasks, tracing)
 from .common import emit
 
 STRATS = {
@@ -126,10 +126,10 @@ def run(quick: bool = False, json_path: str | None = None, orbits: int = 1,
                      f"tau_static={static_tau};epochs={ls.num_epochs};"
                      f"woken={n_woken if eclipse else 0}")
     if json_path:
-        with open(json_path, "w") as f:
-            json.dump(dict(config=dataclasses.asdict(ccfg), quick=quick,
-                           horizon=horizon, orbits=orbits, rows=rows),
-                      f, indent=2)
+        jsonio.write(json_path,
+                     dict(config=dataclasses.asdict(ccfg), quick=quick,
+                          horizon=horizon, orbits=orbits, rows=rows),
+                     indent=2)
     return rows
 
 

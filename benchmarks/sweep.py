@@ -21,11 +21,11 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import itertools
-import json
 
 import numpy as np
 
-from repro.core import latency, simulator, stealing, tasks, topology, tracing
+from repro.core import (jsonio, latency, simulator, stealing, tasks,
+                        topology, tracing)
 from .common import emit
 
 DEFAULT_SIZES = (16, 25, 36, 64, 100)
@@ -81,10 +81,31 @@ def run_grid(workload, mesh, cfg, axes: dict, base=None, **sweep_kw):
 # Crossover study
 # --------------------------------------------------------------------------
 
-def _median_iqr(xs):
+def _median_iqr(xs, what: str = "selection"):
+    """Median + interquartile range. An empty selection raises a clear
+    error naming the grid cell (numpy's own message for this —
+    "zero-size array to reduction operation" — names nothing)."""
     xs = np.asarray(xs, dtype=np.float64)
+    if xs.size == 0:
+        raise ValueError(f"no runs in {what}: cannot take median/IQR "
+                         "of an empty selection")
     return float(np.median(xs)), float(
         np.percentile(xs, 75) - np.percentile(xs, 25))
+
+
+def _finite_ratio(num: float, den: float):
+    """num/den when both are finite and den is nonzero, else None (JSON
+    null). The analytic Eq. 1 expectation is exactly `inf` at
+    P_s == 0 (`latency.expected_time_to_task`), so a degenerate run
+    would otherwise put `Infinity` — or `NaN`, for inf/inf — into the
+    artifact."""
+    if not (np.isfinite(num) and np.isfinite(den)) or den == 0:
+        return None
+    return float(num / den)
+
+
+def _fmt(x, spec: str = ".3f") -> str:
+    return "undef" if x is None else format(x, spec)
 
 
 def _group(rows, strategy_code, tau):
@@ -143,8 +164,14 @@ def crossover(sizes=DEFAULT_SIZES, taus=(2, 5, 10),
             per = {}
             for c in codes:
                 sel = _group(rows, c, tau)
-                med_t, iqr_t = _median_iqr([s["ticks"] for s in sel])
-                med_p, _ = _median_iqr([s["p_success"] for s in sel])
+                cell = f"cell (W={n}, strategy={names[c]}, tau={tau})"
+                if not sel:
+                    # a legitimately absent cell (e.g. a strategy filtered
+                    # out for this size) is skipped, not a crash
+                    print(f"# sweep: {cell} has no runs; skipping")
+                    continue
+                med_t, iqr_t = _median_iqr([s["ticks"] for s in sel], cell)
+                med_p, _ = _median_iqr([s["p_success"] for s in sel], cell)
                 per[c] = sel
                 doc["points"].append(dict(
                     N=int(n), tau=int(tau), strategy=names[c],
@@ -162,19 +189,24 @@ def crossover(sizes=DEFAULT_SIZES, taus=(2, 5, 10),
             ratios = [sn["ticks"] / sg["ticks"] for sn, sg in zip(
                 sorted(per[ncode], key=lambda s: s["seed"]),
                 sorted(per[gcode], key=lambda s: s["seed"]))]
-            med_r, iqr_r = _median_iqr(ratios)
+            med_r, iqr_r = _median_iqr(
+                ratios, f"cell (W={n}, tau={tau}) ratio set")
             pn = float(np.median([s["p_success"] for s in per[ncode]]))
             pg = float(np.median([s["p_success"] for s in per[gcode]]))
-            analytic_ratio = float(
+            # Eq. 1 expectations are exactly inf at P_s == 0; the ratio
+            # of two of them (or a division by inf) is then undefined —
+            # emitted as null, never NaN/Infinity (jsonio contract)
+            analytic_ratio = _finite_ratio(
                 latency.expected_time_to_task(
-                    latency.neighbor_round_trip(tau), pn)
-                / latency.expected_time_to_task(
+                    latency.neighbor_round_trip(tau), pn),
+                latency.expected_time_to_task(
                     latency.global_round_trip(n, tau), pg))
+            pg_over_pn = _finite_ratio(pg, pn)
             doc["crossover"].append(dict(
                 N=int(n), tau=int(tau),
                 ratio_neighbor_over_global=med_r, iqr_ratio=iqr_r,
                 ratios=ratios, p_neighbor=pn, p_global=pg,
-                pg_over_pn=(pg / pn if pn > 0 else float("inf")),
+                pg_over_pn=pg_over_pn,
                 analytic_threshold=float(latency.threshold(n)),
                 analytic_rtt_ratio=float(latency.speedup_per_attempt(n)),
                 analytic_ratio=analytic_ratio,
@@ -182,8 +214,8 @@ def crossover(sizes=DEFAULT_SIZES, taus=(2, 5, 10),
                     latency.neighbor_wins(n, pg, pn))))
             emit(f"crossover/N={n}/tau={tau}", 0.0,
                  f"ratio_n_over_g={med_r:.3f};iqr={iqr_r:.3f};"
-                 f"analytic={analytic_ratio:.3f};"
-                 f"Pg/Pn={pg / max(pn, 1e-9):.2f};"
+                 f"analytic={_fmt(analytic_ratio)};"
+                 f"Pg/Pn={_fmt(pg_over_pn, '.2f')};"
                  f"threshold={float(latency.threshold(n)):.2f}")
     if rtt_hists:
         doc["rtt"] = _measure_rtt(wl, max(sizes), sorted(taus)[len(taus) // 2],
@@ -243,9 +275,13 @@ def plot_crossover(doc: dict, path: str) -> bool:
         line, = ax.plot(ns, med, "o-", label=f"measured τ={tau}")
         ax.errorbar(ns, med, yerr=np.asarray(iqr) / 2, fmt="none",
                     ecolor=line.get_color(), alpha=0.5, capsize=3)
-        ax.plot(ns, [c["analytic_ratio"] for c in pts], "--",
-                color=line.get_color(), alpha=0.7,
-                label=f"Eq. 1 bound τ={tau}")
+        # analytic_ratio is null where Eq. 1 is undefined (P_s == 0)
+        apts = [(c["N"], c["analytic_ratio"]) for c in pts
+                if c["analytic_ratio"] is not None]
+        if apts:
+            ax.plot([a[0] for a in apts], [a[1] for a in apts], "--",
+                    color=line.get_color(), alpha=0.7,
+                    label=f"Eq. 1 bound τ={tau}")
     ax.axhline(1.0, color="k", lw=0.8, ls=":")
     ax.set_xlabel("constellation size W")
     ax.set_ylabel("NEIGHBOR / GLOBAL makespan")
@@ -305,8 +341,7 @@ def main():
                     runs=args.runs, workload=wl,
                     assert_single_compile=args.assert_single_compile,
                     rtt_hists=not args.no_rtt)
-    with open(args.out, "w") as f:
-        json.dump(doc, f, indent=2)
+    jsonio.write(args.out, doc, indent=2)
     print(f"# wrote {args.out}")
     if not args.no_plot:
         if plot_crossover(doc, args.plot):

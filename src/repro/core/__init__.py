@@ -13,10 +13,14 @@
 #   balancer      — neighbor-only rebalancing of serving/training work items
 #   tracing       — in-loop flight recorder: event ring, binned time series,
 #                   Perfetto export, analytic-latency histogram overlays
+#   arrivals      — open-loop request streams (Poisson / bursty / Zipf
+#                   ground-station hot spots) with per-epoch rate schedules
+#   jsonio        — strict JSON artifact writers (no NaN/Infinity, ever)
 
-from . import (balancer, constellation, deque, latency, linkstate, scheduler,
-               simulator, stealing, tasks, topology, tracing)
+from . import (arrivals, balancer, constellation, deque, jsonio, latency,
+               linkstate, scheduler, simulator, stealing, tasks, topology,
+               tracing)
 
-__all__ = ["balancer", "constellation", "deque", "latency", "linkstate",
-           "scheduler", "simulator", "stealing", "tasks", "topology",
-           "tracing"]
+__all__ = ["arrivals", "balancer", "constellation", "deque", "jsonio",
+           "latency", "linkstate", "scheduler", "simulator", "stealing",
+           "tasks", "topology", "tracing"]

@@ -110,6 +110,25 @@ class Constellation:
         """Ticks between successive cross-seam handovers: one in-plane slot."""
         return max(self.cfg.orbit_ticks // self.cfg.sats_per_plane, 2)
 
+    def traffic_schedule(self, horizon_ticks: int, peak: float = 1.0,
+                         trough: float = 0.25,
+                         epochs_per_orbit: int | None = None):
+        """Diurnal arrival-rate schedule: ``(rate_starts, rate_scale)`` for
+        `arrivals.ArrivalConfig` — a raised-cosine swing between `peak`
+        (day side, most ground stations in view) and `trough` (night side)
+        once per orbit, sampled on the same `epochs_per_orbit` grid the
+        link-state schedule uses so both piecewise-constant processes
+        change on aligned boundaries."""
+        cfg = self.cfg
+        if not 0.0 <= trough <= peak <= 1.0:
+            raise ValueError("need 0 <= trough <= peak <= 1 (Q16 rate scale)")
+        epochs = epochs_per_orbit if epochs_per_orbit else cfg.epochs_per_orbit
+        step = max(int(round(cfg.orbit_ticks / max(epochs, 1))), 1)
+        starts = list(range(0, max(horizon_ticks, 1), step))
+        phase = 2 * np.pi * np.asarray(starts) / cfg.orbit_ticks
+        scale = trough + (peak - trough) * 0.5 * (1.0 + np.cos(phase))
+        return tuple(starts), tuple(float(s) for s in scale)
+
     # ------------------------------------------------------------------ #
     # Outage / failure schedule
     # ------------------------------------------------------------------ #

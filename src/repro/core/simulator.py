@@ -175,6 +175,23 @@ paper lists in §2.1/§5, each as an orthogonal, testable mechanism:
     a grant whose reply path was severed by an epoch flip mid-request is
     denied while the thief waits out the nominal RTT as a timeout — so no
     loot is ever launched into a partition and exactness is preserved.
+  * **open-loop traffic** (`core/arrivals.py`) — pass `arrivals=` plus a
+    nonzero `SimConfig.arrival_gap_q8`: ground stations continuously
+    inject user requests (Poisson / bursty candidate streams with
+    deterministic thinning, Zipf-skewed station hot spots, per-epoch
+    rate schedules riding the link-state epoch machinery) as
+    `tasks.KIND_REQ` leaf records. The next-candidate tick is carried in
+    `SimState` and joins the leap horizons — and clips certified famine
+    windows, since an injection un-freezes deque sizes — so leap ≡ tick
+    bit-exactness extends to open systems. Per-request sojourns (queue
+    wait + nominal service) accumulate exactly into
+    `SimResult.sojourn_sum_ticks` / `requests_done`, and with tracing on
+    every arrival/completion lands in the event ring, yielding
+    p50/p90/p99/p999 sojourn percentiles (`SimResult.sojourn`) — the
+    tail-latency SLO axis of the load–latency study
+    (`benchmarks/load_latency.py`). The offered load itself
+    (`arrival_gap_q8`, `arrival_batch`) is traced `SimParams` data: a
+    load sweep costs zero retraces.
   * **wake-ups** (elastic grow) — pass `wake_time`: a dead worker rejoins
     at its wake tick with a fresh, empty state (deque re-armed, fail count
     and supervision ledger cleared), modelling eclipse *exits*. The woken
@@ -202,6 +219,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import arrivals
 from . import deque as dq
 from . import linkstate as lstate
 from . import stealing, tasks
@@ -268,6 +286,15 @@ class SimConfig:
     supervision_slots: int = 64
     warn_ticks: int = 0                # malleability: pre-shed lead time
     preshed: bool = False
+    # open-loop traffic (core/arrivals.py): mean inter-candidate gap in
+    # Q8.8-style fixed point (mean gap ticks × 256; 0 = closed system — no
+    # arrivals) and request records injected per accepted candidate
+    # (1..arrivals.ARRIVAL_K). Both are traced sweep axes: an offered-load
+    # sweep reuses ONE compilation. The arrival *shape* (stations, burst
+    # windows, per-epoch rate schedule) travels separately via the
+    # `arrivals=` argument of simulate/simulate_batch/simulate_sweep.
+    arrival_gap_q8: int = 0
+    arrival_batch: int = 1
     # flight recorder (core/tracing.py): None = off — statically branched,
     # so the disabled path compiles to exactly the untraced step graph
     # (asserted by the zero-overhead jaxpr test). A `tracing.TraceConfig`
@@ -296,7 +323,8 @@ class SimConfig:
             hop_ticks=self.hop_ticks, escalate_after=self.escalate_after,
             max_grants_per_victim=self.max_grants_per_victim,
             warn_ticks=self.warn_ticks, ckpt_interval=self.ckpt_interval,
-            seed=self.seed)
+            seed=self.seed, arrival_gap_q8=self.arrival_gap_q8,
+            arrival_batch=self.arrival_batch)
 
     def split(self) -> "tuple[StaticConfig, SimParams]":
         return self.static, self.params
@@ -334,6 +362,8 @@ class SimParams(NamedTuple):
     warn_ticks: int = 0
     ckpt_interval: int = 0
     seed: int = 0
+    arrival_gap_q8: int = 0
+    arrival_batch: int = 1
 
 
 def stack_params(params_list) -> SimParams:
@@ -384,6 +414,19 @@ class SimState(NamedTuple):
                             # occupancy (victim-side) — sizes capacity for
                             # W >= 4k sweeps; mid-tick transients that were
                             # rejected show up in `overflow` instead
+    # open-loop arrival stream (core/arrivals.py). The cursor is EXTERNAL
+    # input state — excluded from TC rollback (see apply_tc): rolling arr_t
+    # back below the clock would leave a candidate tick that never fires
+    # again and stall the stream forever.
+    arr_t: jax.Array        # () int32 next candidate's fire tick
+                            # (_NEVER = stream off / exhausted)
+    arr_k: jax.Array        # () int32 candidate-stream cursor
+    arr_injected: jax.Array # () int32 request records injected into deques
+    arr_dropped: jax.Array  # () int32 request records lost at injection
+                            # (full or dead station deque — never silent)
+    arr_done: jax.Array     # () int32 requests completed (popped & served)
+    soj_lo: jax.Array       # () int32 Σ sojourn ticks, low 30-bit lane
+    soj_hi: jax.Array       # () int32 Σ sojourn ticks, carry lane
 
 
 class SimResult(NamedTuple):
@@ -427,6 +470,20 @@ class SimResult(NamedTuple):
     # event ring and the (bins, channels) binned time series
     trace: "tracing.Trace | None" = None
     timeseries: "tracing.TimeSeries | None" = None
+    # open-loop traffic ledger (zeros on closed runs): records injected /
+    # lost at injection / completed, and the exact 62-bit sojourn-tick sum
+    # over completed requests (sojourn = pop_tick − inject_tick + cost)
+    arrivals_injected: int = 0
+    arrivals_dropped: int = 0
+    requests_done: int = 0
+    sojourn_sum_ticks: int = 0
+    sojourn_mean: float = 0.0
+    # nearest-rank sojourn percentiles from the trace ring (requires
+    # cfg.trace; see `tracing.sojourn_stats`): dict with count / p50 /
+    # p90 / p99 / p999 / mean / max, or None when untraced / no
+    # completions. Exact over the recorded events — size the ring until
+    # trace.dropped == 0 for exact run-level percentiles.
+    sojourn: dict | None = None
 
 
 def _mesh_tables(mesh: topo.MeshTopology):
@@ -594,7 +651,7 @@ def _stage_transplant(ops: dq.DequeOps, acc, src_mask, heir, overflow):
     return ops, _transplant_acc(acc, src_mask, heir), overflow
 
 
-def _lane_budget(cfg: StaticConfig) -> int:
+def _lane_budget(cfg: StaticConfig, arrivals_on: bool = False) -> int:
     """Static push-log width of the staged backend: an upper bound on the
     staged pushes any single worker can *accept* in one tick. Accepted
     pushes are bounded by free room plus slots freed mid-tick (one
@@ -603,6 +660,10 @@ def _lane_budget(cfg: StaticConfig) -> int:
     always-on expansion-children + loot-import lanes. Sized per config:
     the common (no-recovery) path stays at EXPAND_K + 1 lanes."""
     L = tasks.EXPAND_K + 1          # expansion children + thief-side loot import
+    if arrivals_on:
+        # open-loop injection: up to ARRIVAL_K request records land on one
+        # station's deque in the same tick as its expansion push
+        L += arrivals.ARRIVAL_K
     if cfg.recovery == Recovery.SUPERVISION:
         L += min(cfg.supervision_slots, cfg.capacity)
     if cfg.preshed or cfg.recovery == Recovery.TC:
@@ -802,7 +863,7 @@ def _retired_mask(cfg: StaticConfig, warn_ticks, fail_time, fail_period, t,
 
 
 def _scheduled_horizons(ne, t, alive, fail_time, wake_time, fail_period,
-                        cfg: StaticConfig, p: SimParams, ls):
+                        cfg: StaticConfig, p: SimParams, ls, arr_t=None):
     """Clip `ne` at every scheduled global event: deaths (and pre-shed
     warnings) of still-alive workers, wake-ups of dead ones, periodic
     checkpoints, and link-state epoch boundaries. Periodic (fail, wake)
@@ -846,11 +907,18 @@ def _scheduled_horizons(ne, t, alive, fail_time, wake_time, fail_period,
     # branch — untraced runs compile without this term)
     if cfg.trace is not None:
         ne = jnp.minimum(ne, tracing.next_bin_boundary(cfg.trace, t, _NEVER))
+    # open-loop arrivals: the next candidate tick is a first-class horizon.
+    # A leap may never jump it (injection runs inside tick_fn), and a
+    # certified famine window must END there — an injection un-freezes
+    # deque sizes, voiding the every-probe-fails certificate (static
+    # branch: closed runs compile without the term).
+    if arr_t is not None:
+        ne = jnp.minimum(ne, arr_t)
     return ne
 
 
 def _next_event(state: SimState, t, speed, fail_time, wake_time, fail_period,
-                cfg: StaticConfig, p: SimParams, W: int, tbl, ls):
+                cfg: StaticConfig, p: SimParams, W: int, tbl, ls, ar=None):
     """First tick >= t at which any worker does more than a bulk decrement.
 
     Conservative (may return a tick with no visible state change — that
@@ -882,12 +950,13 @@ def _next_event(state: SimState, t, speed, fail_time, wake_time, fail_period,
     flight = (state.phase != PHASE_RUN) & alive
     ev = jnp.where(flight, t + jnp.maximum(state.timer - 1, 0), ev)
     return _scheduled_horizons(jnp.min(ev), t, alive, fail_time, wake_time,
-                               fail_period, cfg, p, ls)
+                               fail_period, cfg, p, ls,
+                               state.arr_t if ar is not None else None)
 
 
 def _famine_horizon(state: SimState, t, speed, fail_time, wake_time,
                     fail_period, cfg: StaticConfig, p: SimParams, W: int,
-                    mesh: topo.MeshTopology, tbl, ls):
+                    mesh: topo.MeshTopology, tbl, ls, ar=None):
     """First tick >= t at which any deque size can change (or a recovery /
     checkpoint / epoch event fires) — the famine-window horizon.
 
@@ -959,7 +1028,8 @@ def _famine_horizon(state: SimState, t, speed, fail_time, wake_time,
                                                  next_probe, _NEVER))
     ev = jnp.where(flight, flight_ev, ev)
     return _scheduled_horizons(jnp.min(ev), t, alive, fail_time, wake_time,
-                               fail_period, cfg, p, ls)
+                               fail_period, cfg, p, ls,
+                               state.arr_t if ar is not None else None)
 
 
 # Bumped once per jax TRACE of `_sim_core` (i.e. per jit cache miss of
@@ -976,7 +1046,7 @@ def trace_count() -> int:
 
 def _sim_core(workload, mesh: topo.MeshTopology, cfg: StaticConfig,
               p: SimParams, fail_time, wake_time, fail_period, speed,
-              ls=None):
+              ls=None, ar=None):
     global _TRACE_COUNT
     _TRACE_COUNT += 1
     W = mesh.num_workers
@@ -999,12 +1069,29 @@ def _sim_core(workload, mesh: topo.MeshTopology, cfg: StaticConfig,
     staged = (cfg.deque_backend == "staged"
               or (cfg.deque_backend is None
                   and jax.default_backend() == "tpu"))
-    lanes_full = _lane_budget(cfg)
+    lanes_full = _lane_budget(cfg, ar is not None)
 
     def _session(deq, lanes):
         if staged:
             return _StagedDeques(deq, lanes, use_kernel)
         return _LoopDeques(deq, use_kernel)
+
+    # open-loop arrival stream: the first candidate's fire tick. The whole
+    # stream is a pure function of (seed, candidate index) — see
+    # core/arrivals.py — so the carried cursor (arr_t, arr_k) is the ONLY
+    # stream state, and the next fire tick doubles as a leap horizon.
+    # arrival_gap_q8 == 0 (the traced "closed system" point) parks the
+    # cursor at _NEVER: same compiled graph, no candidate ever fires.
+    if ar is not None:
+        aseed = arrivals.stream_seed(p.seed)
+        arr_t0 = jnp.where(
+            p.arrival_gap_q8 > 0,
+            jnp.minimum(arrivals.gap_ticks(aseed, jnp.int32(0),
+                                           p.arrival_gap_q8), _NEVER),
+            _NEVER)
+    else:
+        aseed = None
+        arr_t0 = _NEVER
 
     z = jnp.zeros((W,), jnp.int32)
     state0 = SimState(
@@ -1016,7 +1103,10 @@ def _sim_core(workload, mesh: topo.MeshTopology, cfg: StaticConfig,
         attempts=z, successes=z, nodes=z, busy=z, steal_wait=z,
         hops_lo=jnp.int32(0), hops_hi=jnp.int32(0),
         ckpt_count=jnp.int32(0), overflow=z, stolen_from=z,
-        hiwater=deques.size)
+        hiwater=deques.size,
+        arr_t=jnp.asarray(arr_t0, jnp.int32), arr_k=jnp.int32(0),
+        arr_injected=jnp.int32(0), arr_dropped=jnp.int32(0),
+        arr_done=jnp.int32(0), soj_lo=jnp.int32(0), soj_hi=jnp.int32(0))
 
     # flight recorder: () when disabled — every emission site below sits
     # behind a static `if trc is not None`, so the untraced while_loop body
@@ -1108,7 +1198,22 @@ def _sim_core(workload, mesh: topo.MeshTopology, cfg: StaticConfig,
                 # physically filled the buffers, so a rollback must not
                 # erase the peak (capacity sized to the reported hiwater
                 # has to fit the PRE-rollback segment on a re-run too)
-                hiwater=state.hiwater)
+                hiwater=state.hiwater,
+                # the arrival stream is EXTERNAL input, not simulation
+                # state: restoring a snapshot cursor would put arr_t in
+                # the past, where `t == arr_t` never fires again and the
+                # stream stalls forever. Cursor and ledger counters
+                # survive the rollback like hiwater; request records
+                # injected into the discarded segment are lost external
+                # input (they were real uplinks — the rollback cannot
+                # un-receive them), so arr_injected keeps counting them
+                # while arr_done never will. Load benchmarks run
+                # Recovery.NONE; this path is exercised for exactness
+                # only.
+                arr_t=state.arr_t, arr_k=state.arr_k,
+                arr_injected=state.arr_injected,
+                arr_dropped=state.arr_dropped, arr_done=state.arr_done,
+                soj_lo=state.soj_lo, soj_hi=state.soj_hi)
 
         def apply_supervision(state):
             # victims re-push records whose thief just died. Clearing uses
@@ -1174,11 +1279,64 @@ def _sim_core(workload, mesh: topo.MeshTopology, cfg: StaticConfig,
             # lane budget) carries the rest of the tick — TC ticks pay two
             # fused applies instead of one.
             deq_mid = ses.finish()
-            ses = _session(deq_mid, tasks.EXPAND_K + 1)
+            ses = _session(deq_mid, tasks.EXPAND_K + 1
+                           + (arrivals.ARRIVAL_K if ar is not None else 0))
             state = state._replace(deque=deq_mid)
             snap = jax.tree.map(lambda s, c: jnp.where(take_ckpt, c, s), snap, state)
         state = state._replace(
             ckpt_count=state.ckpt_count + take_ckpt.astype(jnp.int32))
+
+        # ------------- open-loop arrival injection ------------------------- #
+        # (core/arrivals.py) Candidate arr_k fires when the carried
+        # next-candidate tick reaches t. arr_t is a leap horizon, so both
+        # step modes execute this tick through the identical code below;
+        # acceptance / station / gaps are pure functions of (seed, arr_k),
+        # never of how the stepper reached t — the leap ≡ tick invariant.
+        # Placed after the TC snapshot cut (a checkpoint never captures
+        # half-injected state) and before PHASE_RUN, so an idle station can
+        # pop the fresh request in the same tick.
+        if ar is not None:
+            a_fire = t == state.arr_t
+            a_station = arrivals.station_of(ar, aseed, state.arr_k)
+            a_accept = a_fire & arrivals.accepted(ar, aseed, state.arr_k, t)
+            # a dead station drops the uplink on the floor — counted in
+            # arr_dropped (and NOT pushed: work on a dead deque would leak
+            # into the liveness sum and the run could never drain)
+            a_live = a_accept & alive[a_station]
+            a_batch = jnp.clip(p.arrival_batch, 1, arrivals.ARRIVAL_K)
+            a_lanes = jnp.arange(arrivals.ARRIVAL_K, dtype=jnp.int32)
+            # task_id = arr_k·ARRIVAL_K + lane, wrapped into non-negative
+            # int32 (uniqueness wraps after 2^31 records — far beyond any
+            # max_ticks horizon at one candidate per tick)
+            a_ids = ((state.arr_k.astype(jnp.uint32)
+                      * jnp.uint32(arrivals.ARRIVAL_K)
+                      + a_lanes.astype(jnp.uint32))
+                     & jnp.uint32(0x7FFFFFFF)).astype(jnp.int32)
+            a_recs = jnp.stack(
+                [jnp.full((arrivals.ARRIVAL_K,), tasks.KIND_REQ, jnp.int32),
+                 jnp.broadcast_to(ar.task_cost,
+                                  (arrivals.ARRIVAL_K,)).astype(jnp.int32),
+                 jnp.full((arrivals.ARRIVAL_K,), t, jnp.int32),
+                 a_ids], axis=1)
+            a_blk = jnp.zeros((W, arrivals.ARRIVAL_K, T),
+                              jnp.int32).at[a_station].set(a_recs)
+            a_counts = jnp.zeros((W,), jnp.int32).at[a_station].set(
+                jnp.where(a_live, a_batch, 0))
+            a_over = ses.push_many(a_blk, a_counts)
+            a_lost = (jnp.sum(a_over)
+                      + jnp.where(a_accept & ~alive[a_station], a_batch, 0))
+            # advance the cursor past the fired candidate — thinned and
+            # dead-station candidates cost one horizon visit too
+            # (conservative for the famine window, never wrong)
+            nxt = arrivals.gap_ticks(aseed, state.arr_k + 1,
+                                     p.arrival_gap_q8)
+            state = state._replace(
+                arr_t=jnp.where(a_fire, jnp.minimum(t + nxt, _NEVER),
+                                state.arr_t),
+                arr_k=state.arr_k + a_fire.astype(jnp.int32),
+                arr_injected=state.arr_injected + jnp.sum(a_counts - a_over),
+                arr_dropped=state.arr_dropped + a_lost,
+                overflow=state.overflow + a_over)
 
         # ------------- phase RUN: work / expand / start steal -------------- #
         active_tick = alive & (t % sp == 0)  # stragglers advance slowly
@@ -1195,6 +1353,24 @@ def _sim_core(workload, mesh: topo.MeshTopology, cfg: StaticConfig,
         nodes = state.nodes + ex["nodes"]
         busy = state.busy + (burning | popped).astype(jnp.int32)
         overflow = state.overflow + over.astype(jnp.int32)
+
+        # open-loop sojourn ledger: a popped KIND_REQ record completes its
+        # queueing phase here — price queue wait + nominal service in one
+        # shot (the burn-down that follows is exactly ex["cost"] ticks of
+        # work, so completion needs no extra carried state). Same-tick
+        # inject-and-pop with cost c yields sojourn c, the floor.
+        if ar is not None:
+            is_req = popped & (task[:, 0] == tasks.KIND_REQ)
+            soj = jnp.where(is_req, t - task[:, 2] + ex["cost"], 0)
+            # 62-bit accumulation: the per-tick (W,)-sum must fit int32 —
+            # at most one pop per worker per tick, each sojourn < 2^30, so
+            # this binds only at W·sojourn ≥ 2^31 within ONE tick, far
+            # beyond any configuration the suite or benches run
+            s_lo = state.soj_lo + jnp.sum(soj)
+            state = state._replace(
+                arr_done=state.arr_done + jnp.sum(is_req.astype(jnp.int32)),
+                soj_hi=state.soj_hi + (s_lo >> _HOP_LANE_BITS),
+                soj_lo=s_lo & _HOP_LANE_MASK)
 
         # idle workers become thieves: request departs now, arrives in h·τ
         idle = running & (~burning) & (~popped) & (ses.size == 0)
@@ -1340,6 +1516,21 @@ def _sim_core(workload, mesh: topo.MeshTopology, cfg: StaticConfig,
                     hops=_hop_dist(mesh, tbl["coords"],
                                    jnp.clip(victim_new, 0, W - 1)),
                     epoch=ep_lane)
+            # open-loop ledger events: one ARRIVAL per record actually
+            # injected (task_id in the hops lane), one SOJOURN per
+            # completed request (inject tick in the victim lane, task_id
+            # in hops, priced sojourn in rtt) — both at deque-op ticks,
+            # which tick_fn executes in both step modes, so ring equality
+            # is inherited, not re-proven
+            if ar is not None:
+                a_ok = a_lanes < (a_counts[a_station] - a_over[a_station])
+                tr = tracing.emit(tr, trc, a_ok, tick=t,
+                                  kind=tracing.EV_ARRIVAL, worker=a_station,
+                                  victim=-1, hops=a_ids, epoch=ep_lane)
+                tr = tracing.emit(tr, trc, is_req, tick=t,
+                                  kind=tracing.EV_SOJOURN, worker=warr,
+                                  victim=task[:, 2], hops=task[:, 3],
+                                  rtt=soj, epoch=ep_lane)
             # attempt resolution at request arrival: the request leg was
             # banked in the (W,) req_ticks lane at departure, so the rtt
             # lane prices the full round trip (incl. route-around detours)
@@ -1387,6 +1578,10 @@ def _sim_core(workload, mesh: topo.MeshTopology, cfg: StaticConfig,
             hiwater=jnp.maximum(state.hiwater, deque_.size))
         live = (jnp.sum(deque_.size) + jnp.sum(work)
                 + jnp.sum((got_flight & ~delivered).astype(jnp.int32))) > 0
+        if ar is not None:
+            # open system: a transiently drained constellation stays live
+            # while the candidate stream has a pending fire tick
+            live = live | (state.arr_t < _NEVER)
         return new_state, snap, tr, t + 1, live
 
     def leap(state: SimState, tr, t, live, ne):
@@ -1410,6 +1605,10 @@ def _sim_core(workload, mesh: topo.MeshTopology, cfg: StaticConfig,
         nact = jnp.where(burning, jnp.minimum(n_in(delta), state.work), 0)
         drained = (jnp.sum(state.deque.size) + jnp.sum(state.work - nact)
                    + jnp.sum(state.got.astype(jnp.int32))) == 0
+        if ar is not None:
+            # open system: never early-exit a transient drain while the
+            # candidate stream is still pending (arr_t bounds ne anyway)
+            drained = drained & (state.arr_t >= _NEVER)
         # tick right after the last burn of the burners that finish in-window
         exit_t = jnp.max(jnp.where(
             burning & (nact == state.work),
@@ -1455,7 +1654,7 @@ def _sim_core(workload, mesh: topo.MeshTopology, cfg: StaticConfig,
         trailing leap never recomputes it.
         """
         ne_risky = _famine_horizon(state, t, speed, fail_time, wake_time,
-                                   fail_period, cfg, p, W, mesh, tbl, ls)
+                                   fail_period, cfg, p, W, mesh, tbl, ls, ar)
         hi = jnp.minimum(ne_risky, cfg.max_ticks)
         delta = jnp.clip(hi - t, 0, FB)
         # profitable only when probe-cycle events (counted by _next_event but
@@ -1484,6 +1683,10 @@ def _sim_core(workload, mesh: topo.MeshTopology, cfg: StaticConfig,
             ep0 = eidx0 if ls is not None else jnp.int32(0)
             frozen_supply = (jnp.sum(state.deque.size)
                              + jnp.sum(got0.astype(jnp.int32)))
+            # open-system liveness inside the replay: the window ends at or
+            # before arr_t (a `_scheduled_horizons` clip), so the flag is
+            # frozen over the whole batch
+            open_live = (state.arr_t < _NEVER) if ar is not None else None
             warr = jnp.arange(W)
 
             def step(carry, xs):
@@ -1595,8 +1798,10 @@ def _sim_core(workload, mesh: topo.MeshTopology, cfg: StaticConfig,
                 fails = fails + (delivered & ~got0).astype(jnp.int32)
                 phase = jnp.where(delivered, PHASE_RUN, phase)
                 steal_wait = steal_wait + (in_req | in_resp).astype(jnp.int32)
-                live_c = jnp.where(act,
-                                   (jnp.sum(work) + frozen_supply) > 0, live_c)
+                sup_live = (jnp.sum(work) + frozen_supply) > 0
+                if ar is not None:
+                    sup_live = sup_live | open_live
+                live_c = jnp.where(act, sup_live, live_c)
                 t_c = t_c + act.astype(jnp.int32)
                 out = (phase, timer, victim, fails, work, loot, attempts,
                        busy, steal_wait, hops_lo, hops_hi, t_c, live_c)
@@ -1637,7 +1842,7 @@ def _sim_core(workload, mesh: topo.MeshTopology, cfg: StaticConfig,
                     alive=jnp.sum(alive0.astype(jnp.int32)) * executed)
             return new_state, tr, t_out, live_out, _next_event(
                 new_state, t_out, speed, fail_time, wake_time, fail_period,
-                cfg, p, W, tbl, ls)
+                cfg, p, W, tbl, ls, ar)
 
         return jax.lax.cond(pred, fast,
                             lambda s, r, tt, lv: (s, r, tt, lv, ne_all),
@@ -1652,7 +1857,7 @@ def _sim_core(workload, mesh: topo.MeshTopology, cfg: StaticConfig,
         state, snap, tr, t, live = tick_fn((state, snap, tr, t))
         if cfg.step_mode == "leap":
             ne = _next_event(state, t, speed, fail_time, wake_time,
-                             fail_period, cfg, p, W, tbl, ls)
+                             fail_period, cfg, p, W, tbl, ls, ar)
             if famine_on:
                 state, tr, t, live, ne = famine_ff(state, tr, t, live, ne)
             state, tr, t, live = leap(state, tr, t, live, ne)
@@ -1685,15 +1890,16 @@ _sim_jit = partial(jax.jit, static_argnames=("workload", "mesh", "cfg"))(_sim_co
 
 @partial(jax.jit, static_argnames=("workload", "mesh", "cfg"))
 def _sim_batch_jit(workload, mesh, cfg, params, fail_time, wake_time,
-                   fail_period, speed, ls):
+                   fail_period, speed, ls, ar):
     """vmap of `_sim_core` over a (B,)-stacked `SimParams` pytree (plus
     per-point schedules). `cfg` is the static half only — every grid of
     params points with the same `StaticConfig` reuses ONE compilation, and
     `simulate_batch` / the single-device `simulate_sweep` path share this
-    cache entry."""
+    cache entry. `ls` / `ar` (link-state and arrival tables) are shared
+    across the batch, closed over un-vmapped."""
     return jax.vmap(
         lambda p, ft, wt, fp, sp: _sim_core(workload, mesh, cfg, p, ft, wt,
-                                            fp, sp, ls)
+                                            fp, sp, ls, ar)
     )(params, fail_time, wake_time, fail_period, speed)
 
 
@@ -1717,16 +1923,16 @@ def _sharded_sweep_fn(workload, mesh, cfg: StaticConfig, devs):
             sm_kwargs = {"check_rep": False}
         dmesh = DeviceMesh(np.array(devs), ("grid",))
 
-        def shard_body(params, ft, wt, fp, sp, ls):
+        def shard_body(params, ft, wt, fp, sp, ls, ar):
             # per-device slice of the grid; vmap the points inside the shard
             return jax.vmap(
                 lambda p, a, b, c, d: _sim_core(workload, mesh, cfg, p, a,
-                                                b, c, d, ls)
+                                                b, c, d, ls, ar)
             )(params, ft, wt, fp, sp)
 
         fn = jax.jit(shard_map(
             shard_body, mesh=dmesh,
-            in_specs=(P("grid"),) * 5 + (P(),),   # ls replicated
+            in_specs=(P("grid"),) * 5 + (P(), P()),  # ls + ar replicated
             out_specs=P("grid"), **sm_kwargs))
         _SWEEP_SHARD_CACHE[key] = fn
     return fn
@@ -1760,6 +1966,14 @@ def _check_params(p: SimParams):
         raise ValueError(f"unknown strategy code {int(p.strategy)}")
     if int(p.hop_ticks) < 0:
         raise ValueError("hop_ticks must be >= 0")
+    if not 0 <= int(p.arrival_gap_q8) < (1 << 31):
+        raise ValueError(
+            "arrival_gap_q8 must be a non-negative int32 (mean gap ticks "
+            f"x 256; 0 = closed system), got {int(p.arrival_gap_q8)}")
+    if not 1 <= int(p.arrival_batch) <= arrivals.ARRIVAL_K:
+        raise ValueError(
+            f"arrival_batch must be in [1, {arrivals.ARRIVAL_K}], "
+            f"got {int(p.arrival_batch)}")
 
 
 def _ckpt_state_bytes(mesh: topo.MeshTopology, cfg: StaticConfig) -> int:
@@ -1773,6 +1987,8 @@ def _finalize(state, tr, ticks, iters, mesh: topo.MeshTopology,
     t = int(ticks)
     alive_n = int(state.alive.sum())
     hop_units = (int(state.hops_hi) << _HOP_LANE_BITS) + int(state.hops_lo)
+    soj_sum = (int(state.soj_hi) << _HOP_LANE_BITS) + int(state.soj_lo)
+    req_done = int(state.arr_done)
     trace = timeseries = None
     if cfg.trace is not None:
         trace, timeseries = tracing.finalize(tr, cfg.trace)
@@ -1792,7 +2008,13 @@ def _finalize(state, tr, ticks, iters, mesh: topo.MeshTopology,
         per_worker_hiwater=np.asarray(state.hiwater),
         per_worker_attempts=np.asarray(state.attempts),
         per_worker_successes=np.asarray(state.successes),
-        trace=trace, timeseries=timeseries)
+        trace=trace, timeseries=timeseries,
+        arrivals_injected=int(state.arr_injected),
+        arrivals_dropped=int(state.arr_dropped),
+        requests_done=req_done,
+        sojourn_sum_ticks=soj_sum,
+        sojourn_mean=soj_sum / max(req_done, 1),
+        sojourn=tracing.sojourn_stats(trace) if trace is not None else None)
 
 
 def _fail_speed_arrays(W, fail_time, speed, wake_time=None, fail_period=None):
@@ -1844,13 +2066,33 @@ def _linkstate_tables(linkstate, mesh, speed, routing="auto"):
     return lstate.device_tables(linkstate, mesh, routing=routing)
 
 
+def _check_arrivals(arr, params):
+    """`arrival_gap_q8 > 0` (stream on) needs an `ArrivalConfig`; a config
+    with the stream off is legal (tables built, zero candidates fire)."""
+    if int(params.arrival_gap_q8) > 0 and arr is None:
+        raise ValueError(
+            "cfg.arrival_gap_q8 > 0 turns the open-loop request stream on; "
+            "pass arrivals=ArrivalConfig(...) to describe it")
+    if arr is not None and isinstance(arr, arrivals.ArrivalConfig):
+        arr.validate()
+
+
+def _arrival_tables(arr, mesh):
+    if arr is None:
+        return None
+    if isinstance(arr, arrivals.ArrivalArrays):
+        return arr  # prebuilt tables (a sweep reusing one build)
+    return arrivals.device_tables(arr, mesh)
+
+
 def simulate(workload, mesh: topo.MeshTopology, cfg: SimConfig | None = None,
              fail_time: np.ndarray | None = None,
              speed: np.ndarray | None = None,
              linkstate=None,
              wake_time: np.ndarray | None = None,
              fail_period: np.ndarray | None = None,
-             routing_backend: str = "auto") -> SimResult:
+             routing_backend: str = "auto",
+             arrivals=None) -> SimResult:
     """Run the tick simulator. `fail_time[w]` = death tick (-1: immortal);
     `wake_time[w]` = rejoin tick of a dead worker (-1: death is permanent;
     must be > fail_time[w] — eclipse exits wake with a fresh empty state);
@@ -1862,15 +2104,23 @@ def simulate(workload, mesh: topo.MeshTopology, cfg: SimConfig | None = None,
     hop latency / link availability / speeds follow the piecewise-constant
     schedule instead of the scalar `cfg.hop_ticks` (which is then unused);
     `routing_backend` picks the outage-table layout ('dense', 'sparse', or
-    'auto' — sparse at W >= linkstate.SPARSE_AUTO_MIN_WORKERS)."""
+    'auto' — sparse at W >= linkstate.SPARSE_AUTO_MIN_WORKERS). With
+    `arrivals` (an `ArrivalConfig`, or prebuilt `ArrivalArrays` accepted
+    verbatim) and `cfg.arrival_gap_q8 > 0`, an open-loop request stream
+    feeds the root workload: tasks of `arrivals.task_cost` land on ground-
+    station workers at i.i.d. exponential gaps (mean `arrival_gap_q8/256`
+    ticks, thinned by the per-epoch rate schedule and on/off bursts), and
+    `SimResult` reports their sojourn percentiles."""
     cfg = cfg or SimConfig()
     _check_cfg(cfg)
     scfg, params = cfg.split()
+    _check_arrivals(arrivals, params)
     ls = _linkstate_tables(linkstate, mesh, speed, routing_backend)
+    ar = _arrival_tables(arrivals, mesh)
     ft, wt, fp, sp = _fail_speed_arrays(mesh.num_workers, fail_time, speed,
                                         wake_time, fail_period)
     state, tr, ticks, iters = _sim_jit(workload, mesh, scfg, params, ft, wt,
-                                       fp, sp, ls)
+                                       fp, sp, ls, ar)
     state, tr = jax.device_get((state, tr))
     return _finalize(state, tr, ticks, iters, mesh, scfg)
 
@@ -1883,8 +2133,8 @@ def simulate_batch(workload, mesh: topo.MeshTopology,
                    linkstate=None,
                    wake_time: np.ndarray | None = None,
                    fail_period: np.ndarray | None = None,
-                   routing_backend: str = "auto"
-                   ) -> list[SimResult]:
+                   routing_backend: str = "auto",
+                   arrivals=None) -> list[SimResult]:
     """Run one simulation per seed in a single compiled, vmapped call.
 
     All seeds share `cfg` (whose own `seed` field is ignored), the failure
@@ -1896,7 +2146,9 @@ def simulate_batch(workload, mesh: topo.MeshTopology,
     cfg = cfg or SimConfig()
     _check_cfg(cfg)
     scfg, params = cfg.split()
+    _check_arrivals(arrivals, params)
     ls = _linkstate_tables(linkstate, mesh, speed, routing_backend)
+    ar = _arrival_tables(arrivals, mesh)
     W = mesh.num_workers
     seeds = list(seeds)
     pstack = stack_params([params._replace(seed=int(s)) for s in seeds])
@@ -1908,7 +2160,7 @@ def simulate_batch(workload, mesh: topo.MeshTopology,
     fps = jnp.broadcast_to(fp[None], (B, W))
     sps = jnp.broadcast_to(sp[None], (B, W))
     states, trs, ticks, iters = _sim_batch_jit(workload, mesh, scfg, pstack,
-                                               fts, wts, fps, sps, ls)
+                                               fts, wts, fps, sps, ls, ar)
     states, trs, ticks, iters = jax.device_get((states, trs, ticks, iters))
     return [
         _finalize(jax.tree.map(lambda x: x[i], states),
@@ -1926,7 +2178,8 @@ def simulate_sweep(workload, mesh: topo.MeshTopology, cfg,
                    wake_time: np.ndarray | None = None,
                    fail_period: np.ndarray | None = None,
                    routing_backend: str = "auto",
-                   devices=None) -> list[SimResult]:
+                   devices=None,
+                   arrivals=None) -> list[SimResult]:
     """Run a whole grid of `SimParams` points in ONE compiled call.
 
     `cfg` supplies the static half (a `StaticConfig`, or a `SimConfig`
@@ -1958,6 +2211,9 @@ def simulate_sweep(workload, mesh: topo.MeshTopology, cfg,
     G = len(pts)
     W = mesh.num_workers
     ls = _linkstate_tables(linkstate, mesh, speed, routing_backend)
+    for p in pts:
+        _check_arrivals(arrivals, p)
+    ar = _arrival_tables(arrivals, mesh)
     ft, wt, fp, sp = _fail_speed_arrays(W, fail_time, speed, wake_time,
                                         fail_period)
     devs = tuple(devices) if devices is not None else tuple(jax.local_devices())
@@ -1972,11 +2228,11 @@ def simulate_sweep(workload, mesh: topo.MeshTopology, cfg,
     sps = jnp.broadcast_to(sp[None], (B, W))
     if sharded:
         fn = _sharded_sweep_fn(workload, mesh, scfg, devs)
-        states, trs, ticks, iters = fn(pstack, fts, wts, fps, sps, ls)
+        states, trs, ticks, iters = fn(pstack, fts, wts, fps, sps, ls, ar)
     else:
         states, trs, ticks, iters = _sim_batch_jit(workload, mesh, scfg,
                                                    pstack, fts, wts, fps,
-                                                   sps, ls)
+                                                   sps, ls, ar)
     states, trs, ticks, iters = jax.device_get((states, trs, ticks, iters))
     return [
         _finalize(jax.tree.map(lambda x: x[i], states),

@@ -377,7 +377,10 @@ def probe_may_succeed(strategy: Strategy, nonempty: jax.Array,
     the worker issues in the window must fail, so whole probe cycles can be
     advanced analytically instead of simulated tick by tick (the
     lifeline-graph insight: victim emptiness is deterministic between
-    events).
+    events). With open-loop traffic (`core/arrivals.py`) the simulator
+    clips the certified window at the next arrival-candidate tick — an
+    accepted candidate grows a deque, breaking the frozen-sizes premise —
+    so this predicate never needs to know about arrivals.
 
     `neighbor_table` (and, for ADAPTIVE, `radius2_table`) must already have
     dead links / unreachable victims masked to NO_NEIGHBOR when running

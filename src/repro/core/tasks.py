@@ -26,6 +26,10 @@ Task records are `[kind, a, b, c]` int32:
     FIB   : [1, n,      0,     0]
     UTS   : [2, depth,  seed,  0]
     CHUNK : [3, depth,  seed,  start*256 + count]   (continuation of UTS expand)
+    REQ   : [4, cost,   inject_tick, task_id]       (open-loop user request —
+            see `core/arrivals.py`; a leaf costing `cost` work units whose
+            inject tick rides in the record so the sojourn ledger can price
+            queue wait at pop time)
 
 Expansion is a pure function `(task, table) -> (children, n_children,
 leaf_value, leaf_cost, is_node)` vectorized over workers; both the
@@ -44,6 +48,7 @@ KIND_NONE = 0
 KIND_FIB = 1
 KIND_UTS = 2
 KIND_CHUNK = 3
+KIND_REQ = 4
 
 EXPAND_K = 8          # staging slots per expansion (children + continuation)
 CHILD_CAP = 64        # max children of a UTS node (geometric tail cut)
@@ -308,14 +313,22 @@ def expand(task, active, tables):
     uts_value = jnp.where(is_uts, 1, 0)  # count nodes; chunks are bookkeeping
     uts_cost = jnp.ones((W,), jnp.int32)
 
+    # ---------------- REQ leaf (open-loop arrival) ------------------------- #
+    # No children; the worker burns the injected `cost` and contributes the
+    # task_id to the result checksum (so leap ≡ tick covers request work).
+    is_req = active & (kind == KIND_REQ)
+
     # ---------------- combine --------------------------------------------- #
     sel_fib = is_fib[:, None, None]
     children = jnp.where(sel_fib, fib_children, uts_children)
     n_children = jnp.where(is_fib, fib_n_children,
                            jnp.where(is_uts | is_chunk, uts_n_children, 0))
-    value = jnp.where(is_fib, fib_value, jnp.where(is_uts, uts_value, 0))
-    cost = jnp.where(is_fib, fib_cost, jnp.where(is_uts | is_chunk, uts_cost, 0))
-    nodes = (is_fib | is_uts).astype(jnp.int32)
+    value = jnp.where(is_fib, fib_value,
+                      jnp.where(is_uts, uts_value, jnp.where(is_req, c, 0)))
+    cost = jnp.where(is_fib, fib_cost,
+                     jnp.where(is_uts | is_chunk, uts_cost,
+                               jnp.where(is_req, jnp.maximum(a, 1), 0)))
+    nodes = (is_fib | is_uts | is_req).astype(jnp.int32)
     n_children = jnp.where(active, n_children, 0)
     value = jnp.where(active, value, 0)
     cost = jnp.where(active, cost, 0)

@@ -45,8 +45,11 @@ elementwise on the ring — which constrains what may be an event:
     exactly one bin, identical to the oracle's per-tick adds.
 
 Per-tick emission order (fixed, so rings compare elementwise): DEATH,
-WAKE, EPOCH, NO_LIVE_VICTIM, attempt resolutions (SEVERED / EMPTY /
-GRANTED), OVERFLOW, FAMINE_ENTER / FAMINE_EXIT. After the loop, attempts
+WAKE, EPOCH, NO_LIVE_VICTIM, ARRIVAL, SOJOURN, attempt resolutions
+(SEVERED / EMPTY / GRANTED), OVERFLOW, FAMINE_ENTER / FAMINE_EXIT.
+Arrival injections and request pops are deque-op ticks, hence event ticks
+the leap stepper already executes (the next-arrival tick is itself a leap
+horizon), so the open-loop events inherit ring equality for free. After the loop, attempts
 still in their request flight emit one `EV_PENDING` each, making
 ``attempts == #resolved + #pending`` exact on runs without mid-flight
 deaths (a death voids its thief's in-flight attempt — the DEATH event
@@ -66,13 +69,13 @@ bit-for-bit today's (asserted by the zero-overhead jaxpr test).
 from __future__ import annotations
 
 import dataclasses
-import json
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import jsonio
 from . import latency
 from . import stealing
 
@@ -104,8 +107,16 @@ EV_FAMINE_ENTER = 8     # total stealable supply hit 0 (worker = -1)
 EV_FAMINE_EXIT = 9      # supply became nonzero again (worker = -1)
 EV_OVERFLOW = 10        # worker's deque rejected pushes this tick;
                         # rtt lane = number of records dropped
+# Open-loop traffic events (see `core/arrivals.py`): together they form the
+# per-task sojourn ledger — ARRIVAL stamps injection, SOJOURN stamps
+# completion with the priced sojourn in the rtt lane.
+EV_ARRIVAL = 11         # request injected at a ground station
+                        # (worker = station, hops = task_id, rtt = 0)
+EV_SOJOURN = 12         # request popped & served: rtt lane = sojourn ticks
+                        # (pop_tick - inject_tick + service cost),
+                        # victim = inject tick, hops = task_id
 
-NUM_KINDS = 11
+NUM_KINDS = 13
 KIND_NAMES = {
     EV_NO_LIVE_VICTIM: "no_live_victim",
     EV_EMPTY_VICTIM: "empty_victim",
@@ -118,6 +129,8 @@ KIND_NAMES = {
     EV_FAMINE_ENTER: "famine_enter",
     EV_FAMINE_EXIT: "famine_exit",
     EV_OVERFLOW: "overflow",
+    EV_ARRIVAL: "arrival",
+    EV_SOJOURN: "sojourn",
 }
 # attempt-kind events: one per steal attempt the thief resolved (or left
 # pending); NO_LIVE_VICTIM draws never departed, so they are *not* part of
@@ -386,8 +399,7 @@ def to_chrome_trace(trace: Trace, *, mesh_rows: int, mesh_cols: int,
 
 
 def write_chrome_trace(path: str, trace: Trace, **kw) -> None:
-    with open(path, "w") as f:
-        json.dump(to_chrome_trace(trace, **kw), f)
+    jsonio.write(path, to_chrome_trace(trace, **kw))
 
 
 # --------------------------------------------------------------------------- #
@@ -426,17 +438,41 @@ def attempt_latency_hist(trace: Trace, *, strategy, num_workers: int,
         counts, edges = np.zeros(bins, np.int64), np.linspace(0, 1, bins + 1)
         measured_mean = 0.0
     strat_name = getattr(strategy, "value", str(strategy))
+    # E[T] = RTT / p is exactly inf at p == 0 (the analytic model's honest
+    # answer) — but JSON has no Infinity, so the undefined case exports as
+    # null rather than the non-spec literal `json.dump` would emit.
+    finite = lambda x: float(x) if np.isfinite(x) else None
     return dict(
         strategy=strat_name, num_workers=num_workers, tau=float(tau),
         resolved_attempts=n, granted=granted, p_success=p,
         counts=counts.tolist(), edges=edges.tolist(),
         measured_mean_rtt=measured_mean, analytic_rtt=a_rtt,
-        measured_expected_time_to_task=float(
+        measured_expected_time_to_task=finite(
             latency.expected_time_to_task(measured_mean, p)),
-        analytic_expected_time_to_task=float(
+        analytic_expected_time_to_task=finite(
             latency.expected_time_to_task(a_rtt, p)))
 
 
 def write_attempt_latency_hist(path: str, trace: Trace, **kw) -> None:
-    with open(path, "w") as f:
-        json.dump(attempt_latency_hist(trace, **kw), f, indent=2)
+    jsonio.write(path, attempt_latency_hist(trace, **kw), indent=2)
+
+
+# --------------------------------------------------------------------------- #
+# Sojourn ledger (open-loop traffic; see `core/arrivals.py`)
+# --------------------------------------------------------------------------- #
+def sojourn_stats(trace: Trace) -> dict | None:
+    """Tail-latency percentiles of every completed request in the ring.
+
+    Each `EV_SOJOURN` event carries one request's sojourn (queue wait +
+    nominal service, in ticks) in the rtt lane. Returns nearest-rank
+    p50/p90/p99/p999 plus count/mean/max — the SLO quantities of the
+    load–latency study — or None when the ring holds no completions.
+    Percentiles are exact order statistics of the *recorded* events; size
+    the ring until `trace.dropped == 0` for exact run-level numbers."""
+    soj = np.sort(trace.of_kind(EV_SOJOURN)[:, LANE_RTT].astype(np.int64))
+    n = int(soj.size)
+    if n == 0:
+        return None
+    rank = lambda p: int(soj[max(int(np.ceil(p / 100.0 * n)), 1) - 1])
+    return dict(count=n, p50=rank(50), p90=rank(90), p99=rank(99),
+                p999=rank(99.9), mean=float(soj.mean()), max=int(soj[-1]))

@@ -1,0 +1,325 @@
+"""Open-loop arrival traffic: leap ≡ tick with arrivals on, the sojourn
+ledger, and the offered-load sweep contract.
+
+Pins the PR's acceptance gates: (a) with the arrival stream on — Poisson,
+bursty, Zipf hot-spot, and a rate-schedule flip landing inside a famine
+window — the event-leaping stepper stays bit-identical to the one-tick
+oracle, per-worker arrays and the trace ring compared elementwise;
+(b) `SimResult`'s sojourn percentiles equal a pure-numpy nearest-rank
+oracle over the EV_SOJOURN events, and every sojourn round-trips as
+pop_tick − inject_tick + cost against the matched EV_ARRIVAL record;
+(c) an offered-load sweep over `arrival_gap_q8` costs ZERO retraces and
+equals per-point `simulate()` calls; (d) famine windows clip at the next
+arrival-candidate tick (the leap still compresses iterations, without
+ever leaping over an injection); (e) arrivals into a full (or dead)
+station are counted dropped, never silently lost."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import arrivals, simulator, stealing, tasks, topology, tracing
+
+MESH = topology.MeshTopology.square(16)
+WL = tasks.FibWorkload(n=12, cutoff=6, max_leaf_cost=8)
+TRC = tracing.TraceConfig(ring_capacity=1 << 13)
+
+EQ_FIELDS = ("result", "ticks", "nodes", "attempts", "successes",
+             "busy_ticks", "steal_wait_ticks", "bytes_hops", "overflow",
+             "arrivals_injected", "arrivals_dropped", "requests_done",
+             "sojourn_sum_ticks")
+ARRAY_FIELDS = ("per_worker_busy", "per_worker_overflow",
+                "per_worker_stolen", "per_worker_hiwater",
+                "per_worker_attempts", "per_worker_successes")
+
+
+def _run(acfg, gap_q8, mode, *, batch=1, seed=3, max_ticks=1200,
+         strategy=stealing.Strategy.NEIGHBOR, capacity=1024, trace=TRC,
+         mesh=MESH, wl=WL, **kw):
+    cfg = simulator.SimConfig(seed=seed, strategy=strategy,
+                              step_mode=mode, capacity=capacity,
+                              arrival_gap_q8=gap_q8, arrival_batch=batch,
+                              max_ticks=max_ticks, trace=trace)
+    return simulator.simulate(wl, mesh, cfg, arrivals=acfg, **kw)
+
+
+def _assert_pair_equal(a, b, ctx=""):
+    for f in EQ_FIELDS:
+        assert getattr(a, f) == getattr(b, f), (
+            f"{ctx} {f}: tick={getattr(a, f)} leap={getattr(b, f)}")
+    for f in ARRAY_FIELDS:
+        assert np.array_equal(getattr(a, f), getattr(b, f)), (ctx, f)
+    if a.trace is not None:
+        for f in dataclasses.fields(a.trace):
+            va, vb = getattr(a.trace, f.name), getattr(b.trace, f.name)
+            if isinstance(va, np.ndarray):
+                assert np.array_equal(va, vb), (ctx, "trace." + f.name)
+            else:
+                assert va == vb, (ctx, "trace." + f.name)
+
+
+# --------------------------------------------------------------------------- #
+# Leap ≡ tick with the stream on
+# --------------------------------------------------------------------------- #
+
+ARRIVAL_SCENARIOS = {
+    # plain Poisson onto every worker
+    "poisson": (arrivals.ArrivalConfig(task_cost=7), 5 * 256, dict()),
+    # on/off bursts onto 6 stations (long off phases = famine pressure)
+    "bursty": (arrivals.ArrivalConfig(task_cost=5, num_stations=6,
+                                      on_ticks=40, off_ticks=160),
+               2 * 256, dict()),
+    # heavy Zipf hot spot, max batch — stresses the drop/overflow path
+    "zipf_hot": (arrivals.ArrivalConfig(task_cost=9, num_stations=2,
+                                        zipf_s=2.0), 256, dict(batch=8)),
+    # sparse stream whose rate schedule flips INSIDE famine windows
+    "rate_flip_midfamine": (
+        arrivals.ArrivalConfig(task_cost=5, num_stations=3, zipf_s=1.5,
+                               rate_starts=(0, 400, 800),
+                               rate_scale=(1.0, 0.05, 1.0)),
+        30 * 256, dict(seed=5)),
+}
+
+
+@pytest.mark.parametrize("scenario", list(ARRIVAL_SCENARIOS))
+def test_leap_equals_tick_with_arrivals(scenario):
+    """With the arrival stream on, the event-leaping stepper is
+    bit-identical to the tick oracle — scalar stats, per-worker arrays,
+    and the trace ring elementwise."""
+    acfg, gap, kw = ARRIVAL_SCENARIOS[scenario]
+    a = _run(acfg, gap, "tick", **kw)
+    b = _run(acfg, gap, "leap", **kw)
+    _assert_pair_equal(a, b, scenario)
+    assert a.arrivals_injected > 0, scenario
+    assert b.events <= b.ticks + 1
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("strategy", [stealing.Strategy.NEIGHBOR,
+                                      stealing.Strategy.GLOBAL,
+                                      stealing.Strategy.ADAPTIVE])
+@pytest.mark.parametrize("scenario", list(ARRIVAL_SCENARIOS))
+def test_arrival_conformance_matrix(strategy, scenario):
+    """Acceptance: strategy × arrival-scenario conformance, the same way
+    the link-state PRs pinned their semantics."""
+    acfg, gap, kw = ARRIVAL_SCENARIOS[scenario]
+    kw = dict(kw, strategy=strategy, max_ticks=2500)
+    a = _run(acfg, gap, "tick", **kw)
+    b = _run(acfg, gap, "leap", **kw)
+    _assert_pair_equal(a, b, f"{strategy}/{scenario}")
+
+
+def test_tc_rollback_preserves_arrival_cursor():
+    """Checkpoint/rollback recovery with the stream on: the arrival
+    cursor and counters are external input, excluded from rollback (a
+    restored stale cursor would stall the stream forever) — leap ≡ tick
+    pins the semantics under mid-run failures."""
+    mesh = topology.MeshTopology.square(9)
+    wl = tasks.FibWorkload(n=14, cutoff=7, max_leaf_cost=8)
+    acfg = arrivals.ArrivalConfig(task_cost=6, num_stations=3)
+    ft = -np.ones(9, np.int32)
+    ft[2], ft[5] = 70, 150
+    out = {}
+    for mode in ("tick", "leap"):
+        cfg = simulator.SimConfig(
+            seed=2, strategy=stealing.Strategy.NEIGHBOR, step_mode=mode,
+            arrival_gap_q8=4 * 256, max_ticks=1000,
+            recovery=simulator.Recovery.TC, ckpt_interval=30, trace=TRC)
+        out[mode] = simulator.simulate(wl, mesh, cfg, arrivals=acfg,
+                                       fail_time=ft)
+    _assert_pair_equal(out["tick"], out["leap"], "tc_rollback")
+    assert out["tick"].arrivals_injected > 0
+    assert out["tick"].ckpt_bytes > 0
+
+
+def test_famine_clips_at_next_arrival():
+    """A long-gap stream over an otherwise-drained system: the famine fast
+    path must clip every certified window at the next candidate tick —
+    the leap still compresses iterations massively, yet never leaps past
+    an injection (pinned by bit-equality + the event count)."""
+    acfg = arrivals.ArrivalConfig(task_cost=4, num_stations=1)
+    a = _run(acfg, 200 * 256, "tick", max_ticks=4000, seed=9)
+    b = _run(acfg, 200 * 256, "leap", max_ticks=4000, seed=9)
+    _assert_pair_equal(a, b, "famine_clip")
+    assert a.arrivals_injected >= 3      # several famine windows crossed
+    assert b.events < a.ticks // 4       # the fast path was actually active
+
+
+def test_drops_counted_not_lost_at_tiny_capacity():
+    """Arrivals into a full deque overflow; every accepted candidate is
+    accounted for as injected or dropped, identically in both modes."""
+    acfg = arrivals.ArrivalConfig(task_cost=16, num_stations=1)
+    a = _run(acfg, 256, "tick", batch=8, capacity=16, max_ticks=600)
+    b = _run(acfg, 256, "leap", batch=8, capacity=16, max_ticks=600)
+    _assert_pair_equal(a, b, "tiny_capacity")
+    assert a.arrivals_dropped > 0
+    # conservation: every done request was injected, minus those in flight
+    assert a.requests_done <= a.arrivals_injected
+
+
+def test_dead_station_arrivals_drop():
+    """A candidate accepted at a dead station is dropped (pushing onto a
+    dead deque would leak unreachable work into the liveness sum)."""
+    acfg = arrivals.ArrivalConfig(task_cost=4, num_stations=1)
+    # station_seed=0, num_stations=1 picks one worker; kill every worker
+    # at t=0 except worker 0 — then find the station and kill just it
+    w = int(np.argmax(arrivals.station_weights(acfg, MESH.num_workers)))
+    ft = -np.ones(MESH.num_workers, np.int32)
+    ft[w] = 1
+    a = _run(acfg, 2 * 256, "tick", max_ticks=400, fail_time=ft)
+    b = _run(acfg, 2 * 256, "leap", max_ticks=400, fail_time=ft)
+    _assert_pair_equal(a, b, "dead_station")
+    assert a.arrivals_dropped > 0
+    # nothing lands after the station died at t=1
+    assert a.arrivals_injected <= 1
+
+
+# --------------------------------------------------------------------------- #
+# Sojourn ledger vs pure-numpy oracle
+# --------------------------------------------------------------------------- #
+
+def test_sojourn_ledger_matches_numpy_oracle():
+    """Every EV_SOJOURN round-trips against its matched EV_ARRIVAL
+    (sojourn = pop_tick − inject_tick + cost), the ledger sum matches,
+    and `SimResult.sojourn` equals nearest-rank percentiles computed
+    independently in numpy."""
+    acfg = arrivals.ArrivalConfig(task_cost=7, num_stations=4, zipf_s=1.1)
+    r = _run(acfg, 4 * 256, "leap", batch=2, max_ticks=1500)
+    assert r.trace is not None and r.trace.dropped == 0
+    arr = r.trace.of_kind(tracing.EV_ARRIVAL)
+    soj = r.trace.of_kind(tracing.EV_SOJOURN)
+    assert arr.shape[0] == r.arrivals_injected
+    assert soj.shape[0] == r.requests_done
+    inject_by_id = {int(e[tracing.LANE_HOPS]): int(e[tracing.LANE_TICK])
+                    for e in arr}
+    assert len(inject_by_id) == arr.shape[0]  # task ids unique in-run
+    for e in soj:
+        tid = int(e[tracing.LANE_HOPS])
+        pop_t = int(e[tracing.LANE_TICK])
+        s = int(e[tracing.LANE_RTT])
+        assert tid in inject_by_id
+        assert s == pop_t - inject_by_id[tid] + int(acfg.task_cost), tid
+        assert int(e[tracing.LANE_VICTIM]) == inject_by_id[tid]
+    sojourns = np.sort(soj[:, tracing.LANE_RTT].astype(np.int64))
+    assert int(sojourns.sum()) == r.sojourn_sum_ticks
+    assert r.sojourn["count"] == len(sojourns)
+    for pct, key in ((50, "p50"), (90, "p90"), (99, "p99"), (99.9, "p999")):
+        rank = max(int(np.ceil(pct / 100 * len(sojourns))), 1) - 1
+        assert r.sojourn[key] == int(sojourns[rank]), key
+    assert r.sojourn["max"] == int(sojourns[-1])
+    assert r.sojourn["mean"] == pytest.approx(float(sojourns.mean()))
+    assert r.sojourn_mean == pytest.approx(r.sojourn_sum_ticks
+                                           / max(r.requests_done, 1))
+
+
+def test_arrival_stream_matches_host_replay():
+    """EV_ARRIVAL ticks and stations equal the pure-host candidate-stream
+    replay (`host_arrival_schedule`) — device stream and host oracle can
+    never disagree."""
+    acfg = arrivals.ArrivalConfig(task_cost=5, num_stations=3, zipf_s=1.0,
+                                  on_ticks=50, off_ticks=70)
+    gap = 3 * 256
+    seed = 13
+    r = _run(acfg, gap, "leap", seed=seed, max_ticks=900)
+    assert r.trace.dropped == 0
+    ar = arrivals.device_tables(acfg, MESH)
+    ticks, stations, acc = arrivals.host_arrival_schedule(
+        seed, gap, ar, int(r.ticks))
+    exp = [(int(t), int(s)) for t, s, a in zip(ticks, stations, acc) if a]
+    arr = r.trace.of_kind(tracing.EV_ARRIVAL)
+    got = [(int(e[tracing.LANE_TICK]), int(e[tracing.LANE_WORKER]))
+           for e in arr]
+    assert got == exp
+
+
+# --------------------------------------------------------------------------- #
+# Offered-load sweep: zero retraces, equals per-point runs
+# --------------------------------------------------------------------------- #
+
+def test_load_sweep_zero_retrace_and_matches_serial():
+    acfg = arrivals.ArrivalConfig(task_cost=5, num_stations=4)
+    base_cfg = simulator.SimConfig(seed=7, step_mode="leap", max_ticks=800,
+                                   arrival_batch=1)
+    scfg, p0 = base_cfg.split()
+    gaps = (256, 1024, 4096)
+    pts = [p0._replace(arrival_gap_q8=g) for g in gaps]
+    before = simulator.trace_count()
+    swept = simulator.simulate_sweep(WL, MESH, scfg, pts, arrivals=acfg)
+    assert simulator.trace_count() - before == 1
+    for g, r in zip(gaps, swept):
+        single = simulator.simulate(
+            WL, MESH, dataclasses.replace(base_cfg, arrival_gap_q8=g),
+            arrivals=acfg)
+        for f in EQ_FIELDS:
+            assert getattr(r, f) == getattr(single, f), (g, f)
+
+
+# --------------------------------------------------------------------------- #
+# Config plumbing + validation
+# --------------------------------------------------------------------------- #
+
+def test_gap_load_roundtrip():
+    for load in (0.01, 0.5, 1.0, 4.0):
+        for batch in (1, 4):
+            g = arrivals.gap_q8_for_load(load, batch)
+            assert arrivals.offered_load(g, batch) == pytest.approx(
+                load, rel=0.01)
+    with pytest.raises(ValueError):
+        arrivals.gap_q8_for_load(0.0)
+    assert arrivals.offered_load(0) == 0.0
+
+
+def test_validation_errors():
+    with pytest.raises(ValueError, match="arrival_gap_q8"):
+        simulator.simulate(WL, MESH,
+                           simulator.SimConfig(arrival_gap_q8=256))
+    with pytest.raises(ValueError, match="arrival_batch"):
+        simulator.simulate(
+            WL, MESH,
+            simulator.SimConfig(arrival_gap_q8=256, arrival_batch=99),
+            arrivals=arrivals.ArrivalConfig())
+    with pytest.raises(ValueError, match="on_ticks"):
+        arrivals.ArrivalConfig(off_ticks=5).validate()
+    with pytest.raises(ValueError, match="strictly increasing"):
+        arrivals.ArrivalConfig(rate_starts=(0, 10, 10),
+                               rate_scale=(1, 1, 1)).validate()
+    with pytest.raises(ValueError, match="begin at tick 0"):
+        arrivals.ArrivalConfig(rate_starts=(5,), rate_scale=(1,)).validate()
+    with pytest.raises(ValueError, match="equal length"):
+        arrivals.ArrivalConfig(rate_starts=(0,), rate_scale=()).validate()
+    with pytest.raises(ValueError, match=r"\[0, 1\]"):
+        arrivals.ArrivalConfig(rate_starts=(0,), rate_scale=(1.5,)).validate()
+
+
+def test_closed_system_unchanged():
+    """No arrivals kwarg, gap 0: identical behavior to the seed closed
+    system, with the new counters all zero and sojourn None."""
+    r = simulator.simulate(WL, MESH, simulator.SimConfig(seed=1))
+    assert r.arrivals_injected == 0 and r.arrivals_dropped == 0
+    assert r.requests_done == 0 and r.sojourn_sum_ticks == 0
+    assert r.sojourn is None and r.sojourn_mean == 0.0
+
+
+def test_station_weights_zipf_skew():
+    acfg = arrivals.ArrivalConfig(num_stations=4, zipf_s=2.0)
+    w = arrivals.station_weights(acfg, 16)
+    assert (w > 0).sum() == 4
+    nz = np.sort(w[w > 0])[::-1]
+    assert nz[0] >= 4 * nz[1]  # rank-1 station dominates at s=2
+    # deterministic in the seed
+    assert np.array_equal(w, arrivals.station_weights(acfg, 16))
+
+
+def test_traffic_schedule_is_valid_rate_schedule():
+    from repro.core import constellation
+    c = constellation.Constellation(constellation.ConstellationConfig(
+        planes=4, sats_per_plane=4, orbit_ticks=1000))
+    starts, scale = c.traffic_schedule(2500, peak=1.0, trough=0.2)
+    acfg = arrivals.ArrivalConfig(rate_starts=starts, rate_scale=scale)
+    acfg.validate()  # begins at 0, strictly increasing, scales in [0,1]
+    assert max(scale) == pytest.approx(1.0)
+    assert min(scale) >= 0.2 - 1e-9
+    # the diurnal swing actually swings within one orbit
+    one_orbit = [s for t, s in zip(starts, scale) if t < 1000]
+    assert max(one_orbit) > 2 * min(one_orbit)

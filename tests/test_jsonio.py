@@ -1,0 +1,168 @@
+"""Strict JSON artifacts: no NaN/Infinity ever leaves a writer.
+
+The bugfix's regression suite: `attempt_latency_hist` at p_success == 0
+(expected time-to-task is exactly inf) exports null, the crossover's
+analytic ratios go null instead of Infinity/NaN, every writer
+round-trips under `allow_nan=False` + a `parse_constant` rejector, an
+empty event ring exports cleanly, and `_median_iqr` on an empty grid
+cell raises an error that names the cell."""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import jsonio, simulator, stealing, tasks, topology, tracing
+
+
+# --------------------------------------------------------------------------- #
+# jsonio unit behavior
+# --------------------------------------------------------------------------- #
+
+def test_sanitize_maps_nonfinite_to_null():
+    doc = {"a": float("inf"), "b": float("-inf"), "c": float("nan"),
+           "d": 1.5, "e": [float("nan"), 2],
+           "f": {"g": np.float64("inf"), "h": np.int64(3)},
+           "i": np.array([1.0, np.inf]),
+           "j": (np.float32("nan"),)}
+    s = jsonio.dumps(doc)
+    back = json.loads(s)
+    assert back == {"a": None, "b": None, "c": None, "d": 1.5,
+                    "e": [None, 2], "f": {"g": None, "h": 3},
+                    "i": [1.0, None], "j": [None]}
+    assert "Infinity" not in s and "NaN" not in s
+
+
+def test_numpy_keys_and_scalars_unwrap():
+    doc = {np.int64(3): np.float32(1.5), np.bool_(True): "x"}
+    assert json.loads(jsonio.dumps(doc)) == {"3": 1.5, "true": "x"}
+
+
+def test_loads_strict_rejects_nonfinite_literals():
+    with pytest.raises(ValueError, match="Infinity"):
+        jsonio.loads_strict('{"a": Infinity}')
+    with pytest.raises(ValueError, match="NaN"):
+        jsonio.loads_strict('[NaN]')
+    assert jsonio.loads_strict('{"a": null}') == {"a": None}
+
+
+def test_write_load_roundtrip(tmp_path):
+    p = tmp_path / "doc.json"
+    jsonio.write(p, {"x": float("inf"), "y": [1, 2.5]}, indent=2)
+    assert jsonio.load_strict(p) == {"x": None, "y": [1, 2.5]}
+
+
+# --------------------------------------------------------------------------- #
+# p_success == 0 end-to-end
+# --------------------------------------------------------------------------- #
+
+def _empty_trace():
+    return tracing.Trace(events=np.zeros((0, tracing.NUM_LANES), np.int32),
+                         emitted=0, dropped=0, ring_capacity=16)
+
+
+def test_attempt_latency_hist_p0_exports_null(tmp_path):
+    """At p_success == 0 E[T] = RTT/p is exactly inf — the hist exports
+    null for both expected-time fields and the file stays spec-JSON."""
+    h = tracing.attempt_latency_hist(
+        _empty_trace(), strategy=stealing.Strategy.NEIGHBOR,
+        num_workers=9, tau=3)
+    assert h["p_success"] == 0.0
+    assert h["resolved_attempts"] == 0
+    assert h["measured_expected_time_to_task"] is None
+    assert h["analytic_expected_time_to_task"] is None
+    p = tmp_path / "hist.json"
+    tracing.write_attempt_latency_hist(
+        p, _empty_trace(), strategy=stealing.Strategy.NEIGHBOR,
+        num_workers=9, tau=3)
+    doc = jsonio.load_strict(p)
+    assert doc["analytic_expected_time_to_task"] is None
+    assert "Infinity" not in p.read_text()
+
+
+def test_attempt_latency_hist_p0_from_real_run(tmp_path):
+    """A single-leaf workload never grants a steal: the traced run's
+    histogram hits the p == 0 branch end-to-end through simulate()."""
+    wl = tasks.FibWorkload(n=4, cutoff=4, max_leaf_cost=4)
+    mesh = topology.MeshTopology.square(4)
+    cfg = simulator.SimConfig(
+        strategy=stealing.Strategy.NEIGHBOR, max_ticks=500,
+        trace=tracing.TraceConfig(ring_capacity=1 << 10))
+    r = simulator.simulate(wl, mesh, cfg)
+    assert r.successes == 0
+    h = tracing.attempt_latency_hist(r.trace, strategy=cfg.strategy,
+                                     num_workers=4, tau=cfg.hop_ticks)
+    assert h["p_success"] == 0.0
+    assert h["measured_expected_time_to_task"] is None
+    p = tmp_path / "hist.json"
+    tracing.write_attempt_latency_hist(p, r.trace, strategy=cfg.strategy,
+                                       num_workers=4, tau=cfg.hop_ticks)
+    jsonio.load_strict(p)  # must not raise
+
+
+def test_empty_ring_chrome_trace_roundtrips(tmp_path):
+    doc = tracing.to_chrome_trace(_empty_trace(), mesh_rows=3, mesh_cols=3)
+    p = tmp_path / "trace.json"
+    tracing.write_chrome_trace(p, _empty_trace(), mesh_rows=3, mesh_cols=3)
+    back = jsonio.load_strict(p)
+    assert isinstance(doc, (dict, list))
+    assert back is not None
+
+
+# --------------------------------------------------------------------------- #
+# Crossover: undefined ratios go null, empty cells get named
+# --------------------------------------------------------------------------- #
+
+def test_finite_ratio_guards():
+    from benchmarks.sweep import _finite_ratio
+    inf = float("inf")
+    assert _finite_ratio(inf, inf) is None      # analytic_ratio at p==0
+    assert _finite_ratio(1.0, inf) is None
+    assert _finite_ratio(inf, 1.0) is None
+    assert _finite_ratio(1.0, 0.0) is None      # pg/pn at pn==0
+    assert _finite_ratio(float("nan"), 1.0) is None
+    assert _finite_ratio(3.0, 2.0) == pytest.approx(1.5)
+
+
+def test_median_iqr_names_the_empty_cell():
+    from benchmarks.sweep import _median_iqr
+    with pytest.raises(ValueError,
+                       match=r"cell \(W=9, strategy=neighbor, tau=5\)"):
+        _median_iqr([], "cell (W=9, strategy=neighbor, tau=5)")
+    med, iqr = _median_iqr([1.0, 2.0, 3.0, 4.0])
+    assert med == pytest.approx(2.5)
+    assert iqr == pytest.approx(1.5)
+
+
+def test_crossover_p0_emits_spec_json(tmp_path):
+    """End-to-end: a crossover over a single-leaf workload (p_success == 0
+    everywhere) produces a BENCH_crossover.json with null ratios — never
+    the Infinity/NaN literals the old writer emitted."""
+    from benchmarks import sweep as bsweep
+    wl = tasks.FibWorkload(n=4, cutoff=4, max_leaf_cost=4)
+    doc = bsweep.crossover(sizes=(4,), taus=(2,), runs=2, workload=wl,
+                           max_ticks=5_000, rtt_hists=True,
+                           assert_single_compile=True)
+    assert doc["crossover"], "crossover rows expected"
+    for row in doc["crossover"]:
+        assert row["p_neighbor"] == 0.0 and row["p_global"] == 0.0
+        assert row["analytic_ratio"] is None
+        assert row["pg_over_pn"] is None
+    for h in doc["rtt"]:
+        assert h["p_success"] == 0.0
+        assert h["measured_expected_time_to_task"] is None
+    p = tmp_path / "BENCH_crossover.json"
+    jsonio.write(p, doc, indent=2)
+    back = jsonio.load_strict(p)
+    assert back["crossover"][0]["analytic_ratio"] is None
+    txt = p.read_text()
+    assert "Infinity" not in txt and "NaN" not in txt
+
+
+def test_plot_crossover_skips_null_analytic(tmp_path):
+    """The plotter tolerates null analytic ratios (matplotlib optional)."""
+    from benchmarks.sweep import plot_crossover
+    doc = {"taus": [2], "sizes": [4], "rtt": [],
+           "crossover": [dict(N=4, tau=2, ratio_neighbor_over_global=1.0,
+                              iqr_ratio=0.0, analytic_ratio=None)]}
+    plot_crossover(doc, str(tmp_path / "x.png"))  # must not raise
